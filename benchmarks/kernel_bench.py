@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks (CPU interpret mode: correctness + structural
+cost; wall-times are NOT TPU numbers and are reported only for relative
+comparison of schedule shapes)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import timing
+from repro.kernels import ref
+from repro.kernels.arrayflex_gemm import arrayflex_gemm
+
+
+def _time(fn, *args, iters=3):
+    fn(*args).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    out.block_until_ready()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def gemm_collapse_sweep():
+    """ArrayFlex GEMM at each collapse depth + the planner's pick."""
+    rows = []
+    M, K, N = 256, 1024, 256
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    want = np.float32(ref.gemm_ref(x, w))
+    for k in (1, 2, 4):
+        f = jax.jit(lambda a, b, kk=k: arrayflex_gemm(a, b, bk=128,
+                                                      k_collapse=kk))
+        us = _time(f, x, w)
+        got = np.float32(f(x, w))
+        err = float(np.max(np.abs(got - want)))
+        cycles = timing.total_cycles(N, K, M, 128, 128, k)
+        t_model = timing.t_abs_ps(N, K, M, 128, 128, k) / 1e6
+        rows.append({"bench": "gemm_collapse", "k": k,
+                     "us_per_call_interpret": round(us, 1),
+                     "max_abs_err": f"{err:.1e}",
+                     "model_cycles": cycles,
+                     "model_time_us": round(t_model, 3)})
+    kbest = timing.best_k(N, K, M, 128, 128)
+    return rows, f"planner best_k={kbest} (model-time argmin)"

@@ -1,0 +1,126 @@
+"""Reproductions of the paper's figures as benchmark functions.
+
+Each returns (rows, derived) where rows are CSV-able dicts and derived is a
+headline scalar matched against the paper's claim.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.core import cnn_shapes, planner, power, timing
+from repro.core.timing import TimingParams
+
+
+def fig5_layer_tradeoff():
+    """Fig. 5: exec time of ResNet-34 layers 20/28 vs collapse depth k on a
+    132x132 SA (k in 1..4, linear clock model so k=3 is defined)."""
+    tp = dataclasses.replace(timing.DEFAULT_TIMING, mode="linear",
+                             supported_k=(1, 2, 3, 4))
+    rows = []
+    layers = {"layer20": (256, 2304, 196), "layer28": (512, 2304, 49)}
+    best = {}
+    for name, (M, N, T) in layers.items():
+        conv = timing.t_abs_conventional_ps(M, N, T, 132, 132, tp) / 1e6
+        times = {}
+        for k in (1, 2, 3, 4):
+            t = timing.t_abs_ps(M, N, T, 132, 132, k, tp) / 1e6
+            times[k] = t
+            rows.append({"bench": "fig5", "layer": name, "k": k,
+                         "time_us": round(t, 3),
+                         "conventional_us": round(conv, 3)})
+        best[name] = min(times, key=times.get)
+    # paper: layer 20 minimized at k=2..3; layer 28 at k=4
+    derived = (f"best_k layer20={best['layer20']} (paper:2) "
+               f"layer28={best['layer28']} (paper:4)")
+    assert best["layer20"] in (2, 3) and best["layer28"] == 4
+    return rows, derived
+
+
+def fig7_convnext_per_layer():
+    """Fig. 7: per-layer exec time of ConvNeXt on 128x128 SAs, ArrayFlex vs
+    conventional; early layers prefer k=1, late layers k=4."""
+    rows = []
+    gemms = [planner.GEMM(f"L{i}", *mnt)
+             for i, mnt in enumerate(cnn_shapes.network_mnt("convnext"))]
+    plans = [planner.plan_gemm(g, 128, 128) for g in gemms]
+    for i, p in enumerate(plans):
+        rows.append({"bench": "fig7", "layer": i, "k": p.k,
+                     "arrayflex_us": round(p.t_abs_ps / 1e6, 3),
+                     "conventional_us": round(p.t_conventional_ps / 1e6, 3),
+                     "saving_pct": round(100 * p.saving, 2)})
+    ks = [p.k for p in plans]
+    total_save = 1.0 - (sum(p.t_abs_ps for p in plans)
+                        / sum(p.t_conventional_ps for p in plans))
+    derived = (f"total_saving={total_save*100:.1f}% (paper:11%), "
+               f"k1_layers={ks.count(1)} k2={ks.count(2)} k4={ks.count(4)}")
+    return rows, derived
+
+
+def fig8_total_exec_time():
+    """Fig. 8: normalized full-run exec time for 3 CNNs x {128^2, 256^2}."""
+    rows = []
+    savings = []
+    for R in (128, 256):
+        for net in ("resnet34", "mobilenet", "convnext"):
+            gemms = [planner.GEMM(f"l{i}", *mnt)
+                     for i, mnt in enumerate(cnn_shapes.network_mnt(net))]
+            res = planner.plan_network(gemms, R, R)
+            savings.append(res["latency_saving"])
+            rows.append({"bench": "fig8", "net": net, "sa": f"{R}x{R}",
+                         "normalized_time":
+                             round(1.0 - res["latency_saving"], 4),
+                         "saving_pct":
+                             round(100 * res["latency_saving"], 2)})
+    derived = (f"savings {min(savings)*100:.1f}%-{max(savings)*100:.1f}% "
+               f"(paper: 9%-11%)")
+    return rows, derived
+
+
+def fig9_power_edp():
+    """Fig. 9: full-run average power + EDP gain vs the conventional SA."""
+    rows = []
+    pws, edps = [], []
+    for R in (128, 256):
+        for net in ("resnet34", "mobilenet", "convnext"):
+            gemms = [planner.GEMM(f"l{i}", *mnt)
+                     for i, mnt in enumerate(cnn_shapes.network_mnt(net))]
+            res = planner.plan_network(gemms, R, R)
+            pws.append(res["power_saving"])
+            edps.append(res["edp_gain"])
+            rows.append({"bench": "fig9", "net": net, "sa": f"{R}x{R}",
+                         "power_saving_pct":
+                             round(100 * res["power_saving"], 2),
+                         "edp_gain": round(res["edp_gain"], 3)})
+    derived = (f"power saving {min(pws)*100:.0f}%-{max(pws)*100:.0f}% "
+               f"(paper: 13%-23%), EDP {min(edps):.2f}x-{max(edps):.2f}x "
+               f"(paper: 1.4x-1.8x)")
+    return rows, derived
+
+
+def beyond_llm_plans():
+    """Beyond-paper: ArrayFlex per-GEMM planning over the 10 assigned LM
+    architectures.  Key finding: training GEMMs stream T~1M rows, so Eq.(7)
+    drives k_hat -> 1 and the configurable design's k=1 clock penalty makes
+    ArrayFlex a net LOSS for training — but single-token decode (T=batch)
+    is exactly the small-T regime the paper targets, and there shallow
+    pipelining wins on every architecture."""
+    from repro.configs import ARCHS, SHAPES
+    rows = []
+    save = {"train_4k": [], "decode_32k": []}
+    for shape_name in ("train_4k", "decode_32k"):
+        for name, cfg in sorted(ARCHS.items()):
+            res = planner.plan_model(cfg, SHAPES[shape_name])
+            save[shape_name].append(res["latency_saving"])
+            rows.append({"bench": "llm_plan", "arch": name,
+                         "shape": shape_name,
+                         "latency_saving_pct":
+                             round(100 * res["latency_saving"], 2),
+                         "power_saving_pct":
+                             round(100 * res["power_saving"], 2),
+                         "edp_gain": round(res["edp_gain"], 3)})
+    mt = 100 * sum(save["train_4k"]) / 10
+    md = 100 * sum(save["decode_32k"]) / 10
+    return rows, (f"mean latency saving: train {mt:.1f}% (k=1 penalty) "
+                  f"vs decode {md:.1f}% — ArrayFlex pays in the small-T "
+                  f"serving regime")

@@ -1,0 +1,65 @@
+"""Roofline table benchmark: reads the dry-run sweep results and emits the
+per-(arch x shape) three-term roofline rows (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def load_cells(mesh="1pod"):
+    rows = []
+    if not os.path.isdir(RESULTS):
+        return rows
+    for f in sorted(os.listdir(RESULTS)):
+        if not f.endswith(f"_{mesh}.json"):
+            continue
+        try:
+            r = json.load(open(os.path.join(RESULTS, f)))
+        except Exception:
+            continue
+        rows.append(r)
+    return rows
+
+
+def roofline_rows():
+    rows = []
+    worst = None
+    for r in load_cells("1pod"):
+        if r.get("status") != "ok":
+            continue
+        roof = r["roofline"]
+        rows.append({
+            "bench": "roofline", "arch": r["arch"], "shape": r["shape"],
+            "compute_s": f"{roof['compute_s']:.4g}",
+            "memory_s": f"{roof['memory_s']:.4g}",
+            "collective_s": f"{roof['collective_s']:.4g}",
+            "dominant": roof["dominant"],
+            "useful_flops_ratio": round(roof["useful_flops_ratio"], 4),
+            "mem_gib_per_dev": r["memory"]["per_device_gib"],
+            "fits": r["memory"]["fits_16g_hbm"],
+        })
+        if worst is None or roof["useful_flops_ratio"] < worst[1]:
+            worst = (f"{r['arch']}/{r['shape']}",
+                     roof["useful_flops_ratio"])
+    derived = (f"{len(rows)} cells; worst useful-flops cell: "
+               f"{worst[0]} ({worst[1]:.3f})" if rows else "no sweep results")
+    return rows, derived
+
+
+def dryrun_status_rows():
+    rows = []
+    n_ok = n_fit = 0
+    for mesh in ("1pod", "2pod"):
+        for r in load_cells(mesh):
+            ok = r.get("status") == "ok"
+            n_ok += ok
+            fit = ok and r["memory"]["fits_16g_hbm"]
+            n_fit += bool(fit)
+            rows.append({"bench": "dryrun", "arch": r["arch"],
+                         "shape": r["shape"], "mesh": mesh,
+                         "status": r.get("status"),
+                         "compile_s": r.get("compile_s", ""),
+                         "fits": fit if ok else ""})
+    return rows, f"{n_ok} compiled cells, {n_fit} fit 16GiB HBM"

@@ -1,0 +1,49 @@
+"""Benchmark driver: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus per-bench detail CSVs to
+results/bench/).  CPU wall-times are structural only; the paper-figure
+benches report model-time quantities (cycles x clock), which are
+hardware-calibrated.
+"""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+
+def _run(name, fn, out_dir):
+    t0 = time.perf_counter()
+    rows, derived = fn()
+    us = (time.perf_counter() - t0) * 1e6
+    if rows:
+        path = os.path.join(out_dir, f"{name}.csv")
+        with open(path, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    print(f"{name},{us:.0f},{derived}")
+    return rows, derived
+
+
+def main() -> None:
+    from benchmarks import (paper_figs, kernel_bench, roofline_table,
+                            sa_utilization)
+    out_dir = "results/bench"
+    os.makedirs(out_dir, exist_ok=True)
+    print("name,us_per_call,derived")
+    _run("fig5_layer_tradeoff", paper_figs.fig5_layer_tradeoff, out_dir)
+    _run("fig7_convnext_per_layer", paper_figs.fig7_convnext_per_layer,
+         out_dir)
+    _run("fig8_total_exec_time", paper_figs.fig8_total_exec_time, out_dir)
+    _run("fig9_power_edp", paper_figs.fig9_power_edp, out_dir)
+    _run("llm_plans_beyond_paper", paper_figs.beyond_llm_plans, out_dir)
+    _run("gemm_collapse_sweep", kernel_bench.gemm_collapse_sweep, out_dir)
+    _run("sa_occupancy", sa_utilization.occupancy, out_dir)
+    _run("cluster_pipeline_plan", sa_utilization.cluster_pipeline, out_dir)
+    _run("roofline_table", roofline_table.roofline_rows, out_dir)
+    _run("dryrun_status", roofline_table.dryrun_status_rows, out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Fault-tolerant training demo: the FaultToleranceManager drives a train
+loop through an injected node failure; training resumes from the last async
+checkpoint and reaches the target step with no lost or duplicated batches
+(the data pipeline is a pure function of the step index).
+
+Run:  PYTHONPATH=src python examples/fault_tolerant_training.py
+"""
+import shutil
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import ARCHS, reduced
+from repro.data import DataConfig, SyntheticLM
+from repro.models import api, lm
+from repro.optim import OptConfig, adamw_init
+from repro.runtime import FaultToleranceManager, HeartbeatMonitor
+
+
+def main():
+    shutil.rmtree("results/ckpt_ft_example", ignore_errors=True)
+    cfg = reduced(ARCHS["qwen2-0.5b"])
+    oc = OptConfig(total_steps=60)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    opt = adamw_init(params, oc)
+    dc = DataConfig(seq_len=64, global_batch=4, vocab_size=cfg.vocab_size)
+    src = SyntheticLM(dc)
+    train_step = jax.jit(api.make_train_step(cfg, oc))
+
+    state = {"params": params, "opt": opt}
+
+    def step_fn(st, batch):
+        batch = {k: jnp.asarray(v) for k, v in batch.items()}
+        p, o, m = train_step(st["params"], st["opt"], batch)
+        step_fn.last_loss = float(m["loss"])
+        return {"params": p, "opt": o}
+
+    crashed = {"done": False}
+
+    def inject(step):
+        if step == 25 and not crashed["done"]:
+            crashed["done"] = True
+            print(f"  !! injected node failure at step {step}")
+            raise RuntimeError("simulated hardware failure")
+
+    mgr = CheckpointManager("results/ckpt_ft_example", keep=3)
+    ft = FaultToleranceManager(mgr, HeartbeatMonitor(1), ckpt_every=10)
+    state, steps, restarts = ft.run(state, step_fn, src, 40,
+                                    inject_failure=inject)
+    print(f"reached step {steps} with {restarts} restart(s); "
+          f"final loss {step_fn.last_loss:.4f}")
+    assert steps == 40 and restarts == 1
+    print("example complete")
+
+
+if __name__ == "__main__":
+    main()

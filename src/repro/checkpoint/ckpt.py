@@ -1,0 +1,126 @@
+"""Checkpointing: async, atomic, keep-N, resume.
+
+Pytrees are flattened to path-keyed arrays in one .npz per (step, host).
+Writes go to a temp name then rename (atomic on POSIX) and a manifest.json
+records the latest durable step — a half-written checkpoint is never
+visible.  ``save_async`` snapshots to host memory synchronously (cheap) and
+writes on a background thread so the train loop never blocks on disk; this
+is the restart story for the fault-tolerance manager (runtime.fault).
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import threading
+import time
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                       for p in path)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save_pytree(tree, path: str):
+    arrays = _flatten(tree)
+    tmp = path + ".tmp.npz"
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+
+
+def load_pytree(template, path: str):
+    """Restore arrays into the structure of `template`."""
+    data = np.load(path)
+    leaves, treedef = jax.tree_util.tree_flatten(template)
+    flat = jax.tree_util.tree_flatten_with_path(template)[0]
+    out = []
+    for (p, leaf) in flat:
+        key = "/".join(str(getattr(q, "key", getattr(q, "idx", q)))
+                       for q in p)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        if arr.dtype.kind == "V":      # ml_dtypes (bf16/f8) round-trip raw
+            arr = arr.view(np.dtype(leaf.dtype))
+        out.append(arr.astype(leaf.dtype))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, host_index: int = 0):
+        self.dir = directory
+        self.keep = keep
+        self.host = host_index
+        os.makedirs(directory, exist_ok=True)
+        self._thread: threading.Thread | None = None
+
+    # -------------------------------------------------- paths & manifest
+    def _path(self, step: int) -> str:
+        return os.path.join(self.dir, f"ckpt_{step:08d}_h{self.host}.npz")
+
+    def _manifest(self) -> str:
+        return os.path.join(self.dir, f"manifest_h{self.host}.json")
+
+    def latest_step(self):
+        try:
+            return json.load(open(self._manifest()))["step"]
+        except Exception:
+            steps = self.all_steps()
+            return steps[-1] if steps else None
+
+    def all_steps(self):
+        pat = re.compile(rf"ckpt_(\d+)_h{self.host}\.npz$")
+        steps = sorted(int(m.group(1)) for f in os.listdir(self.dir)
+                       if (m := pat.match(f)))
+        return steps
+
+    # -------------------------------------------------- save / restore
+    def save(self, step: int, tree):
+        save_pytree(tree, self._path(step))
+        with open(self._manifest() + ".tmp", "w") as f:
+            json.dump({"step": step, "time": time.time()}, f)
+        os.replace(self._manifest() + ".tmp", self._manifest())
+        self._gc()
+
+    def save_async(self, step: int, tree):
+        """Snapshot to host memory now; write in the background."""
+        self.wait()
+        snapshot = _flatten(tree)         # device->host copy happens here
+
+        def _write():
+            tmp = self._path(step) + ".tmp.npz"
+            np.savez(tmp, **snapshot)
+            os.replace(tmp, self._path(step))
+            with open(self._manifest() + ".tmp", "w") as f:
+                json.dump({"step": step, "time": time.time()}, f)
+            os.replace(self._manifest() + ".tmp", self._manifest())
+            self._gc()
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def restore(self, template, step=None):
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            return None, None
+        return load_pytree(template, self._path(step)), step
+
+    def _gc(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            try:
+                os.remove(self._path(s))
+            except OSError:
+                pass

@@ -1,0 +1,67 @@
+"""ArrayFlex-at-cluster-scale: pipeline-depth planning with Eq.(6)/(7).
+
+Beyond-paper extension (DESIGN.md §Beyond): the paper's tradeoff — merge
+pipeline stages to cut cycle count at the cost of a slower clock — recurs
+one level up in pipeline-parallel training across pods:
+
+  collapse k pods into one pipeline stage
+    -> fewer stages  P(k) = P/k          (shorter fill/drain "skew"),
+    -> slower "clock" per stage: stage time grows with the per-stage layer
+       count, exactly T_clock(k) = d_base + k*d_inc with
+       d_base = per-microbatch dispatch/collective overhead and
+       d_inc  = per-pod layer compute time.
+
+GPipe latency for M microbatches on P/k stages:
+  T = (M + P/k - 1) * T_stage(k)   — isomorphic to Eq.(6) with T<-M, R,C<-P.
+Setting dT/dk = 0 reproduces Eq.(7) with the same structure; the discrete
+argmin below picks the deployed stage count.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class PipelineCost:
+    n_pods: int                 # P: pods available (max pipeline stages)
+    microbatches: int           # M: per-step microbatches
+    layer_time_ms: float        # per-pod layer-block compute time
+    overhead_ms: float          # per-microbatch stage overhead (dispatch+p2p)
+
+
+def stage_time_ms(c: PipelineCost, k: int) -> float:
+    """T_clock analogue: time of one collapsed stage (k pods' layers)."""
+    return c.overhead_ms + k * c.layer_time_ms
+
+
+def pipeline_latency_ms(c: PipelineCost, k: int) -> float:
+    """Eq.(6) analogue: (M + P/k - 1) * T_stage(k)."""
+    stages = max(1, c.n_pods // k)
+    return (c.microbatches + stages - 1) * stage_time_ms(c, k)
+
+
+def k_hat(c: PipelineCost) -> float:
+    """Eq.(7) analogue (continuous optimum)."""
+    if c.microbatches <= 1:
+        return float(c.n_pods)
+    return math.sqrt(c.n_pods * c.overhead_ms
+                     / ((c.microbatches - 1) * c.layer_time_ms))
+
+
+def best_collapse(c: PipelineCost) -> int:
+    ks = [k for k in range(1, c.n_pods + 1) if c.n_pods % k == 0]
+    return min(ks, key=lambda k: pipeline_latency_ms(c, k))
+
+
+def plan(c: PipelineCost) -> dict:
+    k = best_collapse(c)
+    base = pipeline_latency_ms(c, 1)
+    bestt = pipeline_latency_ms(c, k)
+    return {
+        "k": k, "k_hat": k_hat(c), "stages": c.n_pods // k,
+        "latency_ms": bestt, "latency_ms_k1": base,
+        "saving": 1.0 - bestt / base,
+        "bubble_fraction": (c.n_pods // k - 1)
+        / (c.microbatches + c.n_pods // k - 1),
+    }

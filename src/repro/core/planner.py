@@ -1,0 +1,195 @@
+"""ArrayFlex planner: per-layer pipeline-depth selection + framework hooks.
+
+Three planning surfaces:
+
+1. ``plan_network``    — the paper's use-case: per-CNN-layer optimal k
+                         (latency, power, EDP vs a conventional SA).
+2. ``model_gemms``     — walks a transformer ModelConfig x ShapeConfig into
+                         its (M, N, T) GEMM list so the same planner drives
+                         LLM workloads (beyond-paper generalization).
+3. ``attention_plan``  — maps the paper's cycles-vs-clock tradeoff onto the
+                         KV-chunk size of the sequence-sharded attention and
+                         the K-block collapse of the Pallas GEMM kernel:
+                         steps = T/kc (fewer with bigger chunks) while
+                         per-step cost grows affinely with kc — literally
+                         Eq.(3) x Eq.(5) with (kc/base) playing k.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig, SSMConfig
+from repro.core import timing
+from repro.core.timing import TimingParams, DEFAULT_TIMING
+from repro.core import power as power_lib
+
+
+@dataclass(frozen=True)
+class GEMM:
+    name: str
+    M: int
+    N: int
+    T: int
+    count: int = 1        # how many times this GEMM runs (e.g. layers)
+
+
+@dataclass
+class LayerPlan:
+    gemm: GEMM
+    k: int
+    k_hat: float
+    cycles: int
+    clock_ghz: float
+    t_abs_ps: float
+    t_conventional_ps: float
+
+    @property
+    def saving(self) -> float:
+        return 1.0 - self.t_abs_ps / self.t_conventional_ps
+
+
+def plan_gemm(g: GEMM, R: int, C: int,
+              tp: TimingParams = DEFAULT_TIMING) -> LayerPlan:
+    k = timing.best_k(g.M, g.N, g.T, R, C, tp)
+    return LayerPlan(
+        gemm=g, k=k, k_hat=timing.k_hat(R, C, g.T, tp),
+        cycles=timing.total_cycles(g.M, g.N, g.T, R, C, k),
+        clock_ghz=tp.clock_ghz(k),
+        t_abs_ps=timing.t_abs_ps(g.M, g.N, g.T, R, C, k, tp) * g.count,
+        t_conventional_ps=timing.t_abs_conventional_ps(
+            g.M, g.N, g.T, R, C, tp) * g.count,
+    )
+
+
+def plan_network(gemms: List[GEMM], R: int, C: int,
+                 tp: TimingParams = DEFAULT_TIMING,
+                 pp=None) -> dict:
+    pp = pp or power_lib.DEFAULT_POWER
+    plans = [plan_gemm(g, R, C, tp) for g in gemms]
+    t_af = sum(p.t_abs_ps for p in plans)
+    t_cv = sum(p.t_conventional_ps for p in plans)
+    e_af = sum(power_lib.power_arrayflex(p.k, tp, pp) * p.t_abs_ps
+               for p in plans)
+    e_cv = power_lib.power_conventional(tp, pp) * t_cv
+    p_af, p_cv = e_af / t_af, e_cv / t_cv
+    return {
+        "plans": plans,
+        "time_arrayflex_ps": t_af, "time_conventional_ps": t_cv,
+        "latency_saving": 1.0 - t_af / t_cv,
+        "avg_power_arrayflex": p_af, "avg_power_conventional": p_cv,
+        "power_saving": 1.0 - p_af / p_cv,
+        "edp_gain": (p_cv * t_cv ** 2) / (p_af * t_af ** 2),
+    }
+
+
+# ---------------------------------------------------------------------------
+# transformer GEMM walker
+
+def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
+    """Every GEMM one step of this (model, shape) cell executes.
+
+    T is the streamed dimension (tokens), N the contraction, M the output.
+    Attention score/PV products fold batch*heads into the tile count via
+    ``count`` (the SA processes them back to back).
+    """
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    toks = shape.global_batch if shape.kind == "decode" else shape.tokens
+    S_ctx = (min(shape.seq_len, cfg.sliding_window or shape.seq_len)
+             if shape.kind == "decode" else shape.seq_len)
+    out: List[GEMM] = []
+    n_attn = n_mamba = n_moe = n_dense = n_cross = 0
+    for i in range(cfg.n_layers):
+        if cfg.is_attn_layer(i):
+            n_attn += 1
+        else:
+            n_mamba += 1
+        if cfg.is_moe_layer(i):
+            n_moe += 1
+        elif cfg.d_ff:
+            n_dense += 1
+        if cfg.is_cross_attn_layer(i) or cfg.family == "audio":
+            n_cross += 1
+    if n_attn:
+        out += [
+            GEMM("attn.wq", H * hd, d, toks, n_attn),
+            GEMM("attn.wk", KV * hd, d, toks, n_attn),
+            GEMM("attn.wv", KV * hd, d, toks, n_attn),
+            GEMM("attn.wo", d, H * hd, toks, n_attn),
+            # scores & PV: per (batch, head): A[T=S_q, N=hd] x B[hd, S_kv]
+            GEMM("attn.qk", S_ctx, hd,
+                 1 if shape.kind == "decode" else shape.seq_len,
+                 n_attn * shape.global_batch * H),
+            GEMM("attn.pv", hd, S_ctx,
+                 1 if shape.kind == "decode" else shape.seq_len,
+                 n_attn * shape.global_batch * H),
+        ]
+    if n_mamba:
+        ssm = cfg.ssm or SSMConfig()
+        d_in = cfg.d_inner
+        bc = 2 * ssm.n_groups * ssm.d_state
+        out += [
+            GEMM("mamba.z", d_in, d, toks, n_mamba),
+            GEMM("mamba.xbc", d_in + bc, d, toks, n_mamba),
+            GEMM("mamba.dt", cfg.ssm_heads, d, toks, n_mamba),
+            GEMM("mamba.out", d, d_in, toks, n_mamba),
+        ]
+    if n_dense:
+        out += [
+            GEMM("mlp.wi_gate", cfg.d_ff, d, toks, n_dense),
+            GEMM("mlp.wi_up", cfg.d_ff, d, toks, n_dense),
+            GEMM("mlp.wo", d, cfg.d_ff, toks, n_dense),
+        ]
+    if n_moe and cfg.moe:
+        m = cfg.moe
+        eff = m.expert_d_ff or cfg.d_ff
+        cap_toks = int(toks * m.top_k * m.capacity_factor / m.num_experts)
+        cap_toks = max(cap_toks, 1)
+        out += [
+            GEMM("moe.router", m.num_experts, d, toks, n_moe),
+            GEMM("moe.wi_gate", eff, d, cap_toks, n_moe * m.num_experts),
+            GEMM("moe.wi_up", eff, d, cap_toks, n_moe * m.num_experts),
+            GEMM("moe.wo", d, eff, cap_toks, n_moe * m.num_experts),
+        ]
+    if n_cross:
+        xl = (cfg.n_image_tokens if cfg.family == "vlm"
+              else cfg.max_source_positions)
+        out += [
+            GEMM("xattn.wq", H * hd, d, toks, n_cross),
+            GEMM("xattn.kv", 2 * KV * hd, d,
+                 xl * shape.global_batch, n_cross),
+            GEMM("xattn.wo", d, H * hd, toks, n_cross),
+        ]
+    out.append(GEMM("unembed", cfg.padded_vocab, d,
+                    shape.global_batch if shape.kind == "decode"
+                    else shape.tokens, 1))
+    return out
+
+
+def plan_model(cfg: ModelConfig, shape: ShapeConfig, R: int = 128,
+               C: int = 128, tp: TimingParams = DEFAULT_TIMING) -> dict:
+    return plan_network(model_gemms(cfg, shape), R, C, tp)
+
+
+# ---------------------------------------------------------------------------
+# attention-chunk planning (the kv-scan analogue of pipeline collapse)
+
+def attention_plan(seq_len: int, kv_len: int,
+                   choices=(256, 512, 1024, 2048, 4096),
+                   step_overhead: float = 1.0, per_elem: float = 1.0 / 1024):
+    """Pick the KV chunk size: minimize steps * (overhead + work-per-step),
+    the Eq.(6) structure with kc as the collapse factor.  Costs are in
+    arbitrary units; overhead models the per-step fixed latency (dispatch,
+    pipeline fill) exactly like the d_base term of Eq.(5)."""
+    best, best_cost = None, float("inf")
+    for kc in choices:
+        if kv_len % kc and kv_len > kc:
+            continue
+        kc_eff = min(kc, kv_len)
+        steps = math.ceil(kv_len / kc_eff)
+        cost = steps * (step_overhead + per_elem * kc_eff * seq_len)
+        if cost < best_cost:
+            best, best_cost = kc_eff, cost
+    return best or min(choices)

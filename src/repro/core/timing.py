@@ -1,0 +1,97 @@
+"""ArrayFlex latency & clock models — Eqs. (1)-(7) of the paper.
+
+Matrix multiply X[T,M] = A[T,N] x B[N,M] on an R x C weight-stationary SA:
+
+  Eq.(1)  L        = 2R + C + T - 2                     (conventional, k=1)
+  Eq.(3)  L(k)     = R + R/k + C/k + T - 2              (k-collapsed)
+  Eq.(4)  L_tot(k) = L(k) * ceil(N/R) * ceil(M/C)
+  Eq.(5)  T_clk(k) = d_FF + d_mul + d_add + k(d_CSA + 2 d_mux)
+  Eq.(6)  T_abs(k) = L_tot(k) * T_clk(k)
+  Eq.(7)  k_hat    = sqrt( (R+C)/(R+T-2) * (d_FF+d_mul+d_add)/(d_CSA+2d_mux) )
+
+Clock numbers are calibrated to the paper's 28nm silicon results:
+conventional SA 2.0 GHz; ArrayFlex 1.8 / 1.7 / 1.4 GHz at k = 1 / 2 / 4.
+A least-squares fit of Eq.(5) to those three points gives
+d_base = 492.6 ps and d_inc = 54.4 ps (the 'linear' model); 'table' mode
+uses the published frequencies exactly and falls back to the fit elsewhere.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class TimingParams:
+    # Eq.(5) coefficients (ps), least-squares fit to the paper's silicon
+    d_base_ps: float = 492.6      # d_FF + d_mul + d_add
+    d_inc_ps: float = 54.35       # d_CSA + 2*d_mux
+    conventional_period_ps: float = 500.0   # 2.0 GHz fixed-pipeline SA
+    # published ArrayFlex operating points (GHz)
+    freq_table_ghz: tuple = ((1, 1.8), (2, 1.7), (4, 1.4))
+    mode: str = "table"           # "table" | "linear"
+    supported_k: tuple = (1, 2, 4)
+
+    def clock_period_ps(self, k: int) -> float:
+        """Minimum clock period of a k-collapsed ArrayFlex pipeline."""
+        if self.mode == "table":
+            for kk, ghz in self.freq_table_ghz:
+                if kk == k:
+                    return 1000.0 / ghz
+        return self.d_base_ps + k * self.d_inc_ps
+
+    def clock_ghz(self, k: int) -> float:
+        return 1000.0 / self.clock_period_ps(k)
+
+
+DEFAULT_TIMING = TimingParams()
+
+
+def latency_cycles_conventional(R: int, C: int, T: int) -> int:
+    """Eq.(1)."""
+    return 2 * R + C + T - 2
+
+
+def latency_cycles(R: int, C: int, T: int, k: int) -> int:
+    """Eq.(3).  k must divide R and C for exact collapse."""
+    return R + math.ceil(R / k) + math.ceil(C / k) + T - 2
+
+
+def num_tiles(N: int, M: int, R: int, C: int) -> int:
+    return math.ceil(N / R) * math.ceil(M / C)
+
+
+def total_cycles(M: int, N: int, T: int, R: int, C: int, k: int) -> int:
+    """Eq.(4)."""
+    return latency_cycles(R, C, T, k) * num_tiles(N, M, R, C)
+
+
+def total_cycles_conventional(M: int, N: int, T: int, R: int, C: int) -> int:
+    return latency_cycles_conventional(R, C, T) * num_tiles(N, M, R, C)
+
+
+def t_abs_ps(M: int, N: int, T: int, R: int, C: int, k: int,
+             params: TimingParams = DEFAULT_TIMING) -> float:
+    """Eq.(6): absolute execution time (ps) on a k-collapsed ArrayFlex."""
+    return total_cycles(M, N, T, R, C, k) * params.clock_period_ps(k)
+
+
+def t_abs_conventional_ps(M: int, N: int, T: int, R: int, C: int,
+                          params: TimingParams = DEFAULT_TIMING) -> float:
+    """Fixed-pipeline SA at its (higher) max clock."""
+    return (total_cycles_conventional(M, N, T, R, C)
+            * params.conventional_period_ps)
+
+
+def k_hat(R: int, C: int, T: int,
+          params: TimingParams = DEFAULT_TIMING) -> float:
+    """Eq.(7): continuous optimal collapse depth."""
+    return math.sqrt(((R + C) / (R + T - 2))
+                     * (params.d_base_ps / params.d_inc_ps))
+
+
+def best_k(M: int, N: int, T: int, R: int, C: int,
+           params: TimingParams = DEFAULT_TIMING) -> int:
+    """Discrete argmin of Eq.(6) over the supported collapse depths."""
+    return min(params.supported_k,
+               key=lambda k: t_abs_ps(M, N, T, R, C, k, params))

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    DataConfig, SyntheticLM, MemmapCorpus, make_pipeline, Prefetcher,
+)

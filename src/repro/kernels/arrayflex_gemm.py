@@ -1,0 +1,82 @@
+"""ArrayFlex GEMM as a Pallas TPU kernel with configurable K-collapse.
+
+TPU adaptation of the paper's configurable transparent pipelining (DESIGN.md
+§Hardware adaptation): the MXU is itself a 128x128 systolic array whose
+pipeline we cannot touch, but the *grid schedule* around it exposes the same
+cycles-vs-per-step-cost tradeoff.  The collapse factor k fuses k consecutive
+K-panels into ONE grid step:
+
+  * fewer sequential grid steps  (the paper's R/k + C/k cycle reduction),
+  * larger per-step VMEM working set and serial in-step adder chain
+    (the paper's k*(d_CSA + 2 d_mux) clock-period increase),
+  * the fp32 VMEM accumulator plays the carry-save register chain: partial
+    sums stay in "redundant" form across the k sub-tiles and the final
+    cast/store is the carry-propagate add at the collapsed-block boundary.
+
+core.planner.best_k picks k per GEMM shape exactly as the paper picks the
+pipeline depth per CNN layer.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_collapse: int, n_steps: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[...]                     # (bm, bk * k)
+    w = w_ref[...]                     # (bk * k, bn)
+    bk = x.shape[1] // k_collapse
+    acc = acc_ref[...]
+    # the k-deep "carry-save" chain: k MXU passes accumulate into the same
+    # fp32 VMEM accumulator within one grid step
+    for i in range(k_collapse):
+        acc = acc + jnp.dot(x[:, i * bk:(i + 1) * bk],
+                            w[i * bk:(i + 1) * bk, :],
+                            preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(2) == n_steps - 1)
+    def _store():                      # carry-propagate: resolve + cast once
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def arrayflex_gemm(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128,
+                   k_collapse: int = 1, out_dtype=None,
+                   interpret: bool = True):
+    """X[M,K] @ W[K,N] with K-collapse factor k_collapse.
+
+    Requires bm | M, bn | N and (bk * k_collapse) | K.
+    """
+    M, K = x.shape
+    K2, N = w.shape
+    assert K == K2, (x.shape, w.shape)
+    bm, bn = min(bm, M), min(bn, N)
+    kk = bk * k_collapse
+    kk = min(kk, K)
+    assert M % bm == 0 and N % bn == 0 and K % kk == 0, \
+        (M, N, K, bm, bn, kk)
+    n_steps = K // kk
+    grid = (M // bm, N // bn, n_steps)
+    out_dtype = out_dtype or x.dtype
+    kernel = functools.partial(_kernel, k_collapse=k_collapse,
+                               n_steps=n_steps)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, kk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((kk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,65 @@
+"""jit'd public wrappers: planner-driven kernel configuration.
+
+``arrayflex_matmul`` is the framework's ArrayFlex-scheduled GEMM: the
+collapse factor k comes from core.planner (Eq. 6/7) for the GEMM's (M,N,T)
+shape, mirroring the paper's per-CNN-layer pipeline-depth selection.
+``attention`` picks the flash kernel's KV-chunk with the same machinery.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import planner, timing
+from repro.kernels.arrayflex_gemm import arrayflex_gemm
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels import ref
+
+# MXU geometry: the TPU systolic tile the collapse factor schedules around.
+SA_R = 128
+SA_C = 128
+
+
+def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4) -> int:
+    """ArrayFlex pipeline depth for GEMM X[T,K] @ W[K,M] (Eq. 7 -> discrete).
+
+    K is the contraction (the SA's R-tiled dim), M the output columns.
+    """
+    k = timing.best_k(M, K, T_rows, SA_R, SA_C)
+    return max(1, min(max_k, k))
+
+
+@partial(jax.jit, static_argnames=("k_collapse", "bk", "interpret"))
+def _gemm(x, w, k_collapse: int, bk: int, interpret: bool):
+    return arrayflex_gemm(x, w, bk=bk, k_collapse=k_collapse,
+                          interpret=interpret)
+
+
+def arrayflex_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
+                     interpret: bool = True):
+    """Planner-configured GEMM.  x: (..., K), w: (K, N)."""
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N = w.shape[-1]
+    x2 = x.reshape(-1, K)
+    if not k_collapse:
+        k_collapse = plan_collapse(N, K, x2.shape[0])
+    while K % (bk * k_collapse) and k_collapse > 1:
+        k_collapse -= 1
+    if K % bk:
+        return ref.gemm_ref(x2, w).reshape(*lead, N)   # shape fallback
+    out = _gemm(x2, w, k_collapse, bk, interpret)
+    return out.reshape(*lead, N)
+
+
+def attention(q, k, v, *, causal=True, window=0, kv_chunk: int = 0,
+              interpret: bool = True):
+    """Flash attention with planner-chosen KV chunk.  (BH,S,D) layout."""
+    from repro.nn.attention import fit_chunk
+    if not kv_chunk:
+        kv_chunk = planner.attention_plan(q.shape[1], k.shape[1])
+    return flash_attention(q, k, v, causal=causal, window=window,
+                           kv_chunk=fit_chunk(k.shape[1], kv_chunk),
+                           interpret=interpret)

@@ -1,0 +1,37 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def gemm_ref(x, w, out_dtype=None):
+    """fp32-accumulated matmul oracle for arrayflex_gemm."""
+    out = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    return out.astype(out_dtype or x.dtype)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0):
+    """Dense softmax-attention oracle.  q: (BH,S,D), k/v: (BH,T,D)."""
+    BH, S, D = q.shape
+    T = k.shape[1]
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bsd,btd->bst", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    rows = jnp.arange(S)[:, None]
+    cols = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), bool)
+    if causal:
+        ok = ok & (cols <= rows)
+    if window:
+        ok = ok & (cols > rows - window)
+    s = jnp.where(ok[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(ok[None], p, 0.0)
+    out = jnp.einsum("bst,btd->bsd", p.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)

@@ -1,0 +1,55 @@
+"""Serving driver: batched decode with the continuous-batching engine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
+      --requests 6 --max-new 24
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.serving import ServeConfig, ServingEngine
+from repro.serving.engine import Request
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen2-0.5b")
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--requests", type=int, default=6)
+    ap.add_argument("--max-new", type=int, default=24)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=args.max_batch,
+                                       max_seq=128))
+    prompts = [[2 + (i * 7 + j) % 97 for j in range(5 + i % 3)]
+               for i in range(args.requests)]
+    reqs = [Request(prompt=p, max_new_tokens=args.max_new,
+                    temperature=args.temperature, rid=i)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    t0 = time.time()
+    ticks = engine.run_to_completion()
+    dt = time.time() - t0
+    total = sum(len(r.out_tokens) for r in reqs)
+    for r in reqs:
+        print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens}")
+    print(f"{total} tokens in {dt:.2f}s ({total/max(dt,1e-9):.1f} tok/s, "
+          f"{ticks} ticks)")
+    return reqs
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,1 @@
+from repro.models import lm, api  # noqa: F401

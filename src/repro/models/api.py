@@ -1,0 +1,191 @@
+"""Public model API: step builders + abstract input specs for the dry-run.
+
+``input_specs(cfg, shape)`` returns ShapeDtypeStruct stand-ins for every
+model input (weak-type-correct, shardable, zero allocation), and
+``input_pspecs`` the matching PartitionSpec tree for a mesh.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig, SSMConfig
+from repro.models import lm
+from repro.optim import OptConfig, adamw_init, adamw_update
+from repro.parallel import sharding
+
+
+def dec_len(cfg: ModelConfig, shape: ShapeConfig) -> int:
+    """Decoder-token length for enc-dec (audio) models."""
+    return max(shape.seq_len // 8, 16)
+
+
+# ---------------------------------------------------------------------------
+# abstract specs
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig, *, with_labels=True):
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        DL = dec_len(cfg, shape)
+        out = {"frames": _sds((B, S, cfg.d_frontend), jnp.bfloat16),
+               "tokens": _sds((B, DL), jnp.int32)}
+        if with_labels:
+            out["labels"] = _sds((B, DL), jnp.int32)
+        return out
+    out = {"tokens": _sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        out["image_embeds"] = _sds((B, cfg.n_image_tokens, cfg.d_frontend),
+                                   jnp.bfloat16)
+    if with_labels:
+        out["labels"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """(cache, token, pos) ShapeDtypeStructs for serve_step."""
+    B = shape.global_batch
+    cache = jax.eval_shape(
+        lambda: lm.init_cache(cfg, B, shape.seq_len))
+    return cache, _sds((B,), jnp.int32), _sds((), jnp.int32)
+
+
+def abstract_params(cfg: ModelConfig):
+    return jax.eval_shape(lambda: lm.init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def abstract_opt_state(cfg: ModelConfig, opt_cfg: OptConfig):
+    params = abstract_params(cfg)
+    return jax.eval_shape(partial(adamw_init, cfg=opt_cfg), params)
+
+
+# ---------------------------------------------------------------------------
+# partition specs
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 *, with_labels=True):
+    B = shape.global_batch
+    tok = sharding.token_pspec(mesh, B)
+    act = sharding.activation_pspec(mesh, B)
+    if cfg.family == "audio":
+        out = {"frames": act, "tokens": tok}
+        if with_labels:
+            out["labels"] = tok
+        return out
+    out = {"tokens": tok}
+    if cfg.family == "vlm":
+        out["image_embeds"] = act
+    if with_labels:
+        out["labels"] = tok
+    return out
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B = shape.global_batch
+    ssm = cfg.ssm or SSMConfig()
+    hg = (cfg.d_inner // ssm.head_dim) // ssm.n_groups
+    conv_ch = cfg.d_inner + 2 * ssm.n_groups * ssm.d_state
+    cache = jax.eval_shape(lambda: lm.init_cache(cfg, B, shape.seq_len))
+
+    def spec(path, leaf):
+        name = str(path[-1].key)
+        if name in ("k", "v", "xk", "xv"):
+            return sharding.kv_cache_pspec(mesh, B, leaf.shape[2])
+        if name == "state":
+            return sharding.ssm_state_pspec(mesh, B, hg)
+        if name == "conv":
+            return sharding.conv_state_pspec(mesh, B, conv_ch)
+        return P()
+
+    return jax.tree_util.tree_map_with_path(spec, cache)
+
+
+def decode_pspecs(cfg: ModelConfig, shape: ShapeConfig, mesh):
+    B = shape.global_batch
+    tok = P(sharding._maybe(B, mesh, sharding.batch_axes(mesh)))
+    return cache_pspecs(cfg, shape, mesh), tok, P()
+
+
+def param_pspecs(cfg: ModelConfig, mesh):
+    return sharding.param_pspec_tree(
+        abstract_params(cfg), mesh,
+        moe_experts=cfg.moe.num_experts if cfg.moe else 0)
+
+
+def opt_pspecs(cfg: ModelConfig, opt_cfg: OptConfig, mesh):
+    pp = param_pspecs(cfg, mesh)
+    out = {"m": pp, "v": pp, "step": P()}
+    if opt_cfg.master_weights:
+        out["master"] = pp
+    return out
+
+
+# ---------------------------------------------------------------------------
+# step builders
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                    n_microbatches: int = 1):
+    """Fused fwd+bwd+optimizer step; n_microbatches > 1 accumulates
+    gradients over micro-slices of the global batch (activation memory
+    scales 1/n at the cost of an fp32 grad accumulator)."""
+    if n_microbatches <= 1:
+        def train_step(params, opt_state, batch):
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(cfg, p, batch), has_aux=True)(params)
+            new_params, new_opt, stats = adamw_update(params, grads,
+                                                      opt_state, opt_cfg)
+            metrics = dict(metrics, loss=loss, **stats)
+            return new_params, new_opt, metrics
+        return train_step
+
+    from repro.parallel.sharding import constrain
+
+    def train_step(params, opt_state, batch):
+        def split(x):
+            n = n_microbatches
+            b = x.shape[0] // n
+            # micro m takes a stride-n slice so every microbatch spans all
+            # data shards evenly
+            xr = jnp.moveaxis(
+                x.reshape((b, n) + x.shape[1:]), 1, 0)
+            return constrain(xr, "micro_batch")
+
+        micro = jax.tree.map(split, batch)
+        gacc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                             params)
+
+        def step(carry, mb):
+            gacc, loss_acc = carry
+            (loss, _), grads = jax.value_and_grad(
+                lambda p: lm.loss_fn(cfg, p, mb), has_aux=True)(params)
+            gacc = jax.tree.map(
+                lambda a, g: a + g.astype(jnp.float32) / n_microbatches,
+                gacc, grads)
+            return (gacc, loss_acc + loss / n_microbatches), None
+
+        (grads, loss), _ = jax.lax.scan(
+            step, (gacc0, jnp.float32(0.0)), micro)
+        new_params, new_opt, stats = adamw_update(params, grads, opt_state,
+                                                  opt_cfg)
+        metrics = dict(loss=loss, **stats)
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return lm.prefill(cfg, params, batch)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    def serve_step(params, cache, token, pos):
+        return lm.decode_step(cfg, params, cache, token, pos)
+    return serve_step

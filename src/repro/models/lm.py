@@ -1,0 +1,452 @@
+"""Unified LM model family: dense / MoE / hybrid(Jamba) / SSM / VLM / audio.
+
+Layers are grouped into *super-blocks* of ``period(cfg)`` sub-layers; every
+super-block has identical structure, so the stack of ``n_layers/period``
+super-blocks is executed with ``jax.lax.scan`` (one layer's HLO regardless of
+depth — essential for 100-layer dry-runs) and optionally rematerialized.
+
+Param/caches are plain pytrees; leaves of ``blocks``/``enc_blocks`` carry a
+leading ``n_super`` stack dim consumed by the scan.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, SSMConfig
+from repro.nn import layers, attention as attn_lib, moe as moe_lib, mamba as mamba_lib
+from repro.parallel.sharding import constrain
+
+
+# ---------------------------------------------------------------------------
+# structure helpers
+
+def _lcm(a, b):
+    return a * b // math.gcd(a, b)
+
+
+def period(cfg: ModelConfig) -> int:
+    p = 1
+    if cfg.family == "hybrid":
+        p = _lcm(p, cfg.hybrid_period)
+    if cfg.family == "vlm":
+        p = _lcm(p, cfg.cross_attn_every)
+    if cfg.moe is not None:
+        p = _lcm(p, cfg.moe.moe_every)
+    assert cfg.n_layers % p == 0, (cfg.n_layers, p)
+    return p
+
+
+def n_super(cfg: ModelConfig) -> int:
+    return cfg.n_layers // period(cfg)
+
+
+def sublayer_kind(cfg: ModelConfig, pos: int) -> dict:
+    return dict(
+        mixer="attn" if cfg.is_attn_layer(pos) else "mamba",
+        # every audio (whisper) decoder layer cross-attends to the encoder
+        cross=cfg.is_cross_attn_layer(pos) or cfg.family == "audio",
+        mlp=("moe" if cfg.is_moe_layer(pos) else
+             ("dense" if cfg.d_ff else None)),
+    )
+
+
+def cross_len(cfg: ModelConfig) -> int:
+    return (cfg.n_image_tokens if cfg.family == "vlm"
+            else cfg.max_source_positions)
+
+
+def _cdtype(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.compute_dtype]
+
+
+def _pdtype(cfg):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+
+
+def cache_len(cfg: ModelConfig, max_seq: int) -> int:
+    return min(cfg.sliding_window, max_seq) if cfg.sliding_window else max_seq
+
+
+# ---------------------------------------------------------------------------
+# attention sub-module
+
+def attn_init(key, cfg: ModelConfig, dtype):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": layers.linear_init(ks[0], d, H * hd, bias=cfg.qkv_bias,
+                                 dtype=dtype),
+        "wk": layers.linear_init(ks[1], d, KV * hd, bias=cfg.qkv_bias,
+                                 dtype=dtype),
+        "wv": layers.linear_init(ks[2], d, KV * hd, bias=cfg.qkv_bias,
+                                 dtype=dtype),
+        "wo": layers.linear_init(ks[3], H * hd, d, dtype=dtype),
+    }
+
+
+def _proj_qkv(p, x, kv_src, cfg, cd):
+    B, S = x.shape[0], x.shape[1]
+    hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
+    q = layers.linear(p["wq"], x, cd).reshape(B, S, H, hd)
+    src = x if kv_src is None else kv_src
+    T = src.shape[1]
+    k = layers.linear(p["wk"], src, cd).reshape(B, T, KV, hd)
+    v = layers.linear(p["wv"], src, cd).reshape(B, T, KV, hd)
+    return q, k, v
+
+
+def attn_full(p, x, cfg: ModelConfig, positions, *, causal=True,
+              kv_src=None):
+    """Train/prefill attention.  Returns (out, (k, v)) with rope'd keys."""
+    cd = _cdtype(cfg)
+    q, k, v = _proj_qkv(p, x, kv_src, cfg, cd)
+    if kv_src is None:                     # self-attention -> RoPE
+        q = layers.apply_rope(q, positions, cfg.rope_theta)
+        k = layers.apply_rope(k, positions, cfg.rope_theta)
+    out = attn_lib.attention(
+        q, k, v, causal=causal, window=cfg.sliding_window,
+        q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
+        dense_below=cfg.attn_dense_below)
+    B, S = x.shape[0], x.shape[1]
+    out = layers.linear(p["wo"], out.reshape(B, S, -1), cd)
+    return out, (k, v)
+
+
+def attn_decode(p, x, cfg: ModelConfig, cache, pos):
+    """Single-token attention.  x: (B,1,d); cache: {'k','v'} ring buffers.
+
+    pos may be a scalar (fused fleet decode; cheap dynamic-update-slice) or
+    a (B,) vector (ragged continuous batching; masked per-row write).
+    """
+    cd = _cdtype(cfg)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos, (B,))[:, None]
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k_new = layers.apply_rope(k_new, positions, cfg.rope_theta)
+    cl = cache["k"].shape[1]
+    if pos.ndim == 0:
+        slot = (pos % cl) if cfg.sliding_window else jnp.minimum(pos, cl - 1)
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k_new.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v_new.astype(cache["v"].dtype), slot, axis=1)
+    else:
+        slot = (pos % cl) if cfg.sliding_window else jnp.minimum(pos, cl - 1)
+        hit = (jnp.arange(cl)[None, :] == slot[:, None])[:, :, None, None]
+        k_cache = jnp.where(hit, k_new.astype(cache["k"].dtype), cache["k"])
+        v_cache = jnp.where(hit, v_new.astype(cache["v"].dtype), cache["v"])
+    out = attn_lib.decode_attention(q, k_cache, v_cache, pos,
+                                    window=cfg.sliding_window)
+    out = layers.linear(p["wo"], out.reshape(B, 1, -1), cd)
+    return out, {"k": k_cache, "v": v_cache}
+
+
+def cross_attn_decode(p, x, cfg: ModelConfig, cache):
+    """Cross-attention against precomputed (xk, xv)."""
+    cd = _cdtype(cfg)
+    B = x.shape[0]
+    hd, H = cfg.resolved_head_dim, cfg.n_heads
+    q = layers.linear(p["wq"], x, cd).reshape(B, 1, H, hd)
+    out = attn_lib.dense_attention(q, cache["xk"].astype(cd),
+                                   cache["xv"].astype(cd), causal=False)
+    return layers.linear(p["wo"], out.reshape(B, 1, -1), cd)
+
+
+# ---------------------------------------------------------------------------
+# sub-layer (one transformer/mamba layer)
+
+def sublayer_init(key, cfg: ModelConfig, pos: int):
+    kind = sublayer_kind(cfg, pos)
+    dtype = _pdtype(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    p = {"ln1": layers.rmsnorm_init(d, dtype)}
+    if kind["mixer"] == "attn":
+        p["attn"] = attn_init(ks[0], cfg, dtype)
+    else:
+        p["mamba"] = mamba_lib.mamba_init(ks[0], d, cfg.ssm or SSMConfig(),
+                                          dtype)
+    if kind["cross"]:
+        p["lnx"] = layers.rmsnorm_init(d, dtype)
+        p["xattn"] = attn_init(ks[1], cfg, dtype)
+    if kind["mlp"] == "dense":
+        p["ln2"] = layers.rmsnorm_init(d, dtype)
+        p["mlp"] = layers.swiglu_init(ks[2], d, cfg.d_ff, dtype)
+    elif kind["mlp"] == "moe":
+        m = cfg.moe
+        p["ln2"] = layers.rmsnorm_init(d, dtype)
+        p["moe"] = moe_lib.moe_init(ks[3], d, m.expert_d_ff or cfg.d_ff,
+                                    m.num_experts,
+                                    num_shared=m.num_shared_experts,
+                                    dtype=dtype)
+    return p
+
+
+def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
+    """Full-sequence sub-layer.  Returns (x, aux, cache_entry)."""
+    kind = sublayer_kind(cfg, pos)
+    cache = {}
+    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    if kind["mixer"] == "attn":
+        out, (k, v) = attn_full(p["attn"], h, cfg, positions)
+        cl = cache_len(cfg, k.shape[1])
+        S = k.shape[1]
+        k_c, v_c = k[:, S - cl:], v[:, S - cl:]
+        if cfg.sliding_window and cl > 1:
+            shift = S % cl
+            k_c = jnp.roll(k_c, shift, axis=1)
+            v_c = jnp.roll(v_c, shift, axis=1)
+        cache = {"k": k_c.astype(jnp.bfloat16), "v": v_c.astype(jnp.bfloat16)}
+    else:
+        out, state, conv = mamba_lib.mamba_forward(
+            p["mamba"], h, cfg.ssm or SSMConfig(), _cdtype(cfg))
+        cache = {"state": state.astype(jnp.float32),
+                 "conv": conv.astype(jnp.bfloat16)}
+    x = x + out
+    if kind["cross"]:
+        h = layers.rmsnorm(p["lnx"], x, cfg.rms_eps)
+        out, (xk, xv) = attn_full(p["xattn"], h, cfg, positions,
+                                  causal=False, kv_src=ctx)
+        cache["xk"] = xk.astype(jnp.bfloat16)
+        cache["xv"] = xv.astype(jnp.bfloat16)
+        x = x + out
+    if kind["mlp"] == "dense":
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg))
+    elif kind["mlp"] == "moe":
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        m = cfg.moe
+        y, a = moe_lib.moe_apply(p["moe"], h, top_k=m.top_k,
+                                 capacity_factor=m.capacity_factor,
+                                 groups=0,  # one dispatch group per sequence
+                                 compute_dtype=_cdtype(cfg),
+                                 aux_loss_weight=m.aux_loss_weight)
+        x = x + y
+        aux = aux + a
+    return x, aux, cache
+
+
+def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
+    """One-token sub-layer.  x: (B,1,d).  Returns (x, new_cache)."""
+    kind = sublayer_kind(cfg, pos_idx)
+    new_cache = dict(cache)
+    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    if kind["mixer"] == "attn":
+        out, kv = attn_decode(p["attn"], h, cfg, cache, pos)
+        new_cache.update(kv)
+    else:
+        out, state, conv = mamba_lib.mamba_decode_step(
+            p["mamba"], h[:, 0], cache["state"], cache["conv"],
+            cfg.ssm or SSMConfig(), _cdtype(cfg))
+        out = out[:, None]
+        new_cache["state"] = state
+        new_cache["conv"] = conv.astype(cache["conv"].dtype)
+    x = x + out
+    if kind["cross"]:
+        h = layers.rmsnorm(p["lnx"], x, cfg.rms_eps)
+        x = x + cross_attn_decode(p["xattn"], h, cfg, cache)
+    if kind["mlp"] == "dense":
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg))
+    elif kind["mlp"] == "moe":
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        m = cfg.moe
+        y, _ = moe_lib.moe_apply(p["moe"], h, top_k=m.top_k,
+                                 capacity_factor=max(m.capacity_factor, 2.0),
+                                 groups=1,  # decode: one global group
+                                 compute_dtype=_cdtype(cfg),
+                                 aux_loss_weight=0.0)
+        x = x + y
+    return x, new_cache
+
+
+# ---------------------------------------------------------------------------
+# whole model
+
+def _stacked_init(key, n: int, fn):
+    keys = jax.random.split(key, n)
+    return jax.vmap(fn)(keys)
+
+
+def init_params(cfg: ModelConfig, key):
+    P = period(cfg)
+    NS = n_super(cfg)
+    dtype = _pdtype(cfg)
+    keys = jax.random.split(key, P + 6)
+    params = {
+        "embed": layers.embedding_init(keys[-1], cfg.padded_vocab,
+                                       cfg.d_model, dtype),
+        "final_norm": layers.rmsnorm_init(cfg.d_model, dtype),
+        "blocks": tuple(
+            _stacked_init(keys[i], NS,
+                          partial(sublayer_init, cfg=cfg, pos=i))
+            for i in range(P)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = layers.linear_init(keys[-2], cfg.d_model,
+                                               cfg.padded_vocab, dtype=dtype)
+    if cfg.family == "vlm":
+        params["img_proj"] = layers.linear_init(keys[-3], cfg.d_frontend,
+                                                cfg.d_model, dtype=dtype)
+    if cfg.family == "audio":
+        params["audio_proj"] = layers.linear_init(keys[-4], cfg.d_frontend,
+                                                  cfg.d_model, dtype=dtype)
+        params["enc_blocks"] = (_stacked_init(
+            keys[-5], cfg.n_encoder_layers,
+            partial(_enc_layer_init, cfg=cfg)),)
+    return params
+
+
+def _enc_layer_init(key, cfg: ModelConfig):
+    dtype = _pdtype(cfg)
+    ks = jax.random.split(key, 2)
+    return {"ln1": layers.rmsnorm_init(cfg.d_model, dtype),
+            "attn": attn_init(ks[0], cfg, dtype),
+            "ln2": layers.rmsnorm_init(cfg.d_model, dtype),
+            "mlp": layers.swiglu_init(ks[1], cfg.d_model, cfg.d_ff, dtype)}
+
+
+def _remat(cfg, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        pol = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)
+
+
+def _encode_audio(cfg, params, frames):
+    cd = _cdtype(cfg)
+    x = layers.linear(params["audio_proj"], frames, cd)
+    positions = jnp.arange(x.shape[1])[None, :]
+
+    def body(carry, p):
+        x = carry
+        h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
+        out, _ = attn_full(p["attn"], h, cfg, positions, causal=False)
+        x = x + out
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + layers.swiglu(p["mlp"], h, cd)
+        return x, None
+
+    x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_blocks"][0])
+    return x
+
+
+def _context(cfg, params, batch):
+    if cfg.family == "vlm":
+        return layers.linear(params["img_proj"],
+                             batch["image_embeds"].astype(_cdtype(cfg)),
+                             _cdtype(cfg))
+    if cfg.family == "audio":
+        return _encode_audio(cfg, params, batch["frames"])
+    return None
+
+
+def forward(cfg: ModelConfig, params, batch, *, return_cache=False):
+    """Returns (logits, aux_loss, cache-or-None).  batch['tokens']: (B,S)."""
+    P = period(cfg)
+    cd = _cdtype(cfg)
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = constrain(layers.embed(params["embed"], tokens, cd), "hidden")
+    positions = jnp.arange(S)[None, :]
+    ctx = _context(cfg, params, batch)
+
+    def body(carry, p_block):
+        x, aux = carry
+        caches = []
+        for i in range(P):
+            x, aux, c = sublayer_full(p_block[i], cfg, i, x, aux,
+                                      positions, ctx)
+            x = constrain(x, "hidden")
+            caches.append(c)
+        return (x, aux), tuple(caches) if return_cache else None
+
+    (x, aux), caches = jax.lax.scan(_remat(cfg, body), (x, jnp.float32(0.0)),
+                                    params["blocks"])
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["lm_head"], x, cd).astype(jnp.float32)
+    return constrain(logits, "logits"), aux, caches
+
+
+def loss_fn(cfg: ModelConfig, params, batch):
+    logits, aux, _ = forward(cfg, params, batch)
+    loss = layers.softmax_xent(logits, batch["labels"],
+                               batch.get("loss_mask"))
+    return loss + aux, {"xent": loss, "aux": aux}
+
+
+def prefill(cfg: ModelConfig, params, batch):
+    """Returns (last-token logits (B,V), cache pytree)."""
+    logits, _, caches = forward(cfg, params, batch, return_cache=True)
+    return logits[:, -1], caches
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
+    """token: (B,) int32; pos: scalar int32.  Returns (logits (B,V), cache)."""
+    P = period(cfg)
+    cd = _cdtype(cfg)
+    x = layers.embed(params["embed"], token[:, None], cd)
+
+    def body(x, xs):
+        p_block, cache_block = xs
+        new_caches = []
+        for i in range(P):
+            x, nc = sublayer_decode(p_block[i], cfg, i, x, cache_block[i],
+                                    pos, ctx)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["lm_head"], x, cd).astype(jnp.float32)
+    return constrain(logits, "logits")[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cache construction
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
+               dtype=jnp.bfloat16):
+    """Zero-initialized decode cache matching decode_step's expectations."""
+    P = period(cfg)
+    NS = n_super(cfg)
+    ssm = cfg.ssm or SSMConfig()
+    hd, KV = cfg.resolved_head_dim, cfg.n_kv_heads
+    cl = cache_len(cfg, max_seq)
+    d_in = cfg.d_inner
+    G, N = ssm.n_groups, ssm.d_state
+    hg = (d_in // ssm.head_dim) // G
+    conv_ch = d_in + 2 * G * N
+    out = []
+    for i in range(P):
+        kind = sublayer_kind(cfg, i)
+        c = {}
+        if kind["mixer"] == "attn":
+            c["k"] = jnp.zeros((NS, batch_size, cl, KV, hd), dtype)
+            c["v"] = jnp.zeros((NS, batch_size, cl, KV, hd), dtype)
+        else:
+            c["state"] = jnp.zeros((NS, batch_size, G, hg, ssm.head_dim, N),
+                                   jnp.float32)
+            c["conv"] = jnp.zeros((NS, batch_size, ssm.d_conv - 1, conv_ch),
+                                  dtype)
+        if kind["cross"]:
+            xl = cross_len(cfg)
+            c["xk"] = jnp.zeros((NS, batch_size, xl, KV, hd), dtype)
+            c["xv"] = jnp.zeros((NS, batch_size, xl, KV, hd), dtype)
+        out.append(c)
+    return tuple(out)

@@ -1,0 +1,185 @@
+"""GQA attention: dense, wavefront-chunked (flash-style), and decode paths.
+
+The chunked path processes the lower-triangular (q_chunk x kv_chunk) tile
+grid as a static *wavefront schedule* — exactly the tile walk a
+weight-stationary systolic array performs (see core.planner): the chunk size
+plays the role of the ArrayFlex pipeline-collapse factor k, trading the
+number of sequential steps against per-step work.  core.planner.attention_plan
+picks the chunk size with the paper's Eq.(6)-style analytical model.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.parallel.sharding import constrain
+
+NEG_INF = -1e30
+
+
+def _causal_pairs(n_q: int, n_k: int, q_chunk: int, kv_chunk: int,
+                  window: int, q_offset: int):
+    """Static (qi, kj) tile list for the causal (optionally windowed) band."""
+    pairs = []
+    for i in range(n_q):
+        row_lo = q_offset + i * q_chunk              # first global row
+        row_hi = row_lo + q_chunk - 1                # last global row
+        for j in range(n_k):
+            col_lo = j * kv_chunk
+            col_hi = col_lo + kv_chunk - 1
+            if col_lo > row_hi:                      # strictly above diagonal
+                continue
+            if window and col_hi < row_lo - window:  # outside SWA band
+                continue
+            pairs.append((i, j))
+    return np.asarray(pairs, dtype=np.int32)
+
+
+def _block_mask(row0, col0, q_chunk, kv_chunk, window, causal):
+    r = row0 + jnp.arange(q_chunk)[:, None]
+    c = col0 + jnp.arange(kv_chunk)[None, :]
+    ok = jnp.ones((q_chunk, kv_chunk), jnp.bool_)
+    if causal:
+        ok = ok & (c <= r)
+    if window:
+        ok = ok & (c > r - window)
+    return ok
+
+
+def dense_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                    kv_len=None):
+    """q: (B,S,H,D), k/v: (B,T,KV,D).  fp32 softmax.  Returns (B,S,H,D)."""
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    qg = constrain(q.reshape(B, S, KV, g, D), "attn_q_seq")
+    k = constrain(k, "attn_qkv")
+    v = constrain(v, "attn_qkv")
+    scale = 1.0 / math.sqrt(D)
+    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    scores = constrain(scores, "attn_scores_seq")
+    r = q_offset + jnp.arange(S)[:, None]
+    c = jnp.arange(T)[None, :]
+    ok = jnp.ones((S, T), jnp.bool_)
+    if causal:
+        ok = ok & (c <= r)
+    if window:
+        ok = ok & (c > r - window)
+    if kv_len is not None:
+        ok = ok & (c < kv_len)
+    scores = jnp.where(ok[None, None, None], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    return out.reshape(B, S, H, D)
+
+
+def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
+                      q_chunk=1024, kv_chunk=1024):
+    """Sequence-sharded flash-style attention: q rows stay resident (sharded
+    over the 'model' axis under SPMD), KV is scanned in chunks with an online
+    softmax.  Memory is O(B*S_local*H*D + B*H*S_local*kv_chunk).
+
+    The KV chunk size is the ArrayFlex pipeline-collapse analogue: fewer,
+    larger sequential steps vs more, smaller ones (core.planner picks it).
+    """
+    B, S, H, D = q.shape
+    T, KV = k.shape[1], k.shape[2]
+    g = H // KV
+    kv_chunk = min(kv_chunk, T)
+    assert T % kv_chunk == 0
+    n_k = T // kv_chunk
+    scale = 1.0 / math.sqrt(D)
+    qg = constrain(q.reshape(B, S, KV, g, D), "attn_q_seq")
+    k = constrain(k, "attn_qkv")
+    v = constrain(v, "attn_qkv")
+    rows = q_offset + jnp.arange(S)                       # global row ids
+
+    o = constrain(jnp.zeros((B, S, KV, g, D), jnp.float32), "attn_q_seq")
+    m = constrain(jnp.full((B, S, KV, g), NEG_INF, jnp.float32),
+                  "attn_stat_seq")
+    l = constrain(jnp.zeros((B, S, KV, g), jnp.float32), "attn_stat_seq")
+
+    def step(carry, j):
+        o, m, l = carry
+        col0 = j * kv_chunk
+        ks = jax.lax.dynamic_slice_in_dim(k, col0, kv_chunk, axis=1)
+        vs = jax.lax.dynamic_slice_in_dim(v, col0, kv_chunk, axis=1)
+        s = jnp.einsum("bskgd,btkd->bkgst", qg, ks,
+                       preferred_element_type=jnp.float32) * scale
+        cols = col0 + jnp.arange(kv_chunk)
+        ok = jnp.ones((S, kv_chunk), jnp.bool_)
+        if causal:
+            ok = ok & (cols[None, :] <= rows[:, None])
+        if window:
+            ok = ok & (cols[None, :] > rows[:, None] - window)
+        okb = ok[None, None, None]                         # (1,1,1,S,kc)
+        s = jnp.where(okb, s, NEG_INF)
+        blk_max = jnp.moveaxis(jnp.max(s, axis=-1), -1, 1)  # (B,S,KV,g)
+        m_new = jnp.maximum(m, blk_max)
+        p = jnp.exp(s - jnp.moveaxis(m_new, 1, -1)[..., None])
+        p = jnp.where(okb, p, 0.0)
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.moveaxis(jnp.sum(p, -1), -1, 1)
+        pv = jnp.einsum("bkgst,btkd->bskgd", p.astype(vs.dtype), vs,
+                        preferred_element_type=jnp.float32)
+        o = o * corr[..., None] + pv
+        return (o, m_new, l), None
+
+    # remat each KV step: backward recomputes the (bq x kc) score block
+    # instead of saving every per-step intermediate (O(n_k) x 4GiB at 90B
+    # scale); only the (o, m, l) carries persist.
+    (o, m, l), _ = jax.lax.scan(jax.checkpoint(step), (o, m, l),
+                                jnp.arange(n_k))
+    out = o / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, S, H, D).astype(q.dtype)
+
+
+def fit_chunk(T: int, kc: int) -> int:
+    """Largest divisor of T that is <= kc (so the KV scan tiles exactly)."""
+    kc = min(kc, T)
+    for d in range(kc, 0, -1):
+        if T % d == 0:
+            return d
+    return T
+
+
+def attention(q, k, v, *, causal=True, window=0, q_offset=0,
+              q_chunk=1024, kv_chunk=1024, dense_below=2048):
+    if q.shape[1] <= dense_below:
+        return dense_attention(q, k, v, causal=causal, window=window,
+                               q_offset=q_offset)
+    return chunked_attention(q, k, v, causal=causal, window=window,
+                             q_offset=q_offset, q_chunk=q_chunk,
+                             kv_chunk=fit_chunk(k.shape[1], kv_chunk))
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+    """Single-token attention against a (possibly ring-buffered) KV cache.
+
+    q: (B,1,H,D); caches (B,T,KV,D); pos: scalar int32 OR per-sequence
+    (B,) int32 (ragged continuous batching).  For ring buffers (window>0)
+    the cache length T == window and all slots are valid once pos >= window.
+    """
+    B, _, H, D = q.shape
+    T, KV = k_cache.shape[1], k_cache.shape[2]
+    g = H // KV
+    qg = q.reshape(B, 1, KV, g, D)
+    scale = 1.0 / math.sqrt(D)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    idx = jnp.arange(T)
+    pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
+    if window:
+        valid = idx[None, :] < jnp.minimum(pos_v + 1, T)[:, None]
+        valid = valid | (pos_v + 1 >= T)[:, None]          # ring full
+    else:
+        valid = idx[None, :] <= pos_v[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache)
+    return out.reshape(B, 1, H, D).astype(q.dtype)

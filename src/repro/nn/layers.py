@@ -1,0 +1,142 @@
+"""Pure-JAX neural-net primitives (no flax): params are plain pytrees.
+
+Every ``*_init`` returns a dict of arrays; the matching apply function is a
+pure function of (params, inputs).  Parameter leaves carry logical sharding
+axes via the parallel.sharding rules, keyed by their path names.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _dtype(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+            "float16": jnp.float16}[name]
+
+
+def normal_init(key, shape, scale=0.02, dtype=jnp.float32):
+    return (scale * jax.random.truncated_normal(key, -2.0, 2.0, shape)).astype(dtype)
+
+
+# ---------------------------------------------------------------- linear
+def linear_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32,
+                scale=None):
+    if scale is None:
+        scale = 1.0 / np.sqrt(in_dim)
+    p = {"w": normal_init(key, (in_dim, out_dim), scale, dtype)}
+    if bias:
+        p["b"] = jnp.zeros((out_dim,), dtype)
+    return p
+
+
+def linear(p, x, compute_dtype=None):
+    w = p["w"]
+    if compute_dtype is not None:
+        w = w.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    y = x @ w
+    if "b" in p:
+        y = y + p["b"].astype(y.dtype)
+    return y
+
+
+# ---------------------------------------------------------------- norms
+def rmsnorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype)}
+
+
+def rmsnorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def layernorm_init(dim, dtype=jnp.float32):
+    return {"scale": jnp.ones((dim,), dtype), "bias": jnp.zeros((dim,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------- embed
+def embedding_init(key, vocab, dim, dtype=jnp.float32):
+    return {"table": normal_init(key, (vocab, dim), 0.02, dtype)}
+
+
+def embed(p, ids, compute_dtype=jnp.bfloat16):
+    return p["table"].astype(compute_dtype)[ids]
+
+
+def unembed(p, x):
+    """Logits against the embedding table (tied) — fp32 accumulation."""
+    return jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype),
+                      preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------- rope
+def rope_freqs(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, theta=1e6):
+    """x: (..., S, H, D) with positions (..., S) broadcastable."""
+    d = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(d, theta))            # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    cos = jnp.cos(angles)[..., None, :]                  # (..., S, 1, D/2)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------- mlp
+def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wi_gate": linear_init(k1, d_model, d_ff, dtype=dtype),
+        "wi_up": linear_init(k2, d_model, d_ff, dtype=dtype),
+        "wo": linear_init(k3, d_ff, d_model, dtype=dtype),
+    }
+
+
+def swiglu(p, x, compute_dtype=jnp.bfloat16):
+    g = linear(p["wi_gate"], x, compute_dtype)
+    u = linear(p["wi_up"], x, compute_dtype)
+    return linear(p["wo"], jax.nn.silu(g) * u, compute_dtype)
+
+
+def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
+    k1, k2 = jax.random.split(key)
+    return {"wi": linear_init(k1, d_model, d_ff, bias=True, dtype=dtype),
+            "wo": linear_init(k2, d_ff, d_model, bias=True, dtype=dtype)}
+
+
+def gelu_mlp(p, x, compute_dtype=jnp.bfloat16):
+    return linear(p["wo"], jax.nn.gelu(linear(p["wi"], x, compute_dtype)),
+                  compute_dtype)
+
+
+# ---------------------------------------------------------------- loss
+def softmax_xent(logits, labels, mask=None):
+    """logits (..., V) fp32-accumulated; labels int (...,)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        nll = nll * mask
+        return jnp.sum(nll) / jnp.maximum(jnp.sum(mask), 1.0)
+    return jnp.mean(nll)

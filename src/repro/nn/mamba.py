@@ -1,0 +1,190 @@
+"""Mamba-2 (SSD, state-space duality) block — chunked matmul form + decode.
+
+The chunked SSD algorithm (arXiv:2405.21060 §6) decomposes the selective-SSM
+recurrence into intra-chunk quadratic (matmul-friendly, MXU-native) terms and
+a small sequential inter-chunk state scan — the TPU-native adaptation of the
+CUDA selective-scan kernel.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.nn import layers
+from repro.parallel.sharding import constrain
+
+
+def _inv_softplus(x):
+    return np.log(np.expm1(x))
+
+
+def mamba_init(key, d_model, ssm, dtype=jnp.float32):
+    """ssm: configs.base.SSMConfig."""
+    d_inner = ssm.expand * d_model
+    H = d_inner // ssm.head_dim
+    G, N, K = ssm.n_groups, ssm.d_state, ssm.d_conv
+    conv_ch = d_inner + 2 * G * N
+    ks = jax.random.split(key, 8)
+    dt = np.exp(np.random.RandomState(0).uniform(
+        math.log(ssm.dt_min), math.log(ssm.dt_max), (H,)))
+    p = {
+        "z_proj": layers.linear_init(ks[0], d_model, d_inner, dtype=dtype),
+        "xbc_proj": layers.linear_init(ks[1], d_model, conv_ch, dtype=dtype),
+        "dt_proj": layers.linear_init(ks[2], d_model, H, dtype=dtype),
+        "dt_bias": jnp.asarray(_inv_softplus(dt), jnp.float32),
+        "a_log": jnp.log(jnp.asarray(
+            np.random.RandomState(1).uniform(1.0, 16.0, (H,)), jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "conv_w": layers.normal_init(ks[3], (K, conv_ch), 0.1, dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "norm": layers.rmsnorm_init(d_inner, dtype),
+        "out_proj": layers.linear_init(ks[4], d_inner, d_model, dtype=dtype),
+    }
+    return p
+
+
+def _causal_conv(x, w, b):
+    """Depthwise causal conv.  x: (B,S,ch), w: (K,ch)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp, w[:, None, :].astype(x.dtype), (1,), "VALID",
+        dimension_numbers=("NWC", "WIO", "NWC"),
+        feature_group_count=x.shape[-1])
+    return out + b.astype(x.dtype)
+
+
+def _segsum(dA):
+    """dA: (..., c) -> (..., c, c) with out[i,j] = sum_{j<m<=i} dA[m]."""
+    cs = jnp.cumsum(dA, axis=-1)
+    seg = cs[..., :, None] - cs[..., None, :]
+    c = dA.shape[-1]
+    mask = jnp.tril(jnp.ones((c, c), bool))
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B_, C_, chunk):
+    """Chunked SSD.  x:(B,S,H,P) dt:(B,S,H) A:(H,) B_/C_:(B,S,G,N).
+
+    Returns y:(B,S,H,P), final_state:(B,G,H/G,P,N).  fp32 internal.
+
+    All per-chunk work happens INSIDE the inter-chunk state scan with a
+    rematted body, and the intra-chunk contraction is staged so no
+    (c, c, P)-shaped tensor ever materializes: peak live memory is
+    O(B*H*c^2) for one chunk instead of O(B*H*S*c*P) for all of them.
+    """
+    Bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    hg = H // G
+    nc = S // chunk
+    assert S % chunk == 0
+    f32 = jnp.float32
+    A2 = A.reshape(G, hg)
+
+    def cmajor(a, extra):
+        return jnp.moveaxis(
+            a.reshape((Bsz, nc, chunk) + extra), 1, 0)
+
+    xs = (cmajor(x.astype(f32), (G, hg, P)),
+          cmajor(dt.astype(f32), (G, hg)),
+          cmajor(B_.astype(f32), (G, N)),
+          cmajor(C_.astype(f32), (G, N)))
+
+    def body(state, inp):
+        xc, dtc, Bc, Cc = inp            # (B,c,G,hg,P) (B,c,G,hg) (B,c,G,N)
+        dA = dtc * A2                                  # (B,c,G,hg)
+        cs = jnp.cumsum(dA, axis=1)
+        cs_last = cs[:, -1]                            # (B,G,hg)
+        # intra-chunk: w[b,g,h,c,d] = scores * L * dt  (no P dim yet)
+        scores = jnp.einsum("bcgs,bdgs->bgcd", Cc, Bc)     # (B,G,c,c)
+        L = jnp.exp(_segsum(jnp.moveaxis(dA, 1, -1)))      # (B,G,hg,c,c)
+        w = scores[:, :, None] * L \
+            * jnp.moveaxis(dtc, 1, -1)[..., None, :]       # (B,G,hg,c,c)
+        y_diag = jnp.einsum("bghcd,bdghp->bcghp", w, xc)
+        # chunk state contribution
+        decay = jnp.exp(cs_last[:, None] - cs)             # (B,c,G,hg)
+        st_chunk = jnp.einsum("bcgs,bcgh,bcghp->bghps",
+                              Bc, decay * dtc, xc)         # (B,G,hg,P,N)
+        # inter-chunk: read incoming state, then update it
+        y_off = jnp.einsum("bcgs,bghps,bcgh->bcghp",
+                           Cc, state, jnp.exp(cs))
+        new_state = state * jnp.exp(cs_last)[..., None, None] + st_chunk
+        return new_state, y_diag + y_off
+
+    state0 = jnp.zeros((Bsz, G, hg, P, N), f32)
+    final_state, ys = jax.lax.scan(jax.checkpoint(body), state0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bsz, S, H, P)
+    return y.astype(x.dtype), final_state
+
+
+def mamba_forward(p, x, ssm, compute_dtype=jnp.bfloat16):
+    """Full-sequence forward.  x: (B,S,d) -> (y, final_state, conv_state)."""
+    B, S, d = x.shape
+    d_inner = ssm.expand * d
+    H = d_inner // ssm.head_dim
+    G, N = ssm.n_groups, ssm.d_state
+    z = layers.linear(p["z_proj"], x, compute_dtype)
+    xbc_raw = layers.linear(p["xbc_proj"], x, compute_dtype)
+    K = ssm.d_conv
+    if S >= K - 1:
+        conv_state = xbc_raw[:, S - (K - 1):]
+    else:
+        conv_state = jnp.pad(xbc_raw, ((0, 0), (K - 1 - S, 0), (0, 0)))
+    xbc = jax.nn.silu(_causal_conv(constrain(xbc_raw, "mamba_xbc"),
+                                   p["conv_w"], p["conv_b"]))
+    xs = xbc[..., :d_inner]
+    Bmat = xbc[..., d_inner:d_inner + G * N].reshape(B, S, G, N)
+    Cmat = xbc[..., d_inner + G * N:].reshape(B, S, G, N)
+    dt = jax.nn.softplus(
+        layers.linear(p["dt_proj"], x, compute_dtype).astype(jnp.float32)
+        + p["dt_bias"])
+    A = -jnp.exp(p["a_log"])
+    chunk = min(ssm.chunk_size, S)
+    y, final_state = ssd_chunked(
+        constrain(xs.reshape(B, S, H, ssm.head_dim), "ssm_x"),
+        dt, A, Bmat, Cmat, chunk)
+    y = y + (p["D"].reshape(H, 1) * xs.reshape(B, S, H, ssm.head_dim)
+             .astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(B, S, d_inner)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return (layers.linear(p["out_proj"], y, compute_dtype), final_state,
+            conv_state)
+
+
+def mamba_decode_step(p, x, state, conv_state, ssm,
+                      compute_dtype=jnp.bfloat16):
+    """One-token step.  x: (B,d); state: (B,G,hg,P,N); conv_state: (B,K-1,ch).
+
+    Returns (y, new_state, new_conv_state).
+    """
+    B, d = x.shape
+    d_inner = ssm.expand * d
+    H = d_inner // ssm.head_dim
+    G, N, P = ssm.n_groups, ssm.d_state, ssm.head_dim
+    hg = H // G
+    z = layers.linear(p["z_proj"], x, compute_dtype)
+    xbc = layers.linear(p["xbc_proj"], x, compute_dtype)      # (B,ch)
+    window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,ch)
+    conv_out = jnp.einsum("bkc,kc->bc", window,
+                          p["conv_w"].astype(window.dtype))
+    xbc = jax.nn.silu(conv_out + p["conv_b"].astype(conv_out.dtype))
+    new_conv_state = window[:, 1:]
+    xs = xbc[..., :d_inner].reshape(B, G, hg, P).astype(jnp.float32)
+    Bmat = xbc[..., d_inner:d_inner + G * N].reshape(B, G, N).astype(jnp.float32)
+    Cmat = xbc[..., d_inner + G * N:].reshape(B, G, N).astype(jnp.float32)
+    dt = jax.nn.softplus(
+        layers.linear(p["dt_proj"], x, compute_dtype).astype(jnp.float32)
+        + p["dt_bias"]).reshape(B, G, hg)
+    A = -jnp.exp(p["a_log"]).reshape(G, hg)
+    dec = jnp.exp(dt * A)                                     # (B,G,hg)
+    upd = jnp.einsum("bgn,bgh,bghp->bghpn", Bmat, dt, xs)
+    new_state = state * dec[..., None, None] + upd
+    y = jnp.einsum("bgn,bghpn->bghp", Cmat, new_state)
+    y = y + p["D"].reshape(G, hg, 1) * xs
+    y = y.reshape(B, d_inner).astype(compute_dtype)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
+    return layers.linear(p["out_proj"], y, compute_dtype), new_state, \
+        new_conv_state

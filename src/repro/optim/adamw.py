@@ -1,0 +1,87 @@
+"""AdamW with global-norm clipping and warmup-cosine schedule (pure JAX).
+
+Moments can be stored in bfloat16 (``moment_dtype``) — at 398B parameters the
+fp32 m/v pair alone is 3.2TB, so the giant configs run bf16 moments
+(distributed-optimization trick #1; see DESIGN.md §Memory budget).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    moment_dtype: str = "float32"   # "bfloat16" for the giant configs
+    # Keep a sharded fp32 master copy and store the live params in bf16:
+    # halves every FSDP weight all-gather and kills fp32 weight copies on
+    # the compute path (used for >=50B models; see DESIGN.md §Memory).
+    master_weights: bool = False
+
+
+def lr_schedule(cfg: OptConfig, step):
+    step = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+
+
+def adamw_init(params, cfg: OptConfig):
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    state = {"m": jax.tree.map(zeros, params),
+             "v": jax.tree.map(zeros, params),
+             "step": jnp.zeros((), jnp.int32)}
+    if cfg.master_weights:
+        state["master"] = jax.tree.map(
+            lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def _global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    """Returns (new_params, new_state, stats)."""
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    masters = state.get("master", params)
+
+    def upd(p, w, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        w32 = w.astype(jnp.float32)
+        m32, v32 = m.astype(jnp.float32), v.astype(jnp.float32)
+        m_new = b1 * m32 + (1 - b1) * g
+        v_new = b2 * v32 + (1 - b2) * jnp.square(g)
+        update = (m_new / bc1) / (jnp.sqrt(v_new / bc2) + cfg.eps)
+        wd = cfg.weight_decay if p.ndim >= 2 else 0.0
+        w_new = w32 - lr * (update + wd * w32)
+        return (w_new.astype(p.dtype), w_new.astype(w.dtype),
+                m_new.astype(m.dtype), v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, masters, grads, state["m"], state["v"])
+    new_params, new_master, new_m, new_v = jax.tree_util.tree_transpose(
+        jax.tree.structure(params), jax.tree.structure((0, 0, 0, 0)), out)
+    new_state = {"m": new_m, "v": new_v, "step": step}
+    if "master" in state:
+        new_state["master"] = new_master
+    return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

@@ -1,0 +1,56 @@
+"""Int8 error-feedback gradient compression for the DP all-reduce.
+
+Distributed-optimization trick for 1000+-node scale: data-parallel gradient
+traffic dominates the inter-pod links (the 'pod' axis of the multi-pod
+mesh), and int8 quantization cuts it 4x vs fp32 (2x vs bf16).  Per-tensor
+symmetric scales; the quantization residual is carried to the next step
+(error feedback), which keeps SGD/Adam convergence unbiased in practice
+(1-bit Adam / EF-SGD lineage).
+
+Usage inside a train step:
+    q, scales, new_err = compress(grads, err)
+    q = jax.lax.pmean(q, axis)        # 4x cheaper collective
+    grads = decompress(q, scales)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def init_error(params):
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.bfloat16), params)
+
+
+def _compress_leaf(g, e):
+    g = g.astype(jnp.float32) + e.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g / scale), -127, 127).astype(jnp.int8)
+    err = (g - q.astype(jnp.float32) * scale).astype(jnp.bfloat16)
+    return q, scale, err
+
+
+def compress(grads, error):
+    """-> (int8 tree, scale tree, new error tree)."""
+    out = jax.tree.map(_compress_leaf, grads, error)
+    struct = jax.tree.structure(grads)
+    q, s, e = jax.tree_util.tree_transpose(
+        struct, jax.tree.structure((0, 0, 0)), out)
+    return q, s, e
+
+
+def decompress(q, scales, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda qq, ss: (qq.astype(jnp.float32) * ss).astype(dtype),
+        q, scales)
+
+
+def compressed_allreduce(grads, error, axis_name: str):
+    """Error-feedback int8 all-reduce over `axis_name` (inside shard_map)."""
+    q, s, e = compress(grads, error)
+    summed = jax.tree.map(
+        lambda qq: jax.lax.psum(qq.astype(jnp.int32), axis_name), q)
+    n = jax.lax.psum(1, axis_name)
+    mean = jax.tree.map(
+        lambda qq, ss: (qq.astype(jnp.float32) * ss / n), summed, s)
+    return mean, e

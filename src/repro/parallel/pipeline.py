@@ -1,0 +1,75 @@
+"""GPipe-style pipeline parallelism over the 'pod' mesh axis (shard_map).
+
+Inter-pod ICI is the thinnest link in a multi-pod deployment, so the 'pod'
+axis runs pipeline stages: each pod holds a contiguous block of layers and
+microbatch activations flow pod->pod via collective_permute.  The stage
+count is planned by core.cluster_pipeline — the paper's Eq.(6)/(7) applied
+at cluster scale (see DESIGN.md §Beyond).
+
+``gpipe`` is the generic schedule: fn is one stage's forward; stage
+parameters are sharded over `axis_name` (stage i's params live on shard i).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def gpipe(fn, stage_params, x_micro, *, axis_name: str):
+    """Run a P-stage pipeline inside shard_map.
+
+    fn: (params_i, x) -> y, same shape.  stage_params: params of THIS shard's
+    stage (shard_map has already split the stage dim).  x_micro: (M, mb, d)
+    microbatches (replicated input).  Returns (M, mb, d) outputs (valid on
+    every shard after the final broadcast).
+    """
+    n_stages = jax.lax.psum(1, axis_name)
+    stage = jax.lax.axis_index(axis_name)
+    M = x_micro.shape[0]
+    perm = [(i, i + 1) for i in range(n_stages - 1)]
+
+    def tick(t, carry):
+        outputs, recv = carry
+        # stage 0 injects microbatch t (clamped; masked below)
+        t_in = jnp.minimum(t, M - 1)
+        inject = (stage == 0) & (t < M)
+        x_in = jnp.where(inject, x_micro[t_in], recv)
+        y = fn(stage_params, x_in)
+        # the last stage commits its result at tick t to slot t-(P-1)
+        out_slot = t - (n_stages - 1)
+        valid = (stage == n_stages - 1) & (out_slot >= 0)
+        outputs = jax.lax.cond(
+            valid,
+            lambda o: jax.lax.dynamic_update_index_in_dim(
+                o, y.astype(o.dtype), jnp.maximum(out_slot, 0), 0),
+            lambda o: o, outputs)
+        recv = jax.lax.ppermute(y, axis_name, perm)
+        return outputs, recv
+
+    outputs = jnp.zeros_like(x_micro)
+    recv = jnp.zeros_like(x_micro[0])
+    outputs, _ = jax.lax.fori_loop(0, M + n_stages - 1, tick,
+                                   (outputs, recv))
+    # broadcast final outputs from the last stage to every shard
+    mask = (stage == n_stages - 1).astype(outputs.dtype)
+    return jax.lax.psum(outputs * mask, axis_name)
+
+
+def make_pipelined(fn, mesh, *, axis_name: str = "pod",
+                   stage_param_spec=P("pod"), x_spec=P()):
+    """shard_map wrapper: stage params stacked on axis 0 (one per pod).
+
+    `stage_param_spec` is a prefix spec applied to every stage-param leaf.
+    """
+    from jax.experimental.shard_map import shard_map
+
+    def inner(stage_params, x_micro):
+        sp = jax.tree.map(lambda a: a[0], stage_params)  # this shard's stage
+        return gpipe(fn, sp, x_micro, axis_name=axis_name)
+
+    return shard_map(inner, mesh=mesh,
+                     in_specs=(stage_param_spec, x_spec),
+                     out_specs=x_spec, check_rep=False)

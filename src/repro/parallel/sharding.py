@@ -1,0 +1,268 @@
+"""Sharding rules: logical param/activation axes -> mesh PartitionSpecs.
+
+Mesh axes:
+  ``pod``   — inter-pod axis (multi-pod mesh only); extra data-parallel dim
+              in the baseline config, pipeline dim in parallel.pipeline.
+  ``data``  — intra-pod FSDP/data axis (batch + parameter 'in' dims).
+  ``model`` — tensor-parallel axis (heads / ff / vocab 'out' dims).
+
+Parameters use FSDP-over-'data' + TP-over-'model' (MaxText-style 2D):
+every weight matrix shards its contraction dim over 'data' and its output
+dim over 'model', so per-chip parameter bytes scale 1/(data*model).
+"""
+from __future__ import annotations
+
+import contextvars
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# helpers
+
+def batch_axes(mesh: Mesh):
+    """The axes the global batch shards over."""
+    return ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+
+def all_axes(mesh: Mesh):
+    return tuple(mesh.axis_names)
+
+
+def _divisible(dim: int, mesh: Mesh, axes) -> bool:
+    if axes is None:
+        return True
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = int(np.prod([mesh.shape[a] for a in axes]))
+    return dim % n == 0
+
+
+def _maybe(dim: int, mesh: Mesh, axes):
+    """Use `axes` for this dim only if it divides evenly, else replicate."""
+    return axes if _divisible(dim, mesh, axes) else None
+
+
+# ---------------------------------------------------------------------------
+# parameter rules, keyed by (parent, leaf) path suffix
+
+# (in, out) 2D GEMM weights: in->data (FSDP), out->model (TP)
+_IN_OUT = {"wq", "wk", "wv", "wi_gate", "wi_up", "wi", "z_proj", "xbc_proj",
+           "img_proj", "audio_proj"}
+# (in, out) with in->model (TP reduce), out->data
+_OUT_IN = {"wo", "out_proj"}
+# module-level toggle set by param_pspec_tree per call (E % tp == 0)
+_MOE_EP = False
+
+
+def _param_spec_parts(path_names, leaf) -> tuple:
+    """PartitionSpec entries for the *trailing* (un-stacked) dims of a leaf."""
+    names = [str(n) for n in path_names]
+    parent = names[-2] if len(names) >= 2 else ""
+    name = names[-1]
+    nd = leaf.ndim
+    if name == "table":                        # embedding (vocab, d)
+        return ("model", "data")
+    if name == "b":
+        return (_spec_bias(parent),)
+    if parent in _IN_OUT and name == "w":
+        return ("data", "model")
+    if parent in _OUT_IN and name == "w":
+        return ("model", "data")
+    if parent == "dt_proj" and name == "w":
+        return ("data", "model")
+    if parent == "lm_head" and name == "w":
+        return ("data", "model")
+    if name == "router":
+        return ("data", None)
+    # MoE expert banks are leaves named wi_*/wo under "moe": trailing dims
+    # are (E, d, ff) / (E, ff, d); any leading scan-stack dim pads with None.
+    # Expert-parallel (E over 'model') when E divides the TP degree —
+    # removes the per-expert full-weight gather/grad buffers; falls back to
+    # tensor-parallel ff sharding otherwise (param_pspec_tree drops
+    # non-dividing axes, so the TP entry survives as the fallback).
+    if name in ("wi_gate", "wi_up") and parent == "moe":
+        return ("model", "data", None) if _MOE_EP else (None, "data", "model")
+    if name == "wo" and parent == "moe":
+        return ("model", None, "data") if _MOE_EP else (None, "model", "data")
+    if name == "conv_w":
+        return (None, "model")
+    if name == "conv_b":
+        return ("model",)
+    return (None,) * nd
+
+
+def _spec_bias(parent: str):
+    if parent in _IN_OUT or parent == "dt_proj" or parent == "lm_head":
+        return "model"
+    return None
+
+
+def param_pspec_tree(params, mesh: Mesh, stacked_prefixes=("blocks",
+                                                           "enc_blocks"),
+                     moe_experts: int = 0):
+    """PartitionSpec pytree for a parameter pytree.
+
+    Leaves under a stacked prefix (scan-over-layers stacking) get a leading
+    ``None`` for the layer dim.  Any axis that does not divide evenly by its
+    mesh axes falls back to replication — configs pad vocab so the big
+    tables always shard.  moe_experts (when the model has MoE layers)
+    selects expert-parallel vs tensor-parallel expert sharding.
+    """
+    global _MOE_EP
+    _MOE_EP = bool(moe_experts) and _divisible(moe_experts, mesh, "model")
+
+    def spec_for(path, leaf):
+        names = [getattr(p, "key", getattr(p, "name", p)) for p in path]
+        names = [str(n) for n in names]
+        stacked = any(n in stacked_prefixes for n in names)
+        parts = list(_param_spec_parts(names, leaf))
+        offset = leaf.ndim - len(parts)
+        if offset < 0:
+            parts = parts[-leaf.ndim:] if leaf.ndim else []
+            offset = 0
+        full = [None] * offset + parts
+        if stacked and full and full[0] is None:
+            pass  # leading stack dim already None
+        # drop shardings that don't divide
+        for i, ax in enumerate(full):
+            if ax is not None and not _divisible(leaf.shape[i], mesh, ax):
+                full[i] = None
+        return P(*full)
+
+    return jax.tree_util.tree_map_with_path(spec_for, params)
+
+
+def named(tree_of_pspecs, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_of_pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# activation / input / cache specs
+
+def token_pspec(mesh: Mesh, global_batch: int):
+    ax = batch_axes(mesh)
+    return P(_maybe(global_batch, mesh, ax), None)
+
+
+def activation_pspec(mesh: Mesh, global_batch: int):
+    ax = batch_axes(mesh)
+    return P(_maybe(global_batch, mesh, ax), None, None)
+
+
+def kv_cache_pspec(mesh: Mesh, global_batch: int, cache_len: int,
+                   *, stacked: bool = True):
+    """(n_super, B, S, KV, hd).  Batch over data axes when divisible, else
+    shard the sequence dim over everything (long-context decode)."""
+    bax = _maybe(global_batch, mesh, batch_axes(mesh))
+    if bax is not None and global_batch >= int(np.prod(
+            [mesh.shape[a] for a in batch_axes(mesh)])):
+        seq = _maybe(cache_len, mesh, "model")
+        spec = (bax, seq, None, None)
+    else:
+        seq = _maybe(cache_len, mesh, all_axes(mesh))
+        spec = (None, seq, None, None)
+    return P(*((None,) + spec if stacked else spec))
+
+
+def ssm_state_pspec(mesh: Mesh, global_batch: int, heads_per_group: int,
+                    *, stacked: bool = True):
+    """(n_super, B, G, hg, P, N)."""
+    bax = _maybe(global_batch, mesh, batch_axes(mesh))
+    hax = _maybe(heads_per_group, mesh, "model")
+    spec = (bax, None, hax, None, None)
+    return P(*((None,) + spec if stacked else spec))
+
+
+def conv_state_pspec(mesh: Mesh, global_batch: int, channels: int,
+                     *, stacked: bool = True):
+    """(n_super, B, K-1, ch)."""
+    bax = _maybe(global_batch, mesh, batch_axes(mesh))
+    cax = _maybe(channels, mesh, "model")
+    spec = (bax, None, cax)
+    return P(*((None,) + spec if stacked else spec))
+
+
+# ---------------------------------------------------------------------------
+# activation sharding constraints (contextvar-scoped so model code stays
+# mesh-agnostic; a no-op outside dry-run/launcher contexts)
+
+_ACT_RULES: contextvars.ContextVar = contextvars.ContextVar(
+    "activation_rules", default=None)
+
+
+def activation_rules(mesh: Mesh, global_batch: int, cfg=None,
+                     kind: str = "train"):
+    """Default activation constraint set for a (mesh, batch[, model cfg]).
+
+    For full-sequence passes (train/prefill) hidden states are
+    sequence-sharded over 'model' between blocks (Megatron-SP): activations
+    per chip scale 1/(data*model) and XLA inserts the all-gather /
+    reduce-scatter pairs around each TP matmul.  Decode (S=1) keeps hidden
+    replicated over 'model'.
+    """
+    bax = _maybe(global_batch, mesh, batch_axes(mesh))
+    seq = "model" if kind != "decode" else None
+    rules = {
+        "hidden": P(bax, seq, None),             # (B, S, d)
+        "logits": P(bax, None, "model"),         # (B, S, vocab)
+        "micro_batch": P(None, bax, None),       # (n_micro, B/n, S)
+        # sequence-sharded attention (Megatron-SP style): q rows shard over
+        # 'model', KV replicated across it — robust for any H/KV count
+        "attn_qkv": P(bax, None, None, None),          # (B, T, KV, hd) k/v
+        "attn_q_seq": P(bax, "model", None, None, None),   # (B,S,KV,g,d)
+        "attn_stat_seq": P(bax, "model", None, None),      # (B,S,KV,g)
+        "attn_scores_seq": P(bax, None, None, "model", None),  # (B,KV,g,S,T)
+    }
+    if cfg is not None:
+        mdl = "model"
+        ssm = getattr(cfg, "ssm", None)
+        if ssm is not None:
+            H = cfg.ssm_heads
+            conv_ch = cfg.d_inner + 2 * ssm.n_groups * ssm.d_state
+            rules["mamba_xbc"] = P(bax, None, _maybe(conv_ch, mesh, mdl))
+            rules["ssm_x"] = P(bax, None, _maybe(H, mesh, mdl), None)
+        if getattr(cfg, "moe", None) is not None:
+            E = cfg.moe.num_experts
+            if _divisible(E, mesh, mdl):
+                # expert-parallel: E over 'model'; dispatch gathers become
+                # all-to-alls; per-expert grad buffers are E-sharded
+                rules["moe_buf4"] = P(bax, mdl, None, None)
+                rules["moe_h4"] = P(bax, mdl, None, None)
+            else:
+                # TP fallback (E doesn't divide the TP degree, e.g. 8 on 16):
+                # (G,E,cap,ff) MUST split ff over 'model' or XLA replicates
+                # the whole expert GEMM across the TP axis
+                rules["moe_buf4"] = P(bax, None, None, None)
+                rules["moe_h4"] = P(bax, None, None, "model")
+    return rules
+
+
+class use_activation_rules:
+    def __init__(self, rules):
+        self.rules = rules
+        self._token = None
+
+    def __enter__(self):
+        self._token = _ACT_RULES.set(self.rules)
+        return self
+
+    def __exit__(self, *exc):
+        _ACT_RULES.reset(self._token)
+        return False
+
+
+def constrain(x, name: str):
+    """Apply a named activation constraint if rules are active."""
+    rules = _ACT_RULES.get()
+    if not rules or name not in rules:
+        return x
+    spec = rules[name]
+    if spec is None:
+        return x
+    parts = list(spec) + [None] * (x.ndim - len(spec))
+    return jax.lax.with_sharding_constraint(x, P(*parts[:x.ndim]))

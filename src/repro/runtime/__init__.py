@@ -1,0 +1,2 @@
+from repro.runtime.fault import FaultToleranceManager, HeartbeatMonitor  # noqa: F401
+from repro.runtime.elastic import ElasticState, replan_mesh  # noqa: F401

@@ -1,0 +1,49 @@
+"""Elastic scaling: re-plan the mesh and re-shard state on fleet changes.
+
+When hosts die or join, the launcher rebuilds the largest valid mesh from
+the survivors and *re-shards in place*: parameters keep their logical
+PartitionSpecs, so moving to a new mesh is jax.device_put with the new
+NamedSharding (XLA emits the minimal resharding collectives).  The data
+pipeline re-partitions by (host_index, host_count) — deterministic step
+indexing means no sample is lost or duplicated across the transition.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.parallel import sharding as shd
+
+
+@dataclass(frozen=True)
+class ElasticState:
+    n_devices: int
+    mesh_shape: tuple
+    axis_names: tuple
+
+
+def largest_mesh_shape(n_devices: int, model_parallel: int) -> tuple:
+    """Largest (data, model) grid with fixed TP degree."""
+    model = min(model_parallel, n_devices)
+    while n_devices % model:
+        model -= 1
+    return (n_devices // model, model)
+
+
+def replan_mesh(devices=None, model_parallel: int = 1):
+    devices = devices if devices is not None else jax.devices()
+    n = len(devices)
+    data, model = largest_mesh_shape(n, model_parallel)
+    dev_grid = np.asarray(devices[:data * model]).reshape(data, model)
+    mesh = jax.sharding.Mesh(dev_grid, ("data", "model"))
+    return mesh, ElasticState(n, (data, model), ("data", "model"))
+
+
+def reshard(tree, pspecs, mesh):
+    """Move a pytree onto `mesh` under its logical PartitionSpecs."""
+    shardings = shd.named(pspecs, mesh)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, s), tree, shardings,
+        is_leaf=lambda x: hasattr(x, "shape"))

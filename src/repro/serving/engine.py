@@ -1,0 +1,124 @@
+"""Batched serving engine: continuous-batching prefill + decode.
+
+A fixed pool of `max_batch` sequence slots; requests occupy a free slot,
+prefill fills the slot's KV cache (per-slot, via the model's prefill path
+on a right-padded batch), and a single fused decode step advances every
+active slot each tick.  Slots free on EOS/max-tokens and are immediately
+refilled from the queue (continuous batching).
+
+Sampling: greedy or temperature; logits come back fp32 from the model.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import lm
+
+
+@dataclass
+class Request:
+    prompt: list
+    max_new_tokens: int = 16
+    temperature: float = 0.0
+    rid: int = 0
+    out_tokens: list = field(default_factory=list)
+    done: bool = False
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_batch: int = 4
+    max_seq: int = 256
+    eos_id: int = -1           # -1: never stops early
+    seed: int = 0
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        self.cfg = cfg
+        self.params = params
+        self.sc = serve_cfg
+        B, S = serve_cfg.max_batch, serve_cfg.max_seq
+        self.cache = lm.init_cache(cfg, B, S)
+        self.pos = np.zeros(B, np.int32)        # next position per slot
+        self.active: List[Optional[Request]] = [None] * B
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(serve_cfg.seed)
+        self._decode = jax.jit(
+            lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
+
+    # ------------------------------------------------------------- intake
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _admit(self):
+        for slot in range(self.sc.max_batch):
+            if self.active[slot] is None and self.queue:
+                req = self.queue.pop(0)
+                self.active[slot] = req
+                # prefill token-by-token through the decode path: exact and
+                # cache-layout-identical.  Other slots' rows write garbage
+                # at their own NEXT position, which their next real decode
+                # overwrites before it is ever attended to (masked by pos).
+                for i, t in enumerate(req.prompt[:-1]):
+                    self._step_slot(slot, t, i)
+                self.pos[slot] = len(req.prompt) - 1
+                req._next_token = req.prompt[-1]
+
+    def _step_slot(self, slot, token, pos):
+        toks = np.zeros(self.sc.max_batch, np.int32)
+        toks[slot] = token
+        pos_v = self.pos.copy()
+        pos_v[slot] = pos
+        _, self.cache = self._decode(self.params, self.cache,
+                                     jnp.asarray(toks), jnp.asarray(pos_v))
+
+    # ------------------------------------------------------------- decode
+    def _sample(self, logits, temps):
+        greedy = jnp.argmax(logits, axis=-1)
+        self.key, sub = jax.random.split(self.key)
+        sampled = jax.random.categorical(
+            sub, logits / jnp.maximum(temps[:, None], 1e-6))
+        return np.asarray(jnp.where(temps > 0, sampled, greedy))
+
+    def step(self):
+        """One decode tick for all active slots (per-slot positions)."""
+        self._admit()
+        if not any(self.active):
+            return False
+        toks = np.zeros(self.sc.max_batch, np.int32)
+        temps = np.zeros(self.sc.max_batch, np.float32)
+        for slot, req in enumerate(self.active):
+            if req is not None:
+                toks[slot] = req._next_token
+                temps[slot] = req.temperature
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks),
+                                          jnp.asarray(self.pos))
+        nxt = self._sample(logits, jnp.asarray(temps))
+        for slot, req in enumerate(self.active):
+            if req is None:
+                continue
+            tok = int(nxt[slot])
+            req.out_tokens.append(tok)
+            req._next_token = tok
+            self.pos[slot] += 1
+            if (tok == self.sc.eos_id
+                    or len(req.out_tokens) >= req.max_new_tokens
+                    or self.pos[slot] >= self.sc.max_seq - 1):
+                req.done = True
+                self.active[slot] = None
+        return True
+
+    def run_to_completion(self, max_ticks: int = 10000):
+        ticks = 0
+        while (self.queue or any(self.active)) and ticks < max_ticks:
+            self.step()
+            ticks += 1
+        return ticks

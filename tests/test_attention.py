@@ -1,0 +1,78 @@
+"""nn.attention: chunked==dense, GQA, windows, decode-vs-prefill parity."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.nn import attention as att
+
+
+def _rand(shape, seed=0, dtype=jnp.float32):
+    return jnp.asarray(np.random.RandomState(seed).randn(*shape), dtype)
+
+
+@pytest.mark.parametrize("window", [0, 48])
+@pytest.mark.parametrize("gqa", [(8, 8), (8, 2), (4, 1)])
+def test_chunked_equals_dense(gqa, window):
+    H, KV = gqa
+    B, S, D = 2, 128, 32
+    q = _rand((B, S, H, D), 1)
+    k = _rand((B, S, KV, D), 2)
+    v = _rand((B, S, KV, D), 3)
+    dense = att.dense_attention(q, k, v, causal=True, window=window)
+    chunk = att.chunked_attention(q, k, v, causal=True, window=window,
+                                  kv_chunk=32)
+    np.testing.assert_allclose(np.float32(chunk), np.float32(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_noncausal_chunked():
+    B, S, T, H, KV, D = 1, 64, 96, 4, 4, 16
+    q, k, v = _rand((B, S, H, D), 1), _rand((B, T, KV, D), 2), \
+        _rand((B, T, KV, D), 3)
+    dense = att.dense_attention(q, k, v, causal=False)
+    chunk = att.chunked_attention(q, k, v, causal=False, kv_chunk=32)
+    np.testing.assert_allclose(np.float32(chunk), np.float32(dense),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_decode_matches_dense_row():
+    """decode_attention at position p == row p of full dense attention."""
+    B, S, H, KV, D = 2, 32, 4, 2, 16
+    q_full = _rand((B, S, H, D), 1)
+    k = _rand((B, S, KV, D), 2)
+    v = _rand((B, S, KV, D), 3)
+    full = att.dense_attention(q_full, k, v, causal=True)
+    for pos in (0, 7, 31):
+        out = att.decode_attention(q_full[:, pos:pos + 1], k, v,
+                                   jnp.int32(pos))
+        np.testing.assert_allclose(np.float32(out[:, 0]),
+                                   np.float32(full[:, pos]),
+                                   rtol=2e-4, atol=2e-4)
+
+
+def test_decode_ring_buffer_window():
+    """SWA ring cache gives the same result as a windowed dense row."""
+    B, S, H, KV, D, W = 1, 64, 2, 2, 16, 16
+    q_full = _rand((B, S, H, D), 5)
+    k = _rand((B, S, KV, D), 6)
+    v = _rand((B, S, KV, D), 7)
+    full = att.dense_attention(q_full, k, v, causal=True, window=W)
+    pos = 40
+    # build the ring cache: slot i holds position p where p % W == i
+    ring_k = np.zeros((B, W, KV, D), np.float32)
+    ring_v = np.zeros((B, W, KV, D), np.float32)
+    for p in range(pos - W + 1, pos + 1):
+        ring_k[:, p % W] = np.asarray(k[:, p])
+        ring_v[:, p % W] = np.asarray(v[:, p])
+    out = att.decode_attention(q_full[:, pos:pos + 1], jnp.asarray(ring_k),
+                               jnp.asarray(ring_v), jnp.int32(pos), window=W)
+    np.testing.assert_allclose(np.float32(out[:, 0]), np.float32(full[:, pos]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_fit_chunk():
+    assert att.fit_chunk(1600, 1024) == 800
+    assert att.fit_chunk(4096, 1024) == 1024
+    assert att.fit_chunk(7, 4) == 1
+    assert att.fit_chunk(96, 128) == 96

@@ -1,0 +1,82 @@
+"""Eq.(1)-(7) latency/clock model properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import timing
+from repro.core.timing import TimingParams
+
+
+def test_eq1_is_eq3_at_k1():
+    for (R, C, T) in [(128, 128, 196), (16, 8, 3), (256, 256, 49)]:
+        assert timing.latency_cycles(R, C, T, 1) == \
+            timing.latency_cycles_conventional(R, C, T)
+
+
+def test_paper_fig5_anchors():
+    # layer 20 of ResNet-34: (M,N,T)=(256,2304,196) -> k=2 on the shipped
+    # design {1,2,4}; layer 28 (512,2304,49) -> k=4  (paper §III-C / §IV)
+    assert timing.best_k(256, 2304, 196, 132, 132) == 2
+    assert timing.best_k(512, 2304, 49, 132, 132) == 4
+
+
+def test_khat_structure():
+    tp = TimingParams()
+    # k_hat grows when T shrinks (paper: late CNN layers prefer deeper
+    # collapse) and when the SA grows
+    assert timing.k_hat(128, 128, 49, tp) > timing.k_hat(128, 128, 196, tp)
+    assert timing.k_hat(256, 256, 196, tp) > timing.k_hat(128, 128, 196, tp)
+
+
+def test_clock_table_matches_paper():
+    tp = TimingParams()
+    assert tp.clock_ghz(1) == pytest.approx(1.8)
+    assert tp.clock_ghz(2) == pytest.approx(1.7)
+    assert tp.clock_ghz(4) == pytest.approx(1.4)
+    # linear fit stays within 3% of the table
+    lin = TimingParams(mode="linear")
+    for k in (1, 2, 4):
+        assert lin.clock_period_ps(k) == pytest.approx(
+            tp.clock_period_ps(k), rel=0.03)
+
+
+@settings(max_examples=200, deadline=None)
+@given(R=st.sampled_from([16, 32, 64, 128, 256]),
+       C=st.sampled_from([16, 32, 64, 128, 256]),
+       T=st.integers(1, 4096), k=st.sampled_from([1, 2, 4]))
+def test_cycles_positive_and_monotone_in_k(R, C, T, k):
+    c1 = timing.latency_cycles(R, C, T, 1)
+    ck = timing.latency_cycles(R, C, T, k)
+    assert 0 < ck <= c1              # collapsing never adds cycles
+    if k > 1:
+        assert ck < c1 or (R // k == R and C // k == C)
+
+
+@settings(max_examples=100, deadline=None)
+@given(M=st.integers(1, 4096), N=st.integers(1, 8192), T=st.integers(1, 2048))
+def test_best_k_is_argmin(M, N, T):
+    tp = TimingParams()
+    k = timing.best_k(M, N, T, 128, 128, tp)
+    times = {kk: timing.t_abs_ps(M, N, T, 128, 128, kk, tp)
+             for kk in tp.supported_k}
+    assert times[k] == min(times.values())
+
+
+@settings(max_examples=50, deadline=None)
+@given(T=st.integers(2, 4096))
+def test_khat_matches_continuous_optimum(T):
+    """Eq.(7) equals the numeric argmin of Eq.(6) over continuous k."""
+    tp = TimingParams(mode="linear")
+    R = C = 128
+    kh = timing.k_hat(R, C, T, tp)
+
+    def t_abs(k):
+        cyc = R + R / k + C / k + T - 2
+        return cyc * (tp.d_base_ps + k * tp.d_inc_ps)
+
+    # golden-section-lite: scan a fine grid
+    ks = [1 + i * 0.01 for i in range(1, 1600)]
+    k_num = min(ks, key=t_abs)
+    if 1.05 < kh < 15.5:
+        assert abs(k_num - kh) / kh < 0.02

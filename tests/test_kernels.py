@@ -1,0 +1,75 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), shape/dtype sweeps."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.arrayflex_gemm import arrayflex_gemm
+from repro.kernels.flash_attention import flash_attention
+
+TOL = {jnp.float32: 1e-3, jnp.bfloat16: 2e-2}
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("mkn", [(256, 512, 256), (128, 1024, 384),
+                                 (64, 256, 128)])
+@pytest.mark.parametrize("k_collapse", [1, 2, 4])
+def test_gemm_vs_ref(mkn, dtype, k_collapse):
+    M, K, N = mkn
+    rng = np.random.RandomState(M + K + N + k_collapse)
+    x = jnp.asarray(rng.randn(M, K), dtype)
+    w = jnp.asarray(rng.randn(K, N), dtype)
+    got = arrayflex_gemm(x, w, bk=64, k_collapse=k_collapse)
+    want = ref.gemm_ref(x, w)
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+def test_gemm_collapse_invariance():
+    """Property: results identical across collapse depths (same math)."""
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(128, 512), jnp.float32)
+    w = jnp.asarray(rng.randn(512, 128), jnp.float32)
+    outs = [np.float32(arrayflex_gemm(x, w, bk=64, k_collapse=k))
+            for k in (1, 2, 4)]
+    np.testing.assert_allclose(outs[0], outs[1], rtol=1e-5, atol=1e-4)
+    np.testing.assert_allclose(outs[0], outs[2], rtol=1e-5, atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("cfg", [
+    dict(BH=4, S=256, T=256, D=64, causal=True, window=0),
+    dict(BH=2, S=128, T=256, D=64, causal=False, window=0),
+    dict(BH=3, S=256, T=256, D=64, causal=True, window=96),
+    dict(BH=2, S=256, T=256, D=128, causal=True, window=0),
+])
+def test_flash_vs_ref(cfg, dtype):
+    rng = np.random.RandomState(cfg["S"] + cfg["D"])
+    q = jnp.asarray(rng.randn(cfg["BH"], cfg["S"], cfg["D"]), dtype)
+    k = jnp.asarray(rng.randn(cfg["BH"], cfg["T"], cfg["D"]), dtype)
+    v = jnp.asarray(rng.randn(cfg["BH"], cfg["T"], cfg["D"]), dtype)
+    got = flash_attention(q, k, v, causal=cfg["causal"],
+                          window=cfg["window"], bq=64, kv_chunk=64)
+    want = ref.attention_ref(q, k, v, causal=cfg["causal"],
+                             window=cfg["window"])
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=TOL[dtype], atol=TOL[dtype])
+
+
+def test_planner_driven_wrappers():
+    rng = np.random.RandomState(3)
+    x = jnp.asarray(rng.randn(4, 64, 256), jnp.float32)   # leading dims
+    w = jnp.asarray(rng.randn(256, 128), jnp.float32)
+    got = ops.arrayflex_matmul(x, w)
+    want = ref.gemm_ref(x.reshape(-1, 256), w).reshape(4, 64, 128)
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-3, atol=1e-3)
+    assert ops.plan_collapse(128, 256, 64) in (1, 2, 4)
+
+    q = jnp.asarray(rng.randn(2, 128, 64), jnp.float32)
+    k = jnp.asarray(rng.randn(2, 320, 64), jnp.float32)   # non-pow2 T
+    v = jnp.asarray(rng.randn(2, 320, 64), jnp.float32)
+    got = ops.attention(q, k, v, causal=False)
+    want = ref.attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-3, atol=1e-3)

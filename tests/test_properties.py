@@ -1,0 +1,92 @@
+"""Hypothesis property tests on framework invariants."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import layers
+from repro.core import planner
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16), shift=st.integers(0, 64))
+def test_rope_relative_position_invariance(seed, shift):
+    """RoPE inner products depend only on relative position: shifting both
+    q and k positions by the same offset preserves q·k."""
+    rng = np.random.RandomState(seed)
+    q = jnp.asarray(rng.randn(1, 1, 1, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(1, 1, 1, 32), jnp.float32)
+    pos_q = jnp.asarray([[5]])
+    pos_k = jnp.asarray([[2]])
+    dot0 = float(jnp.sum(layers.apply_rope(q, pos_q, 1e4)
+                         * layers.apply_rope(k, pos_k, 1e4)))
+    dot1 = float(jnp.sum(layers.apply_rope(q, pos_q + shift, 1e4)
+                         * layers.apply_rope(k, pos_k + shift, 1e4)))
+    assert abs(dot0 - dot1) < 1e-3 * (1.0 + abs(dot0))
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_rope_preserves_norm(seed):
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, 3, 4, 16), jnp.float32)
+    y = layers.apply_rope(x, jnp.arange(3)[None, :], 1e4)
+    np.testing.assert_allclose(
+        np.asarray(jnp.linalg.norm(y, axis=-1)),
+        np.asarray(jnp.linalg.norm(x, axis=-1)), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16), n=st.integers(2, 32))
+def test_softmax_xent_matches_manual(seed, n):
+    rng = np.random.RandomState(seed)
+    logits = jnp.asarray(rng.randn(4, n), jnp.float32)
+    labels = jnp.asarray(rng.randint(0, n, 4), jnp.int32)
+    got = float(layers.softmax_xent(logits, labels))
+    p = np.exp(np.asarray(logits, np.float64))
+    p /= p.sum(-1, keepdims=True)
+    want = -np.mean(np.log(p[np.arange(4), np.asarray(labels)]))
+    assert abs(got - want) < 1e-4 * (1 + abs(want))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 2**16))
+def test_rmsnorm_scale_invariance(seed):
+    """RMSNorm output is invariant to positive rescaling of its input."""
+    rng = np.random.RandomState(seed)
+    x = jnp.asarray(rng.randn(2, 8), jnp.float32) + 0.1
+    p = layers.rmsnorm_init(8)
+    a = layers.rmsnorm(p, x)
+    b = layers.rmsnorm(p, x * 7.5)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=1e-3, atol=1e-4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(M=st.integers(16, 2048), N=st.integers(16, 8192),
+       T=st.integers(1, 4096))
+def test_planner_never_beats_exhaustive(M, N, T):
+    """plan_gemm's absolute time equals the exhaustive minimum (Eq. 6)."""
+    from repro.core import timing
+    g = planner.GEMM("g", M, N, T)
+    p = planner.plan_gemm(g, 128, 128)
+    best = min(timing.t_abs_ps(M, N, T, 128, 128, k)
+               for k in (1, 2, 4))
+    assert p.t_abs_ps == best
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**16), k=st.sampled_from([1, 2, 4]))
+def test_gemm_kernel_collapse_property(seed, k):
+    """arrayflex_gemm == oracle for random shapes at every collapse."""
+    from repro.kernels import ref
+    from repro.kernels.arrayflex_gemm import arrayflex_gemm
+    rng = np.random.RandomState(seed)
+    M = 64 * rng.randint(1, 3)
+    K = 64 * k * rng.randint(1, 4)
+    N = 64 * rng.randint(1, 3)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    got = arrayflex_gemm(x, w, bk=64, k_collapse=k)
+    np.testing.assert_allclose(np.float32(got), np.float32(ref.gemm_ref(x, w)),
+                               rtol=1e-3, atol=1e-3)

@@ -1,0 +1,183 @@
+"""Sharding rules, HLO analyzer, roofline model, multi-device pipeline."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import ARCHS
+from repro.models import api
+from repro.parallel import sharding
+from repro.roofline import hlo as hlo_lib
+from repro.roofline import model as roof
+
+
+def _mesh11():
+    dev = np.asarray(jax.devices()[:1]).reshape(1, 1)
+    return Mesh(dev, ("data", "model"))
+
+
+def test_param_pspecs_cover_all_leaves():
+    mesh = _mesh11()
+    for arch in ("mixtral-8x22b", "jamba-1.5-large-398b", "whisper-base"):
+        cfg = ARCHS[arch]
+        specs = api.param_pspecs(cfg, mesh)
+        params = api.abstract_params(cfg)
+        flat_p = jax.tree_util.tree_flatten_with_path(params)[0]
+        flat_s = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_p) == len(flat_s)
+        for (path, leaf), spec in zip(flat_p, flat_s):
+            assert isinstance(spec, P)
+            assert len(spec) <= leaf.ndim, (path, spec, leaf.shape)
+
+
+def test_moe_weights_shard_over_experts_or_ff():
+    mesh = _mesh11()
+    cfg = ARCHS["mixtral-8x22b"]
+    specs = api.param_pspecs(cfg, mesh)
+    wi = specs["blocks"][0]["moe"]["wi_gate"]
+    # stacked leading dim unsharded; one of E/d/ff dims carries an axis
+    assert wi[0] is None
+    assert any(a is not None for a in tuple(wi)[1:])
+
+
+def test_embed_table_sharded():
+    mesh = _mesh11()
+    specs = api.param_pspecs(ARCHS["qwen2-0.5b"], mesh)
+    assert tuple(specs["embed"]["table"]) == ("model", "data")
+
+
+# ------------------------------------------------------------- HLO parse
+_HLO_SAMPLE = """
+HloModule test
+
+%body (p: (s32[], f32[64,64])) -> (s32[], f32[64,64]) {
+  %p = (s32[], f32[64,64]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %x = f32[64,64]{1,0} get-tuple-element(%p), index=1
+  %dot = f32[64,64]{1,0} dot(%x, %x), lhs_contracting_dims={1}, rhs_contracting_dims={0}, metadata={op_name="jit(f)/while/dot_general"}
+  %ar = f32[64,64]{1,0} all-reduce(%dot), replica_groups=[4,2]<=[8], to_apply=%add, metadata={op_name="jit(f)/while/psum"}
+  %one = s32[] constant(1)
+  %ip = s32[] add(%i, %one)
+  ROOT %t = (s32[], f32[64,64]) tuple(%ip, %ar)
+}
+
+%cond (p2: (s32[], f32[64,64])) -> pred[] {
+  %p2 = (s32[], f32[64,64]) parameter(0)
+  %i2 = s32[] get-tuple-element(%p2), index=0
+  %c = s32[] constant(10)
+  ROOT %lt = pred[] compare(%i2, %c), direction=LT
+}
+
+ENTRY %main (a: f32[64,64]) -> f32[64,64] {
+  %a = f32[64,64]{1,0} parameter(0)
+  %z = s32[] constant(0)
+  %t0 = (s32[], f32[64,64]) tuple(%z, %a)
+  %w = (s32[], f32[64,64]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"10"}}
+  ROOT %out = f32[64,64]{1,0} get-tuple-element(%w), index=1
+}
+"""
+
+
+def test_hlo_analyzer_trip_count_multiplication():
+    res = hlo_lib.analyze(_HLO_SAMPLE)
+    # 10 iterations x 2*64^3 flops
+    assert res["flops_per_device"] == pytest.approx(10 * 2 * 64 ** 3)
+    # all-reduce moves 2*(n-1)/n * bytes, n=2, x10 trips
+    expect = 10 * 2 * (1 / 2) * 64 * 64 * 4
+    assert res["collective_bytes_per_device"]["all-reduce"] == \
+        pytest.approx(expect)
+    assert not res["unknown_trip_count"]
+    assert res["top_flops"][0][0].startswith("while/dot_general")
+
+
+_HLO_FUSION = """
+HloModule test2
+
+%fused_dus (p0: f32[128,64], p1: f32[1,64], p2: s32[]) -> f32[128,64] {
+  %p0 = f32[128,64]{1,0} parameter(0)
+  %p1 = f32[1,64]{1,0} parameter(1)
+  %p2 = s32[] parameter(2)
+  ROOT %dus = f32[128,64]{1,0} dynamic-update-slice(%p0, %p1, %p2, %p2)
+}
+
+ENTRY %main (a: f32[128,64], u: f32[1,64], i: s32[]) -> f32[128,64] {
+  %a = f32[128,64]{1,0} parameter(0)
+  %u = f32[1,64]{1,0} parameter(1)
+  %i = s32[] parameter(2)
+  ROOT %f = f32[128,64]{1,0} fusion(%a, %u, %i), kind=kLoop, calls=%fused_dus
+}
+"""
+
+
+def test_hlo_analyzer_dus_fusion_slice_aware():
+    """A DUS-rooted fusion touches only its update, not the big buffer."""
+    res = hlo_lib.analyze(_HLO_FUSION)
+    # 2 * update bytes (1*64*4), NOT operand+result (2*128*64*4)
+    assert res["hbm_bytes_per_device"] == pytest.approx(2 * 64 * 4)
+    assert res["flops_per_device"] == 0
+
+
+def test_roofline_terms():
+    hl = {"flops_per_device": roof.PEAK_FLOPS_BF16,
+          "hbm_bytes_per_device": roof.HBM_BW / 2,
+          "collective_total_per_device": 0.0,
+          "collective_bytes_per_device": {}}
+    t = roof.terms_from_analysis(hl)
+    assert t.compute_s == pytest.approx(1.0)
+    assert t.memory_s == pytest.approx(0.5)
+    assert t.dominant == "compute"
+    assert t.roofline_fraction == pytest.approx(1.0)
+
+
+def test_model_flops_moe_active():
+    mf = roof.model_flops(ARCHS["mixtral-8x22b"],
+                          __import__("repro.configs", fromlist=["SHAPES"])
+                          .SHAPES["train_4k"])
+    assert mf["n_active_params"] < 0.4 * mf["n_params"]
+
+
+# ------------------------------------------------------- pipeline (8 dev)
+_PIPE_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np, jax, jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+    import sys
+    sys.path.insert(0, "src")
+    from repro.parallel.pipeline import make_pipelined
+
+    mesh = Mesh(np.asarray(jax.devices()).reshape(4), ("pod",))
+    d, mb, M = 8, 4, 6
+    rng = np.random.RandomState(0)
+    stage_w = jnp.asarray(rng.randn(4, d, d) * 0.3, jnp.float32)
+    x = jnp.asarray(rng.randn(M, mb, d), jnp.float32)
+
+    def stage(w, h):
+        return jnp.tanh(h @ w)
+
+    piped = jax.jit(make_pipelined(stage, mesh, stage_param_spec=P("pod"),
+                                   x_spec=P()))
+    got = piped(stage_w, x)
+    want = x
+    for i in range(4):
+        want = jnp.tanh(want @ stage_w[i])
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)
+    print("PIPE_OK")
+""")
+
+
+def test_gpipe_matches_sequential_subprocess():
+    env = dict(os.environ)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _PIPE_SCRIPT],
+                         capture_output=True, text=True, timeout=600,
+                         env=env, cwd=os.path.dirname(
+                             os.path.dirname(os.path.abspath(__file__))))
+    assert "PIPE_OK" in out.stdout, out.stderr[-2000:]

@@ -1,0 +1,64 @@
+"""Cycle-accurate SA simulator: functional exactness + Eq.(3)/(4) cycles."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import simulator, timing
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+@pytest.mark.parametrize("shape", [(4, 8, 8), (10, 16, 24), (7, 32, 16)])
+def test_tile_int_csa_exact(k, shape):
+    T, R, C = shape
+    rng = np.random.RandomState(42)
+    A = jnp.asarray(rng.randint(-128, 127, (T, R)), jnp.int32)
+    B = jnp.asarray(rng.randint(-128, 127, (R, C)), jnp.int32)
+    X, cyc = simulator.simulate_tile(A, B, k)
+    np.testing.assert_array_equal(np.asarray(X),
+                                  np.asarray(A) @ np.asarray(B))
+    assert cyc == timing.latency_cycles(R, C, T, k)
+
+
+@pytest.mark.parametrize("k", [1, 2])
+def test_tile_float(k):
+    rng = np.random.RandomState(0)
+    A = jnp.asarray(rng.randn(6, 8), jnp.float32)
+    B = jnp.asarray(rng.randn(8, 8), jnp.float32)
+    X, _ = simulator.simulate_tile(A, B, k, use_csa=False)
+    np.testing.assert_allclose(np.asarray(X),
+                               np.asarray(A) @ np.asarray(B),
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(T=st.integers(1, 12),
+       nr=st.integers(1, 3), nc=st.integers(1, 3),
+       k=st.sampled_from([1, 2, 4]))
+def test_tiled_matmul_property(T, nr, nc, k):
+    """Tiled execution == plain matmul; cycles == Eq.(4)."""
+    R = C = 8
+    N, M = nr * R - 3, nc * C - 5          # deliberately ragged
+    rng = np.random.RandomState(T * 7 + nr * 3 + nc + k)
+    A = jnp.asarray(rng.randint(-64, 64, (T, N)), jnp.int32)
+    B = jnp.asarray(rng.randint(-64, 64, (N, M)), jnp.int32)
+    X, cycles = simulator.simulate_matmul(A, B, R, C, k)
+    np.testing.assert_array_equal(np.asarray(X),
+                                  np.asarray(A) @ np.asarray(B))
+    assert cycles == timing.total_cycles(M, N, T, R, C, k)
+
+
+def test_csa_compressor_bit_exact():
+    rng = np.random.RandomState(1)
+    x, y, z = (jnp.asarray(rng.randint(-2**20, 2**20, 50), jnp.int32)
+               for _ in range(3))
+    s, c = simulator.csa_3_2(x, y, z)
+    np.testing.assert_array_equal(np.asarray(s + c),
+                                  np.asarray(x + y + z))
+
+
+def test_occupancy_trace_totals():
+    # total (cycle, column-group) activity == T * n_column_groups * n_stages
+    T, R, C, k = 5, 8, 8, 2
+    tr = simulator.occupancy_trace(T, R, C, k)
+    assert tr.sum() == T * (C // k) * (R // k)
