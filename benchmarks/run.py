@@ -28,7 +28,7 @@ def _run(name, fn, out_dir):
 
 def main() -> None:
     from benchmarks import (paper_figs, kernel_bench, roofline_table,
-                            sa_utilization)
+                            sa_utilization, serving_bench)
     out_dir = "results/bench"
     os.makedirs(out_dir, exist_ok=True)
     print("name,us_per_call,derived")
@@ -41,6 +41,8 @@ def main() -> None:
     _run("gemm_collapse_sweep", kernel_bench.gemm_collapse_sweep, out_dir)
     _run("sa_occupancy", sa_utilization.occupancy, out_dir)
     _run("cluster_pipeline_plan", sa_utilization.cluster_pipeline, out_dir)
+    _run("serving_prefill_modes", serving_bench.serving_prefill_modes,
+         out_dir)
     _run("roofline_table", roofline_table.roofline_rows, out_dir)
     _run("dryrun_status", roofline_table.dryrun_status_rows, out_dir)
 

@@ -1,0 +1,106 @@
+"""Serving-engine benchmark: batched chunked prefill vs the seed's
+token-by-token prefill on the reduced qwen2-0.5b config.
+
+Reports, per prefill mode: prefill throughput (tok/s), decode throughput
+(tok/s), dispatch counts, and mean time-to-first-token — and asserts that
+greedy token streams are identical across modes (the refactor is
+behavior-preserving).  CPU wall-times are structural (dispatch overhead
+dominates), which is exactly the effect batching the prefill removes.
+
+Standalone:  PYTHONPATH=src python benchmarks/serving_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro.configs import get_config, reduced
+from repro.models import lm
+from repro.serving import ServeConfig, ServingEngine
+from repro.serving.engine import Request
+
+
+def _prompts(n, smoke=False):
+    base, spread = (6, 4) if smoke else (18, 13)
+    return [[2 + (i * 11 + j) % 97 for j in range(base + (i * 5) % spread)]
+            for i in range(n)]
+
+
+def _run_mode(cfg, params, mode, prompts, *, max_new, max_batch, max_seq,
+              prefill_chunk=0):
+    sc = ServeConfig(max_batch=max_batch, max_seq=max_seq,
+                     prefill_mode=mode, prefill_chunk=prefill_chunk)
+    # warmup engine: pay jit compilation outside the timed run
+    warm = ServingEngine(cfg, params, sc)
+    warm.submit(Request(prompt=prompts[0][:4], max_new_tokens=2))
+    warm.run_to_completion()
+    warm.stats = {k: 0 if isinstance(v, int) else 0.0
+                  for k, v in warm.stats.items()}
+    engine = warm
+    reqs = [Request(prompt=p, max_new_tokens=max_new, rid=i)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion()
+    st = engine.stats
+    ttfts = [r.ttft_s for r in reqs if r.ttft_s is not None]
+    return {
+        "mode": mode,
+        "prefill_chunk": engine.prefill_chunk,
+        "prefill_tokens": st["prefill_tokens"],
+        "prefill_dispatches": st["prefill_dispatches"],
+        "prefill_tok_s": st["prefill_tokens"] / max(st["prefill_time_s"],
+                                                    1e-9),
+        "decode_tokens": st["decode_tokens"],
+        "decode_dispatches": st["decode_dispatches"],
+        "decode_tok_s": st["decode_tokens"] / max(st["decode_time_s"], 1e-9),
+        "mean_ttft_ms": 1e3 * sum(ttfts) / max(len(ttfts), 1),
+    }, [r.out_tokens for r in reqs]
+
+
+def serving_prefill_modes(smoke: bool = False):
+    """Benchmark entry (rows, derived) — wired into benchmarks/run.py."""
+    cfg = reduced(get_config("qwen2-0.5b"))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    n_req, max_new = (3, 2) if smoke else (6, 4)
+    prompts = _prompts(n_req, smoke)
+    rows, streams = [], {}
+    for mode in ("token", "batched"):
+        row, out = _run_mode(cfg, params, mode, prompts, max_new=max_new,
+                             max_batch=min(4, n_req), max_seq=64)
+        row = {k: (round(v, 1) if isinstance(v, float) else v)
+               for k, v in row.items()}
+        rows.append(row)
+        streams[mode] = out
+    assert streams["token"] == streams["batched"], \
+        "greedy token streams diverged between prefill modes"
+    by = {r["mode"]: r for r in rows}
+    speedup = (by["batched"]["prefill_tok_s"]
+               / max(by["token"]["prefill_tok_s"], 1e-9))
+    ttft_gain = (by["token"]["mean_ttft_ms"]
+                 / max(by["batched"]["mean_ttft_ms"], 1e-9))
+    derived = (f"prefill speedup {speedup:.1f}x "
+               f"({by['token']['prefill_dispatches']} -> "
+               f"{by['batched']['prefill_dispatches']} dispatches); "
+               f"TTFT gain {ttft_gain:.1f}x; outputs identical")
+    return rows, derived
+
+
+def serving_smoke():
+    return serving_prefill_modes(smoke=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced request count / lengths for CI")
+    args = ap.parse_args(argv)
+    rows, derived = serving_prefill_modes(smoke=args.smoke)
+    for row in rows:
+        print(row)
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

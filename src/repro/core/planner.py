@@ -16,7 +16,6 @@ Three planning surfaces:
 """
 from __future__ import annotations
 
-import math
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -182,14 +181,21 @@ def attention_plan(seq_len: int, kv_len: int,
     """Pick the KV chunk size: minimize steps * (overhead + work-per-step),
     the Eq.(6) structure with kc as the collapse factor.  Costs are in
     arbitrary units; overhead models the per-step fixed latency (dispatch,
-    pipeline fill) exactly like the d_base term of Eq.(5)."""
+    pipeline fill) exactly like the d_base term of Eq.(5).
+
+    Ragged ``kv_len`` is costed exactly: ``floor(kv_len/kc)`` full chunks
+    plus one remainder chunk that only pays for the elements it covers, so
+    every choice competes on its true ceil-step cost (no candidate is
+    skipped, no uncosted fallback)."""
+    if not choices:
+        raise ValueError("attention_plan needs at least one chunk choice")
     best, best_cost = None, float("inf")
     for kc in choices:
-        if kv_len % kc and kv_len > kc:
-            continue
         kc_eff = min(kc, kv_len)
-        steps = math.ceil(kv_len / kc_eff)
-        cost = steps * (step_overhead + per_elem * kc_eff * seq_len)
+        full, rem = divmod(kv_len, kc_eff)
+        cost = full * (step_overhead + per_elem * kc_eff * seq_len)
+        if rem:
+            cost += step_overhead + per_elem * rem * seq_len
         if cost < best_cost:
             best, best_cost = kc_eff, cost
-    return best or min(choices)
+    return best

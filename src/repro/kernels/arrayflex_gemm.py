@@ -53,17 +53,40 @@ def arrayflex_gemm(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128,
                    interpret: bool = True):
     """X[M,K] @ W[K,N] with K-collapse factor k_collapse.
 
-    Requires bm | M, bn | N and (bk * k_collapse) | K.
+    Divisibility contract:
+      * ``bm`` (clamped to M) must divide M and ``bn`` (clamped to N) must
+        divide N — otherwise a ``ValueError`` is raised;
+      * empty M, N or K returns an all-zero (M, N) result directly;
+      * K may be anything.  The K axis is tiled into
+        ``n_steps = ceil(K / (bk * k_collapse))`` collapsed blocks of
+        ``k_collapse`` equal sub-tiles each; when K does not fill that grid
+        exactly, X and W are zero-padded along K (zeros contribute exactly
+        0 to the fp32 accumulator, so the result is exact — previously the
+        kernel silently *dropped* trailing K columns whenever the clamped
+        block was not divisible by k_collapse, e.g. K=130, k_collapse=4).
     """
     M, K = x.shape
     K2, N = w.shape
-    assert K == K2, (x.shape, w.shape)
+    if K != K2:
+        raise ValueError(f"contraction mismatch: x {x.shape} @ w {w.shape}")
+    if k_collapse < 1:
+        raise ValueError(f"k_collapse must be >= 1, got {k_collapse}")
+    if M == 0 or N == 0 or K == 0:      # empty operand: exact zero result
+        return jnp.zeros((M, N), out_dtype or x.dtype)
     bm, bn = min(bm, M), min(bn, N)
-    kk = bk * k_collapse
-    kk = min(kk, K)
-    assert M % bm == 0 and N % bn == 0 and K % kk == 0, \
-        (M, N, K, bm, bn, kk)
-    n_steps = K // kk
+    if M % bm or N % bn:
+        raise ValueError(
+            f"bm must divide M and bn must divide N: "
+            f"M={M}, bm={bm}, N={N}, bn={bn}")
+    # exact K tiling: choose the sub-tile width so the collapsed block grid
+    # covers K with minimal zero padding (never drop columns).
+    n_steps = -(-K // (bk * k_collapse))           # ceil
+    bk_eff = -(-K // (n_steps * k_collapse))       # ceil
+    kk = bk_eff * k_collapse
+    K_pad = n_steps * kk
+    if K_pad != K:
+        x = jnp.pad(x, ((0, 0), (0, K_pad - K)))
+        w = jnp.pad(w, ((0, K_pad - K), (0, 0)))
     grid = (M // bm, N // bn, n_steps)
     out_dtype = out_dtype or x.dtype
     kernel = functools.partial(_kernel, k_collapse=k_collapse,

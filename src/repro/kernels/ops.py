@@ -43,12 +43,16 @@ def arrayflex_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[-1]
+    if x.size == 0 or N == 0:           # empty operand: exact zero result
+        return jnp.zeros((*lead, N), x.dtype)
     x2 = x.reshape(-1, K)
     if not k_collapse:
         k_collapse = plan_collapse(N, K, x2.shape[0])
-    while K % (bk * k_collapse) and k_collapse > 1:
-        k_collapse -= 1
-    if K % bk:
+    M_rows = x2.shape[0]
+    # the kernel zero-pads ragged K exactly; only ragged M/N tilings need
+    # the reference fallback (the output grid cannot be padded
+    # transparently).  Tile sizes mirror the kernel's bm/bn clamp.
+    if M_rows % min(SA_R, M_rows) or N % min(SA_C, N):
         return ref.gemm_ref(x2, w).reshape(*lead, N)   # shape fallback
     out = _gemm(x2, w, k_collapse, bk, interpret)
     return out.reshape(*lead, N)

@@ -1,7 +1,10 @@
-"""Serving driver: batched decode with the continuous-batching engine.
+"""Serving driver: chunked batched prefill + continuous-batching decode.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
-      --requests 6 --max-new 24
+      --requests 6 --max-new 24 --prefill-chunk 32
+
+Prints per-request outputs plus per-phase timing: prefill and decode
+throughput (tokens/s), dispatch counts, and mean time-to-first-token.
 """
 from __future__ import annotations
 
@@ -16,6 +19,22 @@ from repro.serving import ServeConfig, ServingEngine
 from repro.serving.engine import Request
 
 
+def phase_report(engine: ServingEngine, reqs) -> str:
+    st = engine.stats
+    pf_tps = st["prefill_tokens"] / max(st["prefill_time_s"], 1e-9)
+    de_tps = st["decode_tokens"] / max(st["decode_time_s"], 1e-9)
+    ttfts = [r.ttft_s for r in reqs if r.ttft_s is not None]
+    ttft_ms = 1e3 * sum(ttfts) / max(len(ttfts), 1)
+    return (f"prefill[{engine.prefill_mode}]: {st['prefill_tokens']} tok "
+            f"in {st['prefill_time_s']:.3f}s ({pf_tps:.1f} tok/s, "
+            f"{st['prefill_dispatches']} dispatches, "
+            f"chunk={engine.prefill_chunk})\n"
+            f"decode: {st['decode_tokens']} tok in "
+            f"{st['decode_time_s']:.3f}s ({de_tps:.1f} tok/s, "
+            f"{st['decode_dispatches']} dispatches)\n"
+            f"mean TTFT: {ttft_ms:.1f} ms")
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen2-0.5b")
@@ -24,6 +43,10 @@ def main(argv=None):
     ap.add_argument("--max-new", type=int, default=24)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--prefill-chunk", type=int, default=0,
+                    help="prefill chunk size (0 -> planner-chosen)")
+    ap.add_argument("--prefill-mode", default="auto",
+                    choices=("auto", "batched", "token"))
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
@@ -32,7 +55,9 @@ def main(argv=None):
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_batch=args.max_batch,
-                                       max_seq=128))
+                                       max_seq=128,
+                                       prefill_mode=args.prefill_mode,
+                                       prefill_chunk=args.prefill_chunk))
     prompts = [[2 + (i * 7 + j) % 97 for j in range(5 + i % 3)]
                for i in range(args.requests)]
     reqs = [Request(prompt=p, max_new_tokens=args.max_new,
@@ -48,6 +73,7 @@ def main(argv=None):
         print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens}")
     print(f"{total} tokens in {dt:.2f}s ({total/max(dt,1e-9):.1f} tok/s, "
           f"{ticks} ticks)")
+    print(phase_report(engine, reqs))
     return reqs
 
 

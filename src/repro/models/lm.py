@@ -148,6 +148,59 @@ def attn_decode(p, x, cfg: ModelConfig, cache, pos):
     return out, {"k": k_cache, "v": v_cache}
 
 
+def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths):
+    """Chunked-prefill attention.  x: (B,C,d) — a chunk of C prompt tokens
+    per row starting at absolute position ``pos`` (B,); ``lengths`` (B,) is
+    the number of valid tokens in each row's chunk (0 = row not prefilled
+    this call: its cache bits are left untouched).
+
+    K/V for the valid (row, position) pairs are written into the cache by a
+    masked gather-select (no arithmetic on cache values), then every query
+    attends over the full cache buffer with a ``key_pos <= q_pos`` mask.
+    The numerics deliberately mirror ``attn_decode``/``decode_attention``
+    step for step — same cache-dtype readback, same fp32 score/softmax,
+    same einsum contractions — so a chunked prefill reproduces the
+    token-by-token decode path bit for bit.
+    """
+    cd = _cdtype(cfg)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    B, C = x.shape[0], x.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = pos[:, None] + jnp.arange(C)[None, :]          # (B,C)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k_new = layers.apply_rope(k_new, positions, cfg.rope_theta)
+    cl = cache["k"].shape[1]
+    # masked scatter: cache slot j takes chunk element j - pos[b] when that
+    # index is a valid token of this chunk, else keeps its current value.
+    j = jnp.arange(cl)[None, :]                                # (1,cl)
+    src = j - pos[:, None]                                     # (B,cl)
+    ok = (src >= 0) & (src < lengths[:, None])
+    idx = jnp.clip(src, 0, C - 1)[:, :, None, None]
+    k_cache = jnp.where(
+        ok[:, :, None, None],
+        jnp.take_along_axis(k_new.astype(cache["k"].dtype), idx, axis=1),
+        cache["k"])
+    v_cache = jnp.where(
+        ok[:, :, None, None],
+        jnp.take_along_axis(v_new.astype(cache["v"].dtype), idx, axis=1),
+        cache["v"])
+    # causal attention of the C queries against the full (masked) buffer
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = H // KV
+    qg = q.reshape(B, C, KV, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
+    valid = j[:, None, :] <= positions[:, :, None]             # (B,C,cl)
+    s = jnp.where(valid[:, None, None], s, attn_lib.NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_cache.dtype)
+    out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache)
+    out = out.reshape(B, C, H, hd).astype(q.dtype)
+    out = layers.linear(p["wo"], out.reshape(B, C, -1), cd)
+    return out, {"k": k_cache, "v": v_cache}
+
+
 def cross_attn_decode(p, x, cfg: ModelConfig, cache):
     """Cross-attention against precomputed (xk, xv)."""
     cd = _cdtype(cfg)
@@ -264,6 +317,28 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
                                  compute_dtype=_cdtype(cfg),
                                  aux_loss_weight=0.0)
         x = x + y
+    return x, new_cache
+
+
+def sublayer_prefill(p, cfg: ModelConfig, pos_idx: int, x, cache, pos,
+                     lengths):
+    """Chunk-of-tokens sub-layer.  x: (B,C,d).  Returns (x, new_cache).
+
+    Attention-mixer sub-layers only (``supports_batched_prefill`` gates the
+    callers); the residual/MLP arithmetic is row-wise identical to
+    ``sublayer_decode``.
+    """
+    kind = sublayer_kind(cfg, pos_idx)
+    assert kind["mixer"] == "attn" and not kind["cross"] \
+        and kind["mlp"] != "moe", "use supports_batched_prefill() to gate"
+    new_cache = dict(cache)
+    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    out, kv = attn_prefill(p["attn"], h, cfg, cache, pos, lengths)
+    new_cache.update(kv)
+    x = x + out
+    if kind["mlp"] == "dense":
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg))
     return x, new_cache
 
 
@@ -410,6 +485,58 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
 
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
     x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["lm_head"], x, cd).astype(jnp.float32)
+    return constrain(logits, "logits")[:, 0], new_cache
+
+
+def supports_batched_prefill(cfg: ModelConfig) -> bool:
+    """True when ``prefill_step`` reproduces the decode path bit-for-bit.
+
+    Requires every sub-layer to be a plain causal-attention + dense-MLP
+    block with a linear (non-ring) KV cache: mamba state recurrences,
+    cross-attention contexts, MoE capacity routing (whose token dropping
+    depends on how many tokens share a dispatch) and sliding-window ring
+    buffers all break per-row equivalence with single-token decoding.
+    """
+    if cfg.sliding_window or cfg.family in ("vlm", "audio"):
+        return False
+    return all(
+        k["mixer"] == "attn" and not k["cross"] and k["mlp"] != "moe"
+        for k in (sublayer_kind(cfg, i) for i in range(period(cfg))))
+
+
+def prefill_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
+    """Batched chunked prefill: one jit dispatch for a (B,C) token chunk.
+
+    tokens: (B,C) int32, right-padded; pos: (B,) absolute start position of
+    each row's chunk; lengths: (B,) valid tokens per row (0 = row inactive —
+    its cache is untouched, fixing the garbage K/V writes the per-token
+    prefill path inflicted on co-resident slots).  Returns
+    ``(logits (B,V) at each row's last valid chunk token, new_cache)``;
+    logits rows with ``lengths == 0`` are meaningless.
+    """
+    P = period(cfg)
+    cd = _cdtype(cfg)
+    tokens = jnp.asarray(tokens, jnp.int32)
+    C = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens, cd)
+
+    def body(x, xs):
+        p_block, cache_block = xs
+        new_caches = []
+        for i in range(P):
+            x, nc = sublayer_prefill(p_block[i], cfg, i, x, cache_block[i],
+                                     pos, lengths)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    last = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, C - 1)
+    x = jnp.take_along_axis(x, last[:, None, None], axis=1)    # (B,1,d)
     if cfg.tie_embeddings:
         logits = layers.unembed(params["embed"], x)
     else:

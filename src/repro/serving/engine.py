@@ -1,15 +1,41 @@
-"""Batched serving engine: continuous-batching prefill + decode.
+"""Batched serving engine: chunked batched prefill + continuous batching.
 
-A fixed pool of `max_batch` sequence slots; requests occupy a free slot,
-prefill fills the slot's KV cache (per-slot, via the model's prefill path
-on a right-padded batch), and a single fused decode step advances every
-active slot each tick.  Slots free on EOS/max-tokens and are immediately
-refilled from the queue (continuous batching).
+A fixed pool of ``max_batch`` sequence :class:`Slot`\\ s, each with an
+explicit lifecycle::
+
+    FREE --admit--> PREFILL --(chunks exhausted)--> DECODE --EOS/limit--> FREE
+
+*Admission* pops queued requests into free slots.  *Prefill* runs the
+prompt (all but its final token) through ``lm.prefill_step`` in fixed-size
+chunks — one jit dispatch per chunk covering **every** prefilling slot at
+once, writing K/V only for the target rows.  A P-token prompt therefore
+costs ``ceil(P/chunk)`` dispatches instead of the P full-batch decode
+steps the per-token path paid (and no longer sprays garbage K/V into
+co-resident slots).  *Decode* is the seed's fused per-slot-position step:
+one dispatch advances every DECODE slot by one token.
+
+Each engine tick interleaves at most one prefill-chunk dispatch with one
+decode dispatch, so decode latency stays bounded while long prompts are
+admitted (chunked prefill).  The chunk size defaults to
+``core.planner.attention_plan`` — the paper's Eq.(6) steps-vs-per-step-cost
+tradeoff, applied here to the serving layer: serving is the third consumer
+of the collapse-depth planner after the SA timing model and the flash
+kernel.
+
+``prefill_mode``:
+  * ``"batched"`` — chunked ``lm.prefill_step`` path (requires
+    ``lm.supports_batched_prefill(cfg)``).
+  * ``"token"``   — the seed's token-by-token decode-path prefill, kept as
+    the bit-exact baseline for equivalence tests and benchmarks.
+  * ``"auto"``    — batched when the model supports it, else token.
 
 Sampling: greedy or temperature; logits come back fp32 from the model.
+Greedy token streams are bit-identical across prefill modes and across
+batch compositions (per-row cache evolution is independent).
 """
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -18,7 +44,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import planner
 from repro.models import lm
+
+PREFILL_CHUNK_CHOICES = (16, 32, 64, 128, 256, 512, 1024, 2048)
 
 
 @dataclass
@@ -29,6 +58,7 @@ class Request:
     rid: int = 0
     out_tokens: list = field(default_factory=list)
     done: bool = False
+    ttft_s: Optional[float] = None     # admission -> first generated token
 
 
 @dataclass(frozen=True)
@@ -37,6 +67,56 @@ class ServeConfig:
     max_seq: int = 256
     eos_id: int = -1           # -1: never stops early
     seed: int = 0
+    prefill_mode: str = "auto"  # auto | batched | token
+    prefill_chunk: int = 0      # 0 -> planner-chosen (attention_plan)
+
+
+class Slot:
+    """One sequence slot: FREE -> PREFILL -> DECODE -> FREE."""
+
+    FREE, PREFILL, DECODE = "free", "prefill", "decode"
+
+    def __init__(self, index: int):
+        self.index = index
+        self.state = Slot.FREE
+        self.req: Optional[Request] = None
+        self.pos = 0              # decode: position of the token in flight
+        self.prefill_len = 0      # tokens to prefill (len(prompt) - 1)
+        self.prefill_done = 0
+        self.next_token = 0
+        self.t_admit = 0.0
+
+    def assign(self, req: Request, now: float):
+        self.req = req
+        self.t_admit = now
+        self.prefill_len = len(req.prompt) - 1
+        self.prefill_done = 0
+        if self.prefill_len == 0:
+            self._to_decode()
+        else:
+            self.state = Slot.PREFILL
+            self.pos = 0
+
+    def _to_decode(self):
+        self.state = Slot.DECODE
+        self.pos = self.prefill_len
+        self.next_token = self.req.prompt[-1]
+
+    def finish_chunk(self, n_tokens: int):
+        self.prefill_done += n_tokens
+        if self.prefill_done >= self.prefill_len:
+            self._to_decode()
+
+    def release(self):
+        self.req = None
+        self.state = Slot.FREE
+
+    @property
+    def write_pos(self) -> int:
+        """Next cache position this row writes (where a fused-decode
+        dispatch may harmlessly deposit garbage: the row's next real write
+        lands on the same position before it is ever attended)."""
+        return self.prefill_done if self.state == Slot.PREFILL else self.pos
 
 
 class ServingEngine:
@@ -46,38 +126,105 @@ class ServingEngine:
         self.sc = serve_cfg
         B, S = serve_cfg.max_batch, serve_cfg.max_seq
         self.cache = lm.init_cache(cfg, B, S)
-        self.pos = np.zeros(B, np.int32)        # next position per slot
-        self.active: List[Optional[Request]] = [None] * B
+        self.slots = [Slot(i) for i in range(B)]
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(serve_cfg.seed)
         self._decode = jax.jit(
             lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
 
+        mode = serve_cfg.prefill_mode
+        if mode == "auto":
+            mode = ("batched" if lm.supports_batched_prefill(cfg)
+                    else "token")
+        if mode == "batched" and not lm.supports_batched_prefill(cfg):
+            raise ValueError(
+                f"{cfg.name}: model family does not support batched "
+                f"prefill (mamba/MoE/cross-attn/sliding-window state); "
+                f"use prefill_mode='token' or 'auto'")
+        if mode not in ("batched", "token"):
+            raise ValueError(f"unknown prefill_mode {mode!r}")
+        self.prefill_mode = mode
+        # Eq.(6) at the serving layer: steps = ceil(prompt/chunk), per-step
+        # cost affine in chunk * cache_len -> attention_plan picks the chunk.
+        self.prefill_chunk = serve_cfg.prefill_chunk or min(S, max(
+            1, planner.attention_plan(S, S, choices=PREFILL_CHUNK_CHOICES)))
+        if mode == "batched":
+            self._prefill = jax.jit(
+                lambda p, c, t, pos, lens: lm.prefill_step(
+                    cfg, p, c, t, pos, lens))
+        self.stats = dict(prefill_dispatches=0, decode_dispatches=0,
+                          prefill_tokens=0, decode_tokens=0,
+                          prefill_time_s=0.0, decode_time_s=0.0)
+
     # ------------------------------------------------------------- intake
     def submit(self, req: Request):
+        if not req.prompt:
+            raise ValueError(f"request {req.rid}: empty prompt")
+        if len(req.prompt) > self.sc.max_seq:
+            raise ValueError(
+                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                f"exceeds max_seq={self.sc.max_seq} (positions past the "
+                f"cache would be silently dropped)")
         self.queue.append(req)
 
     def _admit(self):
-        for slot in range(self.sc.max_batch):
-            if self.active[slot] is None and self.queue:
-                req = self.queue.pop(0)
-                self.active[slot] = req
-                # prefill token-by-token through the decode path: exact and
-                # cache-layout-identical.  Other slots' rows write garbage
-                # at their own NEXT position, which their next real decode
-                # overwrites before it is ever attended to (masked by pos).
-                for i, t in enumerate(req.prompt[:-1]):
-                    self._step_slot(slot, t, i)
-                self.pos[slot] = len(req.prompt) - 1
-                req._next_token = req.prompt[-1]
+        now = time.perf_counter()
+        for slot in self.slots:
+            if slot.state == Slot.FREE and self.queue:
+                slot.assign(self.queue.pop(0), now)
 
-    def _step_slot(self, slot, token, pos):
-        toks = np.zeros(self.sc.max_batch, np.int32)
-        toks[slot] = token
-        pos_v = self.pos.copy()
-        pos_v[slot] = pos
-        _, self.cache = self._decode(self.params, self.cache,
-                                     jnp.asarray(toks), jnp.asarray(pos_v))
+    def _pos_vector(self) -> np.ndarray:
+        return np.asarray([s.write_pos for s in self.slots], np.int32)
+
+    # ------------------------------------------------------------ prefill
+    def _prefill_tick(self):
+        pre = [s for s in self.slots if s.state == Slot.PREFILL]
+        if not pre:
+            return
+        if self.prefill_mode == "token":
+            for slot in pre:
+                self._prefill_token_by_token(slot)
+            return
+        B, C = self.sc.max_batch, self.prefill_chunk
+        toks = np.zeros((B, C), np.int32)
+        pos = self._pos_vector()
+        lens = np.zeros(B, np.int32)
+        for s in pre:
+            c = min(C, s.prefill_len - s.prefill_done)
+            toks[s.index, :c] = s.req.prompt[s.prefill_done:
+                                             s.prefill_done + c]
+            lens[s.index] = c
+        t0 = time.perf_counter()
+        _, self.cache = self._prefill(self.params, self.cache,
+                                      jnp.asarray(toks), jnp.asarray(pos),
+                                      jnp.asarray(lens))
+        jax.block_until_ready(self.cache)
+        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += int(lens.sum())
+        for s in pre:
+            s.finish_chunk(int(lens[s.index]))
+
+    def _prefill_token_by_token(self, slot: Slot):
+        """Seed path: one full-batch decode dispatch per prompt token.
+        Other slots' rows write garbage at their own next position, which
+        their next real write overwrites before it is ever attended to."""
+        req = slot.req
+        for i, t in enumerate(req.prompt[:-1]):
+            toks = np.zeros(self.sc.max_batch, np.int32)
+            toks[slot.index] = t
+            pos_v = self._pos_vector()
+            pos_v[slot.index] = i
+            t0 = time.perf_counter()
+            _, self.cache = self._decode(self.params, self.cache,
+                                         jnp.asarray(toks),
+                                         jnp.asarray(pos_v))
+            jax.block_until_ready(self.cache)
+            self.stats["prefill_time_s"] += time.perf_counter() - t0
+            self.stats["prefill_dispatches"] += 1
+            self.stats["prefill_tokens"] += 1
+            slot.prefill_done = i + 1
+        slot._to_decode()
 
     # ------------------------------------------------------------- decode
     def _sample(self, logits, temps):
@@ -87,38 +234,54 @@ class ServingEngine:
             sub, logits / jnp.maximum(temps[:, None], 1e-6))
         return np.asarray(jnp.where(temps > 0, sampled, greedy))
 
-    def step(self):
-        """One decode tick for all active slots (per-slot positions)."""
-        self._admit()
-        if not any(self.active):
-            return False
+    def _decode_tick(self):
+        dec = [s for s in self.slots if s.state == Slot.DECODE]
+        if not dec:
+            return
         toks = np.zeros(self.sc.max_batch, np.int32)
         temps = np.zeros(self.sc.max_batch, np.float32)
-        for slot, req in enumerate(self.active):
-            if req is not None:
-                toks[slot] = req._next_token
-                temps[slot] = req.temperature
+        for s in dec:
+            toks[s.index] = s.next_token
+            temps[s.index] = s.req.temperature
+        t0 = time.perf_counter()
         logits, self.cache = self._decode(self.params, self.cache,
                                           jnp.asarray(toks),
-                                          jnp.asarray(self.pos))
+                                          jnp.asarray(self._pos_vector()))
         nxt = self._sample(logits, jnp.asarray(temps))
-        for slot, req in enumerate(self.active):
-            if req is None:
-                continue
-            tok = int(nxt[slot])
+        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_dispatches"] += 1
+        self.stats["decode_tokens"] += len(dec)
+        now = time.perf_counter()
+        for s in dec:
+            req = s.req
+            tok = int(nxt[s.index])
+            if not req.out_tokens:
+                req.ttft_s = now - s.t_admit
             req.out_tokens.append(tok)
-            req._next_token = tok
-            self.pos[slot] += 1
+            s.next_token = tok
+            s.pos += 1
             if (tok == self.sc.eos_id
                     or len(req.out_tokens) >= req.max_new_tokens
-                    or self.pos[slot] >= self.sc.max_seq - 1):
+                    or s.pos >= self.sc.max_seq - 1):
                 req.done = True
-                self.active[slot] = None
+                s.release()
+
+    # --------------------------------------------------------------- run
+    def step(self):
+        """One engine tick: admit, at most one prefill chunk dispatch,
+        one fused decode dispatch."""
+        self._admit()
+        if all(s.state == Slot.FREE for s in self.slots):
+            return False
+        self._prefill_tick()
+        self._decode_tick()
         return True
 
     def run_to_completion(self, max_ticks: int = 10000):
         ticks = 0
-        while (self.queue or any(self.active)) and ticks < max_ticks:
+        while (self.queue
+               or any(s.state != Slot.FREE for s in self.slots)) \
+                and ticks < max_ticks:
             self.step()
             ticks += 1
         return ticks

@@ -1,0 +1,102 @@
+"""Minimal, deterministic stand-in for ``hypothesis`` when it is absent.
+
+The real dependency is declared in ``pyproject.toml`` (``.[test]``); hermetic
+environments without it still need ``tests/test_core_timing.py``,
+``test_properties.py`` and ``test_simulator.py`` to collect and run.  This
+shim implements exactly the surface those modules use — ``given``,
+``settings`` and the ``integers``/``sampled_from``/``floats``/``booleans``
+strategies — by drawing ``max_examples`` pseudo-random examples from an RNG
+seeded with the test name, so runs are reproducible.  No shrinking, no
+database, no edge-case bias: a property stays a property, just with plain
+random sampling.
+
+``tests/conftest.py`` installs this into ``sys.modules`` only when the real
+package cannot be imported, so installed environments are unaffected.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import random
+import sys
+import types
+import zlib
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def example(self, rng):
+        return self._draw(rng)
+
+
+def integers(min_value=0, max_value=2 ** 31 - 1):
+    return _Strategy(lambda rng: rng.randint(min_value, max_value))
+
+
+def sampled_from(elements):
+    elements = list(elements)
+    return _Strategy(lambda rng: elements[rng.randrange(len(elements))])
+
+
+def floats(min_value=0.0, max_value=1.0, **_kw):
+    return _Strategy(lambda rng: rng.uniform(min_value, max_value))
+
+
+def booleans():
+    return _Strategy(lambda rng: bool(rng.getrandbits(1)))
+
+
+def just(value):
+    return _Strategy(lambda rng: value)
+
+
+class settings:
+    """Decorator recording max_examples on the (possibly given-wrapped) fn."""
+
+    def __init__(self, max_examples=100, deadline=None, **_kw):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._stub_settings = self
+        return fn
+
+
+def given(*arg_strategies, **kw_strategies):
+    if arg_strategies:
+        raise TypeError("the hypothesis stub only supports keyword "
+                        "strategies, e.g. @given(x=st.integers(0, 9))")
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            cfg = getattr(wrapper, "_stub_settings", None) or settings()
+            seed = zlib.crc32(fn.__qualname__.encode())
+            rng = random.Random(seed)
+            for _ in range(cfg.max_examples):
+                drawn = {name: strat.example(rng)
+                         for name, strat in kw_strategies.items()}
+                fn(*args, **drawn, **kwargs)
+        # pytest must not mistake strategy kwargs for fixtures: hide the
+        # drawn parameters behind an empty signature (as hypothesis does).
+        del wrapper.__wrapped__
+        wrapper.__signature__ = inspect.Signature()
+        wrapper.hypothesis = types.SimpleNamespace(inner_test=fn)
+        return wrapper
+
+    return deco
+
+
+def install():
+    """Register this shim as ``hypothesis`` + ``hypothesis.strategies``."""
+    mod = types.ModuleType("hypothesis")
+    mod.given = given
+    mod.settings = settings
+    strat = types.ModuleType("hypothesis.strategies")
+    for name in ("integers", "sampled_from", "floats", "booleans", "just"):
+        setattr(strat, name, globals()[name])
+    mod.strategies = strat
+    mod.__stub__ = True
+    sys.modules["hypothesis"] = mod
+    sys.modules["hypothesis.strategies"] = strat

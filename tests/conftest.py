@@ -3,3 +3,11 @@ import sys
 
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+try:  # real dependency (declared in pyproject [test] extra) wins when present
+    import hypothesis  # noqa: F401
+except ImportError:  # hermetic env: install the deterministic stub
+    sys.path.insert(0, os.path.dirname(__file__))
+    import _hypothesis_stub
+
+    _hypothesis_stub.install()

@@ -25,6 +25,48 @@ def test_gemm_vs_ref(mkn, dtype, k_collapse):
                                rtol=TOL[dtype], atol=TOL[dtype])
 
 
+@pytest.mark.parametrize("K,bk,k_collapse", [
+    (130, 128, 4),    # the seed's silent-wrong-answer case (~4.8 abs error)
+    (130, 128, 1),    # K not a multiple of the clamped block
+    (96, 64, 4),      # bk * k_collapse > K, K % k_collapse == 0
+    (100, 64, 4),     # bk * k_collapse > K, K % k_collapse != 0
+    (257, 64, 2),     # prime-ish K, multiple steps with remainder
+    (384, 64, 3),     # non-power-of-two collapse, exact tiling
+    (70, 32, 3),      # everything ragged
+])
+def test_gemm_nondivisible_k_exact(K, bk, k_collapse):
+    """Any (K, bk, k_collapse) must match jnp.dot to fp32 tolerance."""
+    M, N = 64, 128
+    rng = np.random.RandomState(K + bk + k_collapse)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    got = arrayflex_gemm(x, w, bk=bk, k_collapse=k_collapse)
+    want = ref.gemm_ref(x, w)
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_gemm_empty_dims_are_zero():
+    for shape_x, shape_w in (((64, 0), (0, 64)), ((0, 8), (8, 8)),
+                             ((8, 8), (8, 0))):
+        out = arrayflex_gemm(jnp.zeros(shape_x, jnp.float32),
+                             jnp.zeros(shape_w, jnp.float32), k_collapse=4)
+        assert out.shape == (shape_x[0], shape_w[1])
+        assert not np.any(np.asarray(out))
+
+
+def test_gemm_rejects_bad_tiling():
+    x = jnp.zeros((300, 128), jnp.float32)   # 300 not divisible by bm=128
+    w = jnp.zeros((128, 128), jnp.float32)
+    with pytest.raises(ValueError):
+        arrayflex_gemm(x, w)
+    with pytest.raises(ValueError):
+        arrayflex_gemm(jnp.zeros((128, 64)), jnp.zeros((32, 128)))
+    with pytest.raises(ValueError):
+        arrayflex_gemm(jnp.zeros((128, 64)), jnp.zeros((64, 128)),
+                       k_collapse=0)
+
+
 def test_gemm_collapse_invariance():
     """Property: results identical across collapse depths (same math)."""
     rng = np.random.RandomState(0)
@@ -65,6 +107,13 @@ def test_planner_driven_wrappers():
     np.testing.assert_allclose(np.float32(got), np.float32(want),
                                rtol=1e-3, atol=1e-3)
     assert ops.plan_collapse(128, 256, 64) in (1, 2, 4)
+    # empty / ragged-M shapes route through the reference fallback
+    empty = ops.arrayflex_matmul(jnp.zeros((0, 130), jnp.float32),
+                                 jnp.zeros((130, 128), jnp.float32))
+    assert empty.shape == (0, 128)
+    ragged = ops.arrayflex_matmul(jnp.ones((3, 130), jnp.float32),
+                                  jnp.ones((130, 128), jnp.float32))
+    np.testing.assert_allclose(np.float32(ragged), 130.0, rtol=1e-5)
 
     q = jnp.asarray(rng.randn(2, 128, 64), jnp.float32)
     k = jnp.asarray(rng.randn(2, 320, 64), jnp.float32)   # non-pow2 T

@@ -41,6 +41,31 @@ def test_attention_plan_tradeoff():
     assert big >= small
 
 
+def test_attention_plan_ragged_kv_is_costed():
+    """kv_len divisible by no choice must still pick the cost-optimal chunk
+    (the seed silently fell back to min(choices) without costing it)."""
+    choices = (256, 512, 1024, 2048, 4096)
+
+    def exact_cost(kc, seq_len, kv_len, overhead, per_elem=1.0 / 1024):
+        kc = min(kc, kv_len)
+        full, rem = divmod(kv_len, kc)
+        c = full * (overhead + per_elem * kc * seq_len)
+        if rem:
+            c += overhead + per_elem * rem * seq_len
+        return c
+
+    for kv_len in (5000, 33000, 999):
+        for overhead in (0.1, 10.0, 1e4):
+            got = planner.attention_plan(4096, kv_len, choices=choices,
+                                         step_overhead=overhead)
+            costs = {min(kc, kv_len): exact_cost(kc, 4096, kv_len, overhead)
+                     for kc in choices}
+            assert costs[got] == min(costs.values()), (kv_len, overhead, got)
+    # heavy per-step overhead on ragged kv must not collapse to min(choices)
+    assert planner.attention_plan(4096, 5000, choices=choices,
+                                  step_overhead=1e6) > min(choices)
+
+
 def test_cluster_pipeline_structure():
     c = cp.PipelineCost(n_pods=8, microbatches=1, layer_time_ms=1.0,
                         overhead_ms=0.1)

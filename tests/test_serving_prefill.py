@@ -1,0 +1,119 @@
+"""Batched chunked prefill == seed per-token prefill (greedy, bit-exact).
+
+The engine's batched prefill path must be a pure performance refactor:
+identical greedy token streams for mixed-length prompts (including slot
+reuse after EOS and prompts spanning several chunks), with O(P/chunk)
+prefill dispatches instead of P.
+"""
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.models import lm
+from repro.serving import ServeConfig, ServingEngine
+from repro.serving.engine import Request
+
+
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(ARCHS["qwen2-0.5b"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+PROMPTS = [
+    [5, 6, 7],
+    [11, 12, 13, 14, 15, 16, 17, 18, 19, 20, 21],   # spans several chunks
+    [21],                                            # no prefill at all
+    [31, 32, 33, 34, 35],
+    [41, 42, 43, 44, 45, 46, 47, 48],
+]
+
+
+def _run(cfg, params, mode, prompts, *, eos=-1, chunk=0, max_batch=2,
+         max_new=5):
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=max_batch, max_seq=64,
+                                       eos_id=eos, prefill_mode=mode,
+                                       prefill_chunk=chunk))
+    reqs = [Request(prompt=p, max_new_tokens=max_new, rid=i)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], engine
+
+
+def test_batched_prefill_matches_token_prefill(model):
+    cfg, params = model
+    token_out, _ = _run(cfg, params, "token", PROMPTS)
+    for chunk in (4, 16, 0):            # 0 -> planner-chosen
+        batched_out, _ = _run(cfg, params, "batched", PROMPTS, chunk=chunk)
+        assert batched_out == token_out, f"chunk={chunk}"
+
+
+def test_batched_prefill_matches_after_eos_slot_reuse(model):
+    """EOS mid-stream frees a slot for the queue; streams must still match."""
+    cfg, params = model
+    first, _ = _run(cfg, params, "token", PROMPTS)
+    # pick a token that actually occurs so EOS fires and truncates streams
+    eos = first[0][1]
+    token_out, _ = _run(cfg, params, "token", PROMPTS, eos=eos)
+    batched_out, _ = _run(cfg, params, "batched", PROMPTS, eos=eos, chunk=4)
+    assert batched_out == token_out
+    assert any(len(t) < 5 for t in token_out), "EOS never fired"
+
+
+def test_prefill_dispatch_count_is_chunked(model):
+    """A P-token prompt must cost ceil(P/chunk) prefill dispatches, not P
+    full-batch decode steps (and exactly P prefill tokens either way)."""
+    cfg, params = model
+    chunk = 4
+    _, tok_eng = _run(cfg, params, "token", PROMPTS, max_batch=len(PROMPTS))
+    _, bat_eng = _run(cfg, params, "batched", PROMPTS, chunk=chunk,
+                      max_batch=len(PROMPTS))
+    n_prefill = sum(len(p) - 1 for p in PROMPTS)
+    assert tok_eng.stats["prefill_dispatches"] == n_prefill
+    assert bat_eng.stats["prefill_tokens"] == n_prefill
+    # all slots prefill concurrently: dispatches bounded by the longest
+    # prompt's chunk count, far below the token path's P dispatches
+    worst = max(math.ceil((len(p) - 1) / chunk) for p in PROMPTS)
+    assert bat_eng.stats["prefill_dispatches"] <= worst
+    assert bat_eng.stats["prefill_dispatches"] < n_prefill
+
+
+def test_prefill_writes_only_target_rows(model):
+    """Batched prefill must not pollute co-resident slots' KV caches."""
+    cfg, params = model
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=3, max_seq=64,
+                                       prefill_mode="batched"))
+    engine.submit(Request(prompt=[7, 8, 9, 10, 11], max_new_tokens=1))
+    engine._admit()
+    engine._prefill_tick()
+    for layer in engine.cache:
+        for key in ("k", "v"):
+            rows = np.asarray(layer[key])[:, 1:]     # slots 1, 2: untouched
+            assert not np.any(rows), "prefill wrote a non-target row"
+
+
+def test_submit_rejects_bad_prompts(model):
+    cfg, params = model
+    engine = ServingEngine(cfg, params, ServeConfig(max_batch=1, max_seq=16))
+    with pytest.raises(ValueError):
+        engine.submit(Request(prompt=[]))
+    with pytest.raises(ValueError):
+        engine.submit(Request(prompt=list(range(2, 42))))   # 40 > max_seq
+    engine.submit(Request(prompt=list(range(2, 18)), max_new_tokens=1))
+    engine.run_to_completion()
+
+
+def test_single_token_prompt_skips_prefill(model):
+    cfg, params = model
+    out, engine = _run(cfg, params, "batched", [[9]], max_batch=1)
+    assert engine.stats["prefill_dispatches"] == 0
+    assert len(out[0]) == 5
