@@ -28,7 +28,7 @@ def _run(name, fn, out_dir):
 
 def main() -> None:
     from benchmarks import (paper_figs, kernel_bench, roofline_table,
-                            sa_utilization, serving_bench)
+                            sa_utilization, serving_bench, substrate_bench)
     out_dir = "results/bench"
     os.makedirs(out_dir, exist_ok=True)
     print("name,us_per_call,derived")
@@ -43,6 +43,7 @@ def main() -> None:
     _run("cluster_pipeline_plan", sa_utilization.cluster_pipeline, out_dir)
     _run("serving_prefill_modes", serving_bench.serving_prefill_modes,
          out_dir)
+    _run("substrate_sites", substrate_bench.substrate_sites, out_dir)
     _run("roofline_table", roofline_table.roofline_rows, out_dir)
     _run("dryrun_status", roofline_table.dryrun_status_rows, out_dir)
 

@@ -1,0 +1,183 @@
+"""Substrate benchmark: measured per-site GEMM time vs the planner's
+Eq.(6) prediction, plus end-to-end backend equivalence on the reduced
+qwen2-0.5b model.
+
+For every GEMM site the model actually executes (``attn.wq``, ``mlp.wo``,
+..., recorded by kernels.substrate during a trace), this bench times the
+standalone substrate dispatch under each backend and prints it next to the
+analytic Eq.(6) model time at the planned collapse depth k — the paper's
+selection loop and the executed kernel, joined on the site label.  It then
+runs ``forward`` / ``decode_step`` / ``prefill_step`` under ``xla`` and
+``arrayflex`` end to end and asserts the logits agree (fp32-accumulation
+tolerance) — the arrayflex path covers every transformer GEMM shape with
+the padded kernel (no reference-GEMM fallback exists anymore).
+
+CPU wall-times are structural (the Pallas kernel runs in interpret mode);
+the Eq.(6) columns are the hardware-calibrated quantities.
+
+Emits ``results/bench/BENCH_substrate.json`` (uploaded as a CI artifact so
+the perf trajectory accumulates across commits).
+
+Standalone:  PYTHONPATH=src python benchmarks/substrate_bench.py [--smoke]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, reduced
+from repro.configs.base import DECODE_32K
+from repro.core import planner
+from repro.kernels import substrate
+from repro.models import lm
+
+OUT_JSON = os.path.join("results", "bench", "BENCH_substrate.json")
+EXEC_BACKENDS = ("xla", "arrayflex")
+
+
+def _cfg(backend="xla"):
+    return reduced(get_config("qwen2-0.5b"), compute_dtype="float32",
+                   param_dtype="float32", gemm_backend=backend)
+
+
+def _time(fn, *args, iters=3):
+    jax.block_until_ready(fn(*args))          # warmup / compile
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def _trace_site_plans(cfg, params, toks):
+    """One abstract trace under the arrayflex backend leaves its GEMM
+    working set in substrate.SITE_PLANS (plans are recorded at trace time,
+    so eval_shape collects them without running any interpreted kernel)."""
+    substrate.SITE_PLANS.clear()
+    import dataclasses
+    cfg_af = dataclasses.replace(cfg, gemm_backend="arrayflex")
+    jax.eval_shape(lambda p, b: lm.forward(cfg_af, p, b), params,
+                   {"tokens": toks})
+    return dict(substrate.SITE_PLANS)
+
+
+def _site_rows(site_plans, iters):
+    """Per-site: measured dispatch time per backend vs Eq.(6) prediction."""
+    rows = []
+    rng = np.random.RandomState(0)
+    for site, plan in sorted(site_plans.items()):
+        x = jnp.asarray(rng.randn(plan.T, plan.N), jnp.float32)
+        w = jnp.asarray(rng.randn(plan.N, plan.M), jnp.float32)
+        row = {"site": site, "M": plan.M, "N": plan.N, "T": plan.T,
+               "k": plan.k,
+               "eq6_pred_us": round(plan.t_pred_ps / 1e6, 4),
+               "eq6_conventional_us": round(plan.t_conventional_ps / 1e6, 4),
+               "eq6_saving_pct": round(100 * plan.saving, 1)}
+        for backend in EXEC_BACKENDS:
+            f = jax.jit(lambda a, b, be=backend: substrate.gemm(
+                a, b, site=site, backend=be))
+            row[f"measured_{backend}_us"] = round(_time(f, x, w,
+                                                        iters=iters), 1)
+        rows.append(row)
+    return rows
+
+
+def _model_rows(params, toks, iters):
+    """End-to-end forward/decode/prefill per backend + logits agreement."""
+    B, S = toks.shape
+    steps, logits = [], {}
+    for backend in EXEC_BACKENDS:
+        cfg = _cfg(backend)
+        fwd = jax.jit(lambda p, b: lm.forward(cfg, p, b)[0])
+        us_fwd = _time(fwd, params, {"tokens": toks}, iters=iters)
+        logits[backend] = np.float32(fwd(params, {"tokens": toks}))
+
+        dec = jax.jit(lambda p, c, t, pos: lm.decode_step(cfg, p, c, t, pos))
+        cache = lm.init_cache(cfg, B, S)
+        us_dec = _time(dec, params, cache, jnp.ones((B,), jnp.int32),
+                       jnp.int32(0), iters=iters)
+
+        pre = jax.jit(lambda p, c, t, pos, lens: lm.prefill_step(
+            cfg, p, c, t, pos, lens))
+        us_pre = _time(pre, params, lm.init_cache(cfg, B, S), toks,
+                       jnp.zeros((B,), jnp.int32),
+                       jnp.full((B,), S, jnp.int32), iters=iters)
+        steps.append({"backend": backend,
+                      "forward_us": round(us_fwd, 1),
+                      "decode_step_us": round(us_dec, 1),
+                      "prefill_step_us": round(us_pre, 1)})
+    max_diff = float(np.max(np.abs(logits["xla"] - logits["arrayflex"])))
+    assert max_diff < 1e-3, \
+        f"backend logits diverged beyond fp32 tolerance: {max_diff}"
+    return steps, max_diff
+
+
+def _analytic_full_rows():
+    """Eq.(6) plans for the FULL qwen2-0.5b decode cell (no execution):
+    what the selection loop buys at real scale."""
+    rows = []
+    for g in planner.model_gemms(get_config("qwen2-0.5b"), DECODE_32K):
+        p = substrate.plan_gemm(g.M, g.N, g.T, "arrayflex")
+        rows.append({"site": g.name, "M": g.M, "N": g.N, "T": g.T,
+                     "count": g.count, "k": p.k,
+                     "eq6_pred_us": round(p.t_pred_ps / 1e6, 4),
+                     "eq6_saving_pct": round(100 * p.saving, 1)})
+    return rows
+
+
+def substrate_report(smoke: bool = False):
+    iters = 1 if smoke else 3
+    B, S = (2, 8) if smoke else (2, 16)
+    cfg = _cfg()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(
+        np.random.RandomState(0).randint(2, cfg.vocab_size, (B, S)))
+
+    site_plans = _trace_site_plans(cfg, params, toks)
+    site_rows = _site_rows(site_plans, iters)
+    model_rows, max_diff = _model_rows(params, toks, iters)
+
+    report = {
+        "config": {"arch": "qwen2-0.5b (reduced)", "batch": B, "seq": S,
+                   "backends": list(EXEC_BACKENDS), "smoke": smoke},
+        "sites": site_rows,
+        "model_steps": model_rows,
+        "equivalence": {"logits_max_abs_diff": max_diff,
+                        "reference_fallbacks": 0},
+        "plan_cache": dict(substrate.plan_cache_info()._asdict()),
+    }
+    if not smoke:
+        report["analytic_full_decode_32k"] = _analytic_full_rows()
+    os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
+    with open(OUT_JSON, "w") as f:
+        json.dump(report, f, indent=1)
+    derived = (f"{len(site_rows)} sites, logits max diff {max_diff:.1e}, "
+               f"plan cache {report['plan_cache']['currsize']} entries -> "
+               f"{OUT_JSON}")
+    return site_rows, derived
+
+
+def substrate_sites(smoke: bool = False):
+    """Benchmark entry (rows, derived) — wired into benchmarks/run.py."""
+    return substrate_report(smoke=smoke)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced shapes / iterations for CI")
+    args = ap.parse_args(argv)
+    rows, derived = substrate_report(smoke=args.smoke)
+    for row in rows:
+        print(row)
+    print(derived)
+
+
+if __name__ == "__main__":
+    main()

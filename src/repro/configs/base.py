@@ -94,9 +94,11 @@ class ModelConfig:
     attn_dense_below: int = 2048
     logit_softcap: float = 0.0
     # --- ArrayFlex integration -------------------------------------------
-    # When True the GEMM planner (core.planner) drives per-layer systolic
-    # pipeline-depth selection for this model's GEMMs.
-    arrayflex: bool = True
+    # Execution backend every model GEMM dispatches through
+    # (kernels.substrate registry): "xla" (plain x @ w, the default),
+    # "arrayflex" (Pallas K-collapse kernel at the planner's Eq.(6) k),
+    # "ref" (fp32 oracle).
+    gemm_backend: str = "xla"
 
     # ------------------------------------------------------------------
     @property

@@ -16,6 +16,7 @@ Three planning surfaces:
 """
 from __future__ import annotations
 
+import functools
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -183,10 +184,20 @@ def attention_plan(seq_len: int, kv_len: int,
     arbitrary units; overhead models the per-step fixed latency (dispatch,
     pipeline fill) exactly like the d_base term of Eq.(5).
 
+    Memoized (pure function of small scalars): jit re-traces and
+    per-request serving calls hit the same shapes repeatedly.
+
     Ragged ``kv_len`` is costed exactly: ``floor(kv_len/kc)`` full chunks
     plus one remainder chunk that only pays for the elements it covers, so
     every choice competes on its true ceil-step cost (no candidate is
     skipped, no uncosted fallback)."""
+    return _attention_plan_cached(seq_len, kv_len, tuple(choices),
+                                  step_overhead, per_elem)
+
+
+@functools.lru_cache(maxsize=None)
+def _attention_plan_cached(seq_len, kv_len, choices, step_overhead,
+                           per_elem):
     if not choices:
         raise ValueError("attention_plan needs at least one chunk choice")
     best, best_cost = None, float("inf")
@@ -199,3 +210,7 @@ def attention_plan(seq_len: int, kv_len: int,
         if cost < best_cost:
             best, best_cost = kc_eff, cost
     return best
+
+
+attention_plan.cache_info = _attention_plan_cached.cache_info
+attention_plan.cache_clear = _attention_plan_cached.cache_clear

@@ -1,6 +1,6 @@
 # Pallas TPU kernels for the paper's compute hot-spot (the systolic-array
 # GEMM itself, with configurable pipeline collapse) plus the fused flash
 # attention that removes the framework's dominant HBM-traffic term.
-from repro.kernels import ref, ops  # noqa: F401
+from repro.kernels import ref, ops, substrate  # noqa: F401
 from repro.kernels.arrayflex_gemm import arrayflex_gemm  # noqa: F401
 from repro.kernels.flash_attention import flash_attention  # noqa: F401

@@ -24,7 +24,7 @@ NEG_INF = -1e30
 
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, *, kv_chunk: int, causal: bool,
-            window: int, scale: float):
+            window: int, scale: float, kv_len: int):
     q = q_ref[0]                                  # (bq, D)
     bq, D = q.shape
     T = k_ref.shape[1]
@@ -46,6 +46,8 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, kv_chunk: int, causal: bool,
             ok = ok & (cols <= rows)
         if window:
             ok = ok & (cols > rows - window)
+        if kv_len != T:                          # zero-padded ragged tail
+            ok = ok & (cols < kv_len)
         s = jnp.where(ok, s, NEG_INF)
         m_new = jnp.maximum(m, jnp.max(s, axis=-1))
         p = jnp.exp(s - m_new[:, None])
@@ -68,22 +70,31 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, kv_chunk: int, causal: bool,
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
                     bq: int = 128, kv_chunk: int = 128,
                     interpret: bool = True):
-    """q: (BH, S, D); k/v: (BH, T, D).  Returns (BH, S, D)."""
+    """q: (BH, S, D); k/v: (BH, T, D).  Returns (BH, S, D).
+
+    T need not divide ``kv_chunk``: K/V are zero-padded to the chunk grid
+    and the kernel masks columns past the true length (so the planner's
+    chunk pick runs as-is instead of degenerating via a divisor search).
+    """
     BH, S, D = q.shape
     T = k.shape[1]
     bq = min(bq, S)
     kv_chunk = min(kv_chunk, T)
-    assert S % bq == 0 and T % kv_chunk == 0
+    assert S % bq == 0
+    Tp = -(-T // kv_chunk) * kv_chunk
+    if Tp != T:
+        k = jnp.pad(k, ((0, 0), (0, Tp - T), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, Tp - T), (0, 0)))
     scale = 1.0 / math.sqrt(D)
     kernel = functools.partial(_kernel, kv_chunk=kv_chunk, causal=causal,
-                               window=window, scale=scale)
+                               window=window, scale=scale, kv_len=T)
     return pl.pallas_call(
         kernel,
         grid=(BH, S // bq),
         in_specs=[
             pl.BlockSpec((1, bq, D), lambda b, i: (b, i, 0)),
-            pl.BlockSpec((1, T, D), lambda b, i: (b, 0, 0)),
-            pl.BlockSpec((1, T, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Tp, D), lambda b, i: (b, 0, 0)),
+            pl.BlockSpec((1, Tp, D), lambda b, i: (b, 0, 0)),
         ],
         out_specs=pl.BlockSpec((1, bq, D), lambda b, i: (b, i, 0)),
         out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),

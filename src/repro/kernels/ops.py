@@ -4,10 +4,14 @@
 collapse factor k comes from core.planner (Eq. 6/7) for the GEMM's (M,N,T)
 shape, mirroring the paper's per-CNN-layer pipeline-depth selection.
 ``attention`` picks the flash kernel's KV-chunk with the same machinery.
+
+``plan_collapse`` is memoized: it is a pure function of small int tuples,
+and model tracing + per-request serving hit it with the same handful of
+shapes thousands of times.
 """
 from __future__ import annotations
 
-from functools import partial
+import functools
 
 import jax
 import jax.numpy as jnp
@@ -15,13 +19,13 @@ import jax.numpy as jnp
 from repro.core import planner, timing
 from repro.kernels.arrayflex_gemm import arrayflex_gemm
 from repro.kernels.flash_attention import flash_attention
-from repro.kernels import ref
 
 # MXU geometry: the TPU systolic tile the collapse factor schedules around.
 SA_R = 128
 SA_C = 128
 
 
+@functools.lru_cache(maxsize=None)
 def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4) -> int:
     """ArrayFlex pipeline depth for GEMM X[T,K] @ W[K,M] (Eq. 7 -> discrete).
 
@@ -31,39 +35,61 @@ def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4) -> int:
     return max(1, min(max_k, k))
 
 
-@partial(jax.jit, static_argnames=("k_collapse", "bk", "interpret"))
-def _gemm(x, w, k_collapse: int, bk: int, interpret: bool):
+@functools.partial(jax.jit,
+                   static_argnames=("k_collapse", "bk", "out_dtype",
+                                    "interpret"))
+def _gemm(x, w, k_collapse: int, bk: int, out_dtype, interpret: bool):
     return arrayflex_gemm(x, w, bk=bk, k_collapse=k_collapse,
-                          interpret=interpret)
+                          out_dtype=out_dtype, interpret=interpret)
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
 
 
 def arrayflex_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
-                     interpret: bool = True):
-    """Planner-configured GEMM.  x: (..., K), w: (K, N)."""
+                     out_dtype=None, interpret: bool = True):
+    """Planner-configured GEMM.  x: (..., K), w: (K, N).
+
+    Covers *every* nonempty shape exactly: the kernel zero-pads ragged K
+    itself, and ragged M rows / N columns (tilings the output grid cannot
+    absorb) are zero-padded here to the systolic tile and sliced off the
+    result — zeros contribute exactly 0 to the fp32 accumulator, so
+    padding is exact and no reference fallback is ever taken.
+    """
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[-1]
-    if x.size == 0 or N == 0:           # empty operand: exact zero result
-        return jnp.zeros((*lead, N), x.dtype)
+    out_dtype = out_dtype or x.dtype
+    if x.size == 0 or N == 0 or K == 0:   # empty operand: exact zero result
+        return jnp.zeros((*lead, N), out_dtype)
     x2 = x.reshape(-1, K)
-    if not k_collapse:
-        k_collapse = plan_collapse(N, K, x2.shape[0])
     M_rows = x2.shape[0]
-    # the kernel zero-pads ragged K exactly; only ragged M/N tilings need
-    # the reference fallback (the output grid cannot be padded
-    # transparently).  Tile sizes mirror the kernel's bm/bn clamp.
-    if M_rows % min(SA_R, M_rows) or N % min(SA_C, N):
-        return ref.gemm_ref(x2, w).reshape(*lead, N)   # shape fallback
-    out = _gemm(x2, w, k_collapse, bk, interpret)
+    if not k_collapse:
+        k_collapse = plan_collapse(N, K, M_rows)
+    # tile sizes mirror the kernel's bm/bn clamp: a dim smaller than the SA
+    # is its own (exactly dividing) tile; larger dims pad up to a multiple.
+    Mp = M_rows if M_rows <= SA_R else _round_up(M_rows, SA_R)
+    Np = N if N <= SA_C else _round_up(N, SA_C)
+    if Mp != M_rows:
+        x2 = jnp.pad(x2, ((0, Mp - M_rows), (0, 0)))
+    if Np != N:
+        w = jnp.pad(w, ((0, 0), (0, Np - N)))
+    out = _gemm(x2, w, k_collapse, bk, out_dtype, interpret)
+    if (Mp, Np) != (M_rows, N):
+        out = out[:M_rows, :N]
     return out.reshape(*lead, N)
 
 
 def attention(q, k, v, *, causal=True, window=0, kv_chunk: int = 0,
               interpret: bool = True):
-    """Flash attention with planner-chosen KV chunk.  (BH,S,D) layout."""
-    from repro.nn.attention import fit_chunk
+    """Flash attention with planner-chosen KV chunk.  (BH,S,D) layout.
+
+    The KV length need not divide the chunk: the kernel pads K/V to the
+    chunk grid and masks the tail, so the planner's pick is used as-is
+    (a prime KV length no longer degenerates to chunk=1).
+    """
     if not kv_chunk:
         kv_chunk = planner.attention_plan(q.shape[1], k.shape[1])
     return flash_attention(q, k, v, causal=causal, window=window,
-                           kv_chunk=fit_chunk(k.shape[1], kv_chunk),
-                           interpret=interpret)
+                           kv_chunk=kv_chunk, interpret=interpret)

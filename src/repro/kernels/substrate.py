@@ -1,0 +1,169 @@
+"""GEMM execution substrate: one dispatch layer for every model GEMM.
+
+The paper's selection loop (core.planner / core.timing, Eqs. 6-7) picks a
+pipeline-collapse depth k *per GEMM shape*; this module is the pipe that
+makes those picks configure actual execution.  Every dense contraction in
+nn/ and models/ routes through :func:`gemm` (or :func:`expert_gemm` for the
+MoE batched form), which
+
+  * resolves the GEMM's :class:`GemmPlan` from a process-wide **plan
+    cache** keyed on ``(M, N, T, backend)`` — the Eq.(6) argmin runs once
+    per shape, not once per jit trace or serving request;
+  * records the plan under the caller's **site label** (``attn.wq``,
+    ``mlp.wo``, ...), the same names ``core.planner.model_gemms`` emits,
+    so analytic plans and executed kernels are the same objects (the
+    substrate benchmark joins the two tables on these labels);
+  * dispatches to a **backend** from a pluggable registry:
+
+      ``xla``       today's ``x @ w`` (the default; numerics unchanged),
+      ``arrayflex`` the Pallas K-collapse kernel at the planned k,
+      ``ref``       an fp32-everywhere oracle for equivalence tests.
+
+``ModelConfig.gemm_backend`` selects the backend model-wide; callers thread
+it through (see models/lm.py).  New backends (quantized, sharded, ...)
+register with :func:`register_backend`.
+
+Shape convention matches core.planner: a call ``gemm(x, w)`` with
+``x: (..., K)`` and ``w: (K, N_out)`` is the planner GEMM
+``X[T, M] = A[T, N] x B[N, M]`` with ``M = N_out`` (output columns),
+``N = K`` (contraction), ``T = prod(leading dims)`` (streamed rows).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Callable, Dict, Optional
+
+import jax.numpy as jnp
+
+from repro.core import timing
+from repro.kernels import ops
+
+
+@dataclass(frozen=True)
+class GemmPlan:
+    """One plan-cache entry: shape, chosen depth, Eq.(6) predictions (ps)."""
+
+    M: int              # output columns
+    N: int              # contraction
+    T: int              # streamed rows
+    backend: str
+    k: int              # collapse depth the kernel runs with (1 off-ArrayFlex)
+    t_pred_ps: float    # Eq.(6) model time at k
+    t_conventional_ps: float  # fixed-pipeline SA baseline
+
+    @property
+    def saving(self) -> float:
+        return 1.0 - self.t_pred_ps / self.t_conventional_ps
+
+
+@functools.lru_cache(maxsize=None)
+def plan_gemm(M: int, N: int, T: int, backend: str = "arrayflex") -> GemmPlan:
+    """Plan-cache entry point: Eq.(6) argmin once per (M, N, T, backend)."""
+    k = ops.plan_collapse(M, N, T) if backend == "arrayflex" else 1
+    return GemmPlan(
+        M=M, N=N, T=T, backend=backend, k=k,
+        t_pred_ps=timing.t_abs_ps(M, N, T, ops.SA_R, ops.SA_C, k),
+        t_conventional_ps=timing.t_abs_conventional_ps(
+            M, N, T, ops.SA_R, ops.SA_C))
+
+
+def plan_cache_info():
+    return plan_gemm.cache_info()
+
+
+def clear_plan_cache():
+    plan_gemm.cache_clear()
+    SITE_PLANS.clear()
+
+
+# ---------------------------------------------------------------------------
+# backend registry
+
+def _xla_backend(x2, w, plan: GemmPlan, out_dtype):
+    if out_dtype is None:
+        return x2 @ w                       # bit-for-bit the pre-substrate path
+    return jnp.dot(x2, w,
+                   preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _arrayflex_backend(x2, w, plan: GemmPlan, out_dtype):
+    return ops.arrayflex_matmul(x2, w, k_collapse=plan.k,
+                                out_dtype=out_dtype)
+
+
+def _ref_backend(x2, w, plan: GemmPlan, out_dtype):
+    out = jnp.dot(x2.astype(jnp.float32), w.astype(jnp.float32))
+    return out.astype(out_dtype or x2.dtype)
+
+
+_BACKENDS: Dict[str, Callable] = {}
+
+
+def register_backend(name: str, fn: Callable) -> None:
+    """fn(x2: (T, K), w: (K, N_out), plan: GemmPlan, out_dtype) -> (T, N_out)."""
+    _BACKENDS[name] = fn
+
+
+def backends():
+    return sorted(_BACKENDS)
+
+
+def get_backend(name: str) -> Callable:
+    try:
+        return _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown gemm backend {name!r}; registered: {backends()}")
+
+
+register_backend("xla", _xla_backend)
+register_backend("arrayflex", _arrayflex_backend)
+register_backend("ref", _ref_backend)
+
+
+# site label -> GemmPlan of the most recent trace through that site.
+# Populated at jit-trace time (shapes are static there), so one model
+# forward leaves exactly its GEMM working set behind for inspection.
+SITE_PLANS: Dict[str, GemmPlan] = {}
+
+
+# ---------------------------------------------------------------------------
+# dispatch
+
+def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None):
+    """The substrate entry: x (..., K) @ w (K, N_out) -> (..., N_out).
+
+    ``out_dtype=None`` returns the operands' dtype with the backend's
+    native accumulation; passing a dtype requests fp32 accumulation cast
+    to it (the unembed/logits contract).
+    """
+    fn = get_backend(backend)
+    lead = x.shape[:-1]
+    K = x.shape[-1]
+    N_out = w.shape[-1]
+    x2 = x.reshape(-1, K)
+    plan = plan_gemm(N_out, K, x2.shape[0], backend)
+    if site:
+        SITE_PLANS[site] = plan
+    out = fn(x2, w, plan, out_dtype)
+    return out.reshape(*lead, N_out)
+
+
+def expert_gemm(x, w, *, site: str = "", backend: str = "xla"):
+    """Batched expert GEMM: x (G, E, C, K) @ w (E, K, N) -> (G, E, C, N).
+
+    The xla backend keeps the einsum the MoE layer always used (one fused
+    batched contraction); other backends unroll the (static) expert axis
+    into per-expert substrate GEMMs so each runs the planned kernel.
+    """
+    G, E, C, K = x.shape
+    N_out = w.shape[-1]
+    if backend == "xla":
+        if site:
+            SITE_PLANS[site] = plan_gemm(N_out, K, G * C, backend)
+        return jnp.einsum("gecd,edf->gecf", x, w)
+    outs = [gemm(x[:, e], w[e], site=site if e == 0 else "",
+                 backend=backend)
+            for e in range(E)]
+    return jnp.stack(outs, axis=1)

@@ -9,6 +9,7 @@ throughput (tokens/s), dispatch counts, and mean time-to-first-token.
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -47,11 +48,15 @@ def main(argv=None):
                     help="prefill chunk size (0 -> planner-chosen)")
     ap.add_argument("--prefill-mode", default="auto",
                     choices=("auto", "batched", "token"))
+    ap.add_argument("--gemm-backend", default="xla",
+                    help="GEMM substrate backend (kernels.substrate): "
+                         "xla | arrayflex | ref")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    cfg = dataclasses.replace(cfg, gemm_backend=args.gemm_backend)
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_batch=args.max_batch,

@@ -92,11 +92,20 @@ def attn_init(key, cfg: ModelConfig, dtype):
 def _proj_qkv(p, x, kv_src, cfg, cd):
     B, S = x.shape[0], x.shape[1]
     hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
-    q = layers.linear(p["wq"], x, cd).reshape(B, S, H, hd)
+    be = cfg.gemm_backend
+    cross = kv_src is not None
+    q = layers.linear(p["wq"], x, cd,
+                      site="xattn.wq" if cross else "attn.wq",
+                      backend=be).reshape(B, S, H, hd)
     src = x if kv_src is None else kv_src
     T = src.shape[1]
-    k = layers.linear(p["wk"], src, cd).reshape(B, T, KV, hd)
-    v = layers.linear(p["wv"], src, cd).reshape(B, T, KV, hd)
+    # the planner fuses cross-attention K/V into one "xattn.kv" GEMM
+    k = layers.linear(p["wk"], src, cd,
+                      site="xattn.kv" if cross else "attn.wk",
+                      backend=be).reshape(B, T, KV, hd)
+    v = layers.linear(p["wv"], src, cd,
+                      site="xattn.kv" if cross else "attn.wv",
+                      backend=be).reshape(B, T, KV, hd)
     return q, k, v
 
 
@@ -113,7 +122,9 @@ def attn_full(p, x, cfg: ModelConfig, positions, *, causal=True,
         q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
         dense_below=cfg.attn_dense_below)
     B, S = x.shape[0], x.shape[1]
-    out = layers.linear(p["wo"], out.reshape(B, S, -1), cd)
+    out = layers.linear(p["wo"], out.reshape(B, S, -1), cd,
+                        site="xattn.wo" if kv_src is not None else "attn.wo",
+                        backend=cfg.gemm_backend)
     return out, (k, v)
 
 
@@ -144,7 +155,8 @@ def attn_decode(p, x, cfg: ModelConfig, cache, pos):
         v_cache = jnp.where(hit, v_new.astype(cache["v"].dtype), cache["v"])
     out = attn_lib.decode_attention(q, k_cache, v_cache, pos,
                                     window=cfg.sliding_window)
-    out = layers.linear(p["wo"], out.reshape(B, 1, -1), cd)
+    out = layers.linear(p["wo"], out.reshape(B, 1, -1), cd, site="attn.wo",
+                        backend=cfg.gemm_backend)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -197,7 +209,8 @@ def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths):
     w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_cache.dtype)
     out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache)
     out = out.reshape(B, C, H, hd).astype(q.dtype)
-    out = layers.linear(p["wo"], out.reshape(B, C, -1), cd)
+    out = layers.linear(p["wo"], out.reshape(B, C, -1), cd, site="attn.wo",
+                        backend=cfg.gemm_backend)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -206,10 +219,12 @@ def cross_attn_decode(p, x, cfg: ModelConfig, cache):
     cd = _cdtype(cfg)
     B = x.shape[0]
     hd, H = cfg.resolved_head_dim, cfg.n_heads
-    q = layers.linear(p["wq"], x, cd).reshape(B, 1, H, hd)
+    q = layers.linear(p["wq"], x, cd, site="xattn.wq",
+                      backend=cfg.gemm_backend).reshape(B, 1, H, hd)
     out = attn_lib.dense_attention(q, cache["xk"].astype(cd),
                                    cache["xv"].astype(cd), causal=False)
-    return layers.linear(p["wo"], out.reshape(B, 1, -1), cd)
+    return layers.linear(p["wo"], out.reshape(B, 1, -1), cd, site="xattn.wo",
+                         backend=cfg.gemm_backend)
 
 
 # ---------------------------------------------------------------------------
@@ -259,7 +274,8 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
         cache = {"k": k_c.astype(jnp.bfloat16), "v": v_c.astype(jnp.bfloat16)}
     else:
         out, state, conv = mamba_lib.mamba_forward(
-            p["mamba"], h, cfg.ssm or SSMConfig(), _cdtype(cfg))
+            p["mamba"], h, cfg.ssm or SSMConfig(), _cdtype(cfg),
+            backend=cfg.gemm_backend)
         cache = {"state": state.astype(jnp.float32),
                  "conv": conv.astype(jnp.bfloat16)}
     x = x + out
@@ -272,7 +288,8 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
         x = x + out
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg))
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                              backend=cfg.gemm_backend)
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -280,7 +297,8 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
                                  capacity_factor=m.capacity_factor,
                                  groups=0,  # one dispatch group per sequence
                                  compute_dtype=_cdtype(cfg),
-                                 aux_loss_weight=m.aux_loss_weight)
+                                 aux_loss_weight=m.aux_loss_weight,
+                                 backend=cfg.gemm_backend)
         x = x + y
         aux = aux + a
     return x, aux, cache
@@ -297,7 +315,8 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
     else:
         out, state, conv = mamba_lib.mamba_decode_step(
             p["mamba"], h[:, 0], cache["state"], cache["conv"],
-            cfg.ssm or SSMConfig(), _cdtype(cfg))
+            cfg.ssm or SSMConfig(), _cdtype(cfg),
+            backend=cfg.gemm_backend)
         out = out[:, None]
         new_cache["state"] = state
         new_cache["conv"] = conv.astype(cache["conv"].dtype)
@@ -307,7 +326,8 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
         x = x + cross_attn_decode(p["xattn"], h, cfg, cache)
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg))
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                              backend=cfg.gemm_backend)
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -315,7 +335,8 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
                                  capacity_factor=max(m.capacity_factor, 2.0),
                                  groups=1,  # decode: one global group
                                  compute_dtype=_cdtype(cfg),
-                                 aux_loss_weight=0.0)
+                                 aux_loss_weight=0.0,
+                                 backend=cfg.gemm_backend)
         x = x + y
     return x, new_cache
 
@@ -338,7 +359,8 @@ def sublayer_prefill(p, cfg: ModelConfig, pos_idx: int, x, cache, pos,
     x = x + out
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg))
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                              backend=cfg.gemm_backend)
     return x, new_cache
 
 
@@ -399,7 +421,8 @@ def _remat(cfg, fn):
 
 def _encode_audio(cfg, params, frames):
     cd = _cdtype(cfg)
-    x = layers.linear(params["audio_proj"], frames, cd)
+    x = layers.linear(params["audio_proj"], frames, cd,
+                      site="frontend.audio", backend=cfg.gemm_backend)
     positions = jnp.arange(x.shape[1])[None, :]
 
     def body(carry, p):
@@ -408,18 +431,27 @@ def _encode_audio(cfg, params, frames):
         out, _ = attn_full(p["attn"], h, cfg, positions, causal=False)
         x = x + out
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, cd)
+        x = x + layers.swiglu(p["mlp"], h, cd, backend=cfg.gemm_backend)
         return x, None
 
     x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_blocks"][0])
     return x
 
 
+def _logits(cfg, params, x, cd):
+    """fp32 logits via the substrate (site "unembed", tied or untied)."""
+    if cfg.tie_embeddings:
+        return layers.unembed(params["embed"], x, backend=cfg.gemm_backend)
+    return layers.linear(params["lm_head"], x, cd, site="unembed",
+                         backend=cfg.gemm_backend).astype(jnp.float32)
+
+
 def _context(cfg, params, batch):
     if cfg.family == "vlm":
         return layers.linear(params["img_proj"],
                              batch["image_embeds"].astype(_cdtype(cfg)),
-                             _cdtype(cfg))
+                             _cdtype(cfg), site="frontend.img",
+                             backend=cfg.gemm_backend)
     if cfg.family == "audio":
         return _encode_audio(cfg, params, batch["frames"])
     return None
@@ -448,10 +480,7 @@ def forward(cfg: ModelConfig, params, batch, *, return_cache=False):
     (x, aux), caches = jax.lax.scan(_remat(cfg, body), (x, jnp.float32(0.0)),
                                     params["blocks"])
     x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(params["embed"], x)
-    else:
-        logits = layers.linear(params["lm_head"], x, cd).astype(jnp.float32)
+    logits = _logits(cfg, params, x, cd)
     return constrain(logits, "logits"), aux, caches
 
 
@@ -485,10 +514,7 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
 
     x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
     x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(params["embed"], x)
-    else:
-        logits = layers.linear(params["lm_head"], x, cd).astype(jnp.float32)
+    logits = _logits(cfg, params, x, cd)
     return constrain(logits, "logits")[:, 0], new_cache
 
 
@@ -537,10 +563,7 @@ def prefill_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
     x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
     last = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, C - 1)
     x = jnp.take_along_axis(x, last[:, None, None], axis=1)    # (B,1,d)
-    if cfg.tie_embeddings:
-        logits = layers.unembed(params["embed"], x)
-    else:
-        logits = layers.linear(params["lm_head"], x, cd).astype(jnp.float32)
+    logits = _logits(cfg, params, x, cd)
     return constrain(logits, "logits")[:, 0], new_cache
 
 

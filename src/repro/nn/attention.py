@@ -86,13 +86,21 @@ def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
 
     The KV chunk size is the ArrayFlex pipeline-collapse analogue: fewer,
     larger sequential steps vs more, smaller ones (core.planner picks it).
+
+    T need not divide ``kv_chunk``: K/V are zero-padded to the chunk grid
+    and padded columns are masked out of the online softmax, so a prime KV
+    length (e.g. T=4097) runs in ``ceil(T/kc)`` steps instead of collapsing
+    to chunk=1 via a largest-divisor search.
     """
     B, S, H, D = q.shape
     T, KV = k.shape[1], k.shape[2]
     g = H // KV
     kv_chunk = min(kv_chunk, T)
-    assert T % kv_chunk == 0
-    n_k = T // kv_chunk
+    n_k = -(-T // kv_chunk)
+    if n_k * kv_chunk != T:
+        pad = n_k * kv_chunk - T
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
     scale = 1.0 / math.sqrt(D)
     qg = constrain(q.reshape(B, S, KV, g, D), "attn_q_seq")
     k = constrain(k, "attn_qkv")
@@ -117,6 +125,8 @@ def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
             ok = ok & (cols[None, :] <= rows[:, None])
         if window:
             ok = ok & (cols[None, :] > rows[:, None] - window)
+        if n_k * kv_chunk != T:                  # zero-padded ragged tail
+            ok = ok & (cols[None, :] < T)
         okb = ok[None, None, None]                         # (1,1,1,S,kc)
         s = jnp.where(okb, s, NEG_INF)
         blk_max = jnp.moveaxis(jnp.max(s, axis=-1), -1, 1)  # (B,S,KV,g)
@@ -139,15 +149,6 @@ def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
     return out.reshape(B, S, H, D).astype(q.dtype)
 
 
-def fit_chunk(T: int, kc: int) -> int:
-    """Largest divisor of T that is <= kc (so the KV scan tiles exactly)."""
-    kc = min(kc, T)
-    for d in range(kc, 0, -1):
-        if T % d == 0:
-            return d
-    return T
-
-
 def attention(q, k, v, *, causal=True, window=0, q_offset=0,
               q_chunk=1024, kv_chunk=1024, dense_below=2048):
     if q.shape[1] <= dense_below:
@@ -155,7 +156,7 @@ def attention(q, k, v, *, causal=True, window=0, q_offset=0,
                                q_offset=q_offset)
     return chunked_attention(q, k, v, causal=causal, window=window,
                              q_offset=q_offset, q_chunk=q_chunk,
-                             kv_chunk=fit_chunk(k.shape[1], kv_chunk))
+                             kv_chunk=kv_chunk)
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=0):

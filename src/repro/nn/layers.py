@@ -10,6 +10,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import substrate
+
 
 def _dtype(name: str):
     return {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
@@ -31,12 +33,18 @@ def linear_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32,
     return p
 
 
-def linear(p, x, compute_dtype=None):
+def linear(p, x, compute_dtype=None, *, site="", backend="xla"):
+    """Dense projection through the GEMM substrate (kernels.substrate).
+
+    ``backend`` selects the execution backend; ``site`` labels the GEMM
+    with its ``planner.model_gemms`` name so the plan cache lines up with
+    the analytic model.  The default backend reproduces ``x @ w`` exactly.
+    """
     w = p["w"]
     if compute_dtype is not None:
         w = w.astype(compute_dtype)
         x = x.astype(compute_dtype)
-    y = x @ w
+    y = substrate.gemm(x, w, site=site, backend=backend)
     if "b" in p:
         y = y + p["b"].astype(y.dtype)
     return y
@@ -78,10 +86,10 @@ def embed(p, ids, compute_dtype=jnp.bfloat16):
     return p["table"].astype(compute_dtype)[ids]
 
 
-def unembed(p, x):
+def unembed(p, x, *, backend="xla"):
     """Logits against the embedding table (tied) — fp32 accumulation."""
-    return jnp.einsum("...d,vd->...v", x, p["table"].astype(x.dtype),
-                      preferred_element_type=jnp.float32)
+    return substrate.gemm(x, p["table"].astype(x.dtype).T, site="unembed",
+                          backend=backend, out_dtype=jnp.float32)
 
 
 # ---------------------------------------------------------------- rope
@@ -112,10 +120,13 @@ def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
     }
 
 
-def swiglu(p, x, compute_dtype=jnp.bfloat16):
-    g = linear(p["wi_gate"], x, compute_dtype)
-    u = linear(p["wi_up"], x, compute_dtype)
-    return linear(p["wo"], jax.nn.silu(g) * u, compute_dtype)
+def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla"):
+    g = linear(p["wi_gate"], x, compute_dtype, site="mlp.wi_gate",
+               backend=backend)
+    u = linear(p["wi_up"], x, compute_dtype, site="mlp.wi_up",
+               backend=backend)
+    return linear(p["wo"], jax.nn.silu(g) * u, compute_dtype, site="mlp.wo",
+                  backend=backend)
 
 
 def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):

@@ -71,8 +71,22 @@ def test_decode_ring_buffer_window():
                                rtol=2e-4, atol=2e-4)
 
 
-def test_fit_chunk():
-    assert att.fit_chunk(1600, 1024) == 800
-    assert att.fit_chunk(4096, 1024) == 1024
-    assert att.fit_chunk(7, 4) == 1
-    assert att.fit_chunk(96, 128) == 96
+@pytest.mark.parametrize("T,kv_chunk", [
+    (97, 32),     # prime-ish T: formerly degenerated to chunk=1
+    (130, 64),    # one ragged tail chunk
+    (96, 128),    # chunk larger than T (clamped)
+    (101, 101),   # exact after clamp
+])
+def test_chunked_ragged_kv_matches_dense(T, kv_chunk):
+    """Ragged KV lengths run at the planned chunk via zero-pad + mask
+    instead of a largest-divisor search (T=4097-style degeneration)."""
+    B, S, H, KV, D = 1, 64, 4, 2, 16
+    q = _rand((B, S, H, D), 1)
+    k = _rand((B, T, KV, D), 2)
+    v = _rand((B, T, KV, D), 3)
+    for causal in (True, False):
+        dense = att.dense_attention(q, k, v, causal=causal)
+        chunk = att.chunked_attention(q, k, v, causal=causal,
+                                      kv_chunk=kv_chunk)
+        np.testing.assert_allclose(np.float32(chunk), np.float32(dense),
+                                   rtol=2e-4, atol=2e-4)

@@ -67,6 +67,52 @@ def test_gemm_rejects_bad_tiling():
                        k_collapse=0)
 
 
+@pytest.mark.parametrize("M,K,N", [
+    (300, 64, 128),    # ragged M > SA tile
+    (128, 64, 130),    # ragged N > SA tile
+    (200, 130, 200),   # everything ragged (M, K, N)
+    (3, 130, 96),      # small ragged M/N (own-tile), ragged K
+])
+def test_arrayflex_matmul_ragged_mn_exact(M, K, N):
+    """Ragged M rows / N columns are zero-padded to the tile grid and
+    sliced, never silently dropped and never routed to a fallback."""
+    rng = np.random.RandomState(M + K + N)
+    x = jnp.asarray(rng.randn(M, K), jnp.float32)
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    for k_collapse in (0, 1, 4):    # 0 = planner-chosen
+        got = ops.arrayflex_matmul(x, w, k_collapse=k_collapse)
+        np.testing.assert_allclose(np.float32(got),
+                                   np.float32(ref.gemm_ref(x, w)),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_arrayflex_matmul_out_dtype():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(8, 64), jnp.bfloat16)
+    w = jnp.asarray(rng.randn(64, 128), jnp.bfloat16)
+    out = ops.arrayflex_matmul(x, w, out_dtype=jnp.float32)
+    assert out.dtype == jnp.float32
+    np.testing.assert_allclose(
+        np.float32(out), np.float32(ref.gemm_ref(x, w, jnp.float32)),
+        rtol=2e-2, atol=2e-2)
+
+
+@pytest.mark.parametrize("T,kv_chunk", [(97, 64), (320, 128), (130, 64)])
+def test_flash_ragged_kv_matches_ref(T, kv_chunk):
+    """The flash kernel pads ragged KV to the chunk grid and masks the
+    tail, so the planner's chunk pick runs as-is."""
+    rng = np.random.RandomState(T)
+    q = jnp.asarray(rng.randn(2, 64, 32), jnp.float32)
+    k = jnp.asarray(rng.randn(2, T, 32), jnp.float32)
+    v = jnp.asarray(rng.randn(2, T, 32), jnp.float32)
+    for causal in (True, False):
+        got = flash_attention(q, k, v, causal=causal, bq=32,
+                              kv_chunk=kv_chunk)
+        want = ref.attention_ref(q, k, v, causal=causal)
+        np.testing.assert_allclose(np.float32(got), np.float32(want),
+                                   rtol=1e-3, atol=1e-3)
+
+
 def test_gemm_collapse_invariance():
     """Property: results identical across collapse depths (same math)."""
     rng = np.random.RandomState(0)
@@ -107,7 +153,7 @@ def test_planner_driven_wrappers():
     np.testing.assert_allclose(np.float32(got), np.float32(want),
                                rtol=1e-3, atol=1e-3)
     assert ops.plan_collapse(128, 256, 64) in (1, 2, 4)
-    # empty / ragged-M shapes route through the reference fallback
+    # empty shapes return exact zeros; ragged shapes run the kernel (padded)
     empty = ops.arrayflex_matmul(jnp.zeros((0, 130), jnp.float32),
                                  jnp.zeros((130, 128), jnp.float32))
     assert empty.shape == (0, 128)

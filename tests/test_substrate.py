@@ -1,0 +1,206 @@
+"""GEMM substrate: backend registry, plan cache, site labels, and
+end-to-end backend equivalence on the reduced qwen2-0.5b model
+(forward / decode_step / prefill_step logits + greedy serving streams)."""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, reduced
+from repro.core import planner
+from repro.kernels import ops, ref, substrate
+from repro.models import lm
+from repro.serving import ServeConfig, ServingEngine
+from repro.serving.engine import Request
+
+
+def _qwen(backend="xla"):
+    """fp32 everywhere: cross-backend differences are pure accumulation
+    order, so logits agree to fp32 tolerance and greedy ties cannot flip."""
+    return reduced(ARCHS["qwen2-0.5b"], compute_dtype="float32",
+                   param_dtype="float32", gemm_backend=backend)
+
+
+# ------------------------------------------------------------------ registry
+def test_backend_registry():
+    assert {"xla", "arrayflex", "ref"} <= set(substrate.backends())
+    with pytest.raises(ValueError):
+        substrate.gemm(jnp.ones((2, 4)), jnp.ones((4, 4)), backend="nope")
+    calls = []
+
+    def mine(x2, w, plan, out_dtype):
+        calls.append(plan)
+        return x2 @ w
+
+    substrate.register_backend("_test", mine)
+    try:
+        out = substrate.gemm(jnp.ones((2, 4)), jnp.ones((4, 8)),
+                             backend="_test")
+        assert out.shape == (2, 8) and len(calls) == 1
+        assert calls[0].M == 8 and calls[0].N == 4 and calls[0].T == 2
+    finally:
+        substrate._BACKENDS.pop("_test")
+
+
+@pytest.mark.parametrize("backend", ["xla", "arrayflex", "ref"])
+@pytest.mark.parametrize("shape", [
+    (7, 64, 32),        # small everything
+    (300, 130, 200),    # ragged M/K/N beyond the SA tile
+    (128, 256, 128),    # exact tiling
+])
+def test_gemm_backends_agree(backend, shape):
+    T, K, N = shape
+    rng = np.random.RandomState(sum(shape))
+    x = jnp.asarray(rng.randn(2, T, K), jnp.float32)   # leading batch dim
+    w = jnp.asarray(rng.randn(K, N), jnp.float32)
+    got = substrate.gemm(x, w, backend=backend)
+    want = ref.gemm_ref(x.reshape(-1, K), w).reshape(2, T, N)
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_expert_gemm_backends_agree():
+    rng = np.random.RandomState(0)
+    x = jnp.asarray(rng.randn(2, 3, 5, 16), jnp.float32)   # (G,E,C,K)
+    w = jnp.asarray(rng.randn(3, 16, 24), jnp.float32)     # (E,K,N)
+    want = jnp.einsum("gecd,edf->gecf", x, w)
+    for backend in ("xla", "arrayflex", "ref"):
+        got = substrate.expert_gemm(x, w, backend=backend)
+        np.testing.assert_allclose(np.float32(got), np.float32(want),
+                                   rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------- plan cache
+def test_plan_cache_and_memoized_planners():
+    """Satellite: Eq.(6) argmin runs once per shape, not per trace/call."""
+    h0 = substrate.plan_cache_info().hits
+    p1 = substrate.plan_gemm(512, 256, 64, "arrayflex")
+    p2 = substrate.plan_gemm(512, 256, 64, "arrayflex")
+    assert p1 is p2
+    assert substrate.plan_cache_info().hits > h0
+    assert p1.k == ops.plan_collapse(512, 256, 64)
+    assert p1.t_pred_ps > 0 and p1.t_conventional_ps > 0
+    # non-arrayflex backends plan k=1 (no collapse on the XLA path)
+    assert substrate.plan_gemm(512, 256, 64, "xla").k == 1
+
+    h0 = ops.plan_collapse.cache_info().hits
+    ops.plan_collapse(384, 192, 48)
+    ops.plan_collapse(384, 192, 48)
+    assert ops.plan_collapse.cache_info().hits > h0
+
+    h0 = planner.attention_plan.cache_info().hits
+    planner.attention_plan(4096, 32768)
+    planner.attention_plan(4096, 32768)
+    assert planner.attention_plan.cache_info().hits > h0
+
+
+def test_site_plans_align_with_model_gemms():
+    """Site labels recorded during a model trace are the same names the
+    analytic planner emits — the contract the bench joins the tables on."""
+    substrate.SITE_PLANS.clear()
+    cfg = _qwen("arrayflex")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    lm.forward(cfg, params, {"tokens": jnp.ones((2, 8), jnp.int32)})
+    from repro.configs.base import ShapeConfig
+    analytic = {g.name for g in planner.model_gemms(
+        cfg, ShapeConfig("t", 8, 2, "train"))}
+    executed = set(substrate.SITE_PLANS)
+    # every executed projection GEMM carries its planner name (attention
+    # score/PV products run inside the attention kernels, not the substrate)
+    assert executed <= analytic | {"frontend.img", "frontend.audio"}
+    assert {"attn.wq", "attn.wk", "attn.wv", "attn.wo",
+            "mlp.wi_gate", "mlp.wi_up", "mlp.wo", "unembed"} <= executed
+    assert all(p.backend == "arrayflex" and p.k >= 1
+               for p in substrate.SITE_PLANS.values())
+
+
+# ------------------------------------------------- model-level equivalence
+def test_forward_logits_match_across_backends():
+    cfg = _qwen()
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.asarray(
+        np.random.RandomState(0).randint(2, cfg.vocab_size, (2, 12)))
+    want, _, _ = lm.forward(cfg, params, {"tokens": toks})
+    got, _, _ = lm.forward(_qwen("arrayflex"), params, {"tokens": toks})
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+def test_decode_and_prefill_match_across_backends():
+    cfg, cfg_af = _qwen(), _qwen("arrayflex")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    tok = jnp.asarray([3, 5], jnp.int32)
+    want, _ = lm.decode_step(cfg, params, lm.init_cache(cfg, 2, 16), tok,
+                             jnp.int32(0))
+    got, _ = lm.decode_step(cfg_af, params, lm.init_cache(cfg, 2, 16), tok,
+                            jnp.int32(0))
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-5, atol=1e-4)
+
+    toks = jnp.asarray(np.random.RandomState(1).randint(2, 512, (2, 8)),
+                       jnp.int32)
+    pos = jnp.asarray([0, 0], jnp.int32)
+    lens = jnp.asarray([8, 5], jnp.int32)
+    want, wc = lm.prefill_step(cfg, params, lm.init_cache(cfg, 2, 16),
+                               toks, pos, lens)
+    got, gc = lm.prefill_step(cfg_af, params, lm.init_cache(cfg, 2, 16),
+                              toks, pos, lens)
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-5, atol=1e-4)
+    for a, b in zip(jax.tree.leaves(gc), jax.tree.leaves(wc)):
+        np.testing.assert_allclose(np.float32(a), np.float32(b),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_greedy_streams_identical_across_backends():
+    """Acceptance: the serving engine produces bit-identical greedy token
+    streams whichever backend executes the GEMMs."""
+    prompts = [[5, 6, 7], [11, 12, 13, 14], [21, 22]]
+
+    def run(backend):
+        cfg = _qwen(backend)
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        eng = ServingEngine(cfg, params,
+                            ServeConfig(max_batch=2, max_seq=32))
+        reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+                for i, p in enumerate(prompts)]
+        for r in reqs:
+            eng.submit(r)
+        eng.run_to_completion()
+        return [r.out_tokens for r in reqs]
+
+    assert run("xla") == run("arrayflex")
+
+
+@pytest.mark.parametrize("arch", ["mamba2-370m", "qwen3-moe-30b-a3b"])
+def test_other_families_match_across_backends(arch):
+    """The substrate covers mamba projections and MoE expert GEMMs too."""
+    cfg = reduced(ARCHS[arch], compute_dtype="float32",
+                  param_dtype="float32")
+    cfg_af = dataclasses.replace(cfg, gemm_backend="arrayflex")
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.ones((2, 32), jnp.int32)
+    want, _, _ = lm.forward(cfg, params, {"tokens": toks})
+    substrate.SITE_PLANS.clear()
+    got, _, _ = lm.forward(cfg_af, params, {"tokens": toks})
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-4, atol=1e-3)
+    # the family's GEMMs really dispatched through the arrayflex backend
+    # (guards against a silently dropped backend= thread-through, which
+    # would make the equivalence above trivially true)
+    family_sites = ({"mamba.z", "mamba.xbc", "mamba.dt", "mamba.out"}
+                    if ARCHS[arch].family == "ssm" else
+                    {"moe.router", "moe.wi_gate", "moe.wi_up", "moe.wo"})
+    assert family_sites <= set(substrate.SITE_PLANS)
+    assert all(substrate.SITE_PLANS[s].backend == "arrayflex"
+               for s in family_sites)
+    # decode path too (mamba/MoE decode GEMMs must also dispatch)
+    tok = jnp.asarray([3, 5], jnp.int32)
+    want, _ = lm.decode_step(cfg, params, lm.init_cache(cfg, 2, 8), tok,
+                             jnp.int32(0))
+    got, _ = lm.decode_step(cfg_af, params, lm.init_cache(cfg, 2, 8), tok,
+                            jnp.int32(0))
+    np.testing.assert_allclose(np.float32(got), np.float32(want),
+                               rtol=1e-4, atol=1e-3)
