@@ -1,0 +1,112 @@
+"""CI gate: diff the structural/perf fields of BENCH_substrate.json
+against the committed baseline and fail on regression.
+
+What is gated (and why these fields):
+
+* ``moe_expert_launches`` and the per-site ``dispatch_counts`` — exact
+  match required.  Launch counts are deterministic structure (the 3E -> 3
+  MoE batching, the fused swiglu's single dual-GEMM launch, attention
+  QK/PV routed through the substrate); any drift is a real regression.
+* fused swiglu ``speedup`` (arrayflex backend) — must not regress more
+  than ``--tolerance`` (default 20%) below the baseline ratio.  A ratio
+  of two timings on the same machine is stable enough to gate on, unlike
+  absolute CPU wall times.
+* ``equivalence.logits_max_abs_diff`` — must stay within fp32 tolerance.
+
+The expert-batching wall-time ratio is reported but NOT gated: the CPU
+grid interpreter serializes the batched launch (see substrate_bench), so
+its timing is structural; its launch counts are gated instead.
+
+Usage:
+  PYTHONPATH=src python benchmarks/check_substrate_baseline.py \
+      [--current results/bench/BENCH_substrate.json] \
+      [--baseline benchmarks/baselines/BENCH_substrate_baseline.json] \
+      [--tolerance 0.2]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+DEFAULT_CURRENT = "results/bench/BENCH_substrate.json"
+DEFAULT_BASELINE = "benchmarks/baselines/BENCH_substrate_baseline.json"
+# cap applied to the committed baseline ratio before the tolerance check
+# (cross-machine normalization; see comment at the speedup gate)
+SPEEDUP_BASELINE_CAP = 1.2
+
+
+def _fused_speedup(report, backend="arrayflex"):
+    for row in report["fused"]["swiglu"]:
+        if row["backend"] == backend:
+            return row["speedup"]
+    raise KeyError(f"no fused swiglu row for backend {backend!r}")
+
+
+def check(current: dict, baseline: dict, tolerance: float):
+    errors = []
+
+    # --- structural: launch counts must match the baseline exactly -------
+    if current["moe_expert_launches"] != baseline["moe_expert_launches"]:
+        errors.append(
+            f"moe_expert_launches changed: {current['moe_expert_launches']}"
+            f" != baseline {baseline['moe_expert_launches']}")
+    for arch, want in baseline["dispatch_counts"].items():
+        got = current["dispatch_counts"].get(arch)
+        if got != want:
+            errors.append(f"dispatch_counts[{arch}] changed: {got} != "
+                          f"baseline {want}")
+    eb = current["fused"]["expert_batching"]
+    if (eb["launches_batched"], eb["launches_unrolled"]) != (
+            baseline["fused"]["expert_batching"]["launches_batched"],
+            baseline["fused"]["expert_batching"]["launches_unrolled"]):
+        errors.append(f"expert-batching launch counts changed: {eb}")
+
+    # --- perf: fused swiglu ratio within tolerance of the baseline -------
+    # The ratio is machine-dependent (the baseline was committed from a
+    # different box than the CI runner), so cap the baseline before
+    # applying the tolerance: an unusually fast baseline machine must not
+    # impose a floor a healthy runner cannot reach.  A real regression
+    # (fusion slower than unfused) still lands far below the capped floor.
+    got = _fused_speedup(current)
+    want = min(_fused_speedup(baseline), SPEEDUP_BASELINE_CAP)
+    if got < want * (1.0 - tolerance):
+        errors.append(
+            f"fused swiglu speedup regressed >{tolerance:.0%}: "
+            f"{got:.3f}x vs capped baseline {want:.3f}x "
+            f"(floor {want * (1.0 - tolerance):.3f}x)")
+
+    # --- numerics: backend equivalence stays within fp32 tolerance -------
+    diff = current["equivalence"]["logits_max_abs_diff"]
+    if diff > 1e-3:
+        errors.append(f"backend logits diverged: {diff}")
+    return errors
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--current", default=DEFAULT_CURRENT)
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE)
+    ap.add_argument("--tolerance", type=float, default=0.2,
+                    help="allowed fractional regression of perf ratios")
+    args = ap.parse_args(argv)
+    with open(args.current) as f:
+        current = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    errors = check(current, baseline, args.tolerance)
+    if errors:
+        for e in errors:
+            print(f"REGRESSION: {e}")
+        return 1
+    print(f"substrate baseline check OK: "
+          f"moe launches {current['moe_expert_launches']['per_moe_layer_unrolled']}"
+          f"->{current['moe_expert_launches']['per_moe_layer_now']}/layer, "
+          f"fused swiglu {_fused_speedup(current):.2f}x "
+          f"(baseline {_fused_speedup(baseline):.2f}x), "
+          f"logits diff {current['equivalence']['logits_max_abs_diff']:.1e}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -3,14 +3,23 @@ Eq.(6) prediction, plus end-to-end backend equivalence on the reduced
 qwen2-0.5b model.
 
 For every GEMM site the model actually executes (``attn.wq``, ``mlp.wo``,
-..., recorded by kernels.substrate during a trace), this bench times the
-standalone substrate dispatch under each backend and prints it next to the
-analytic Eq.(6) model time at the planned collapse depth k — the paper's
-selection loop and the executed kernel, joined on the site label.  It then
-runs ``forward`` / ``decode_step`` / ``prefill_step`` under ``xla`` and
-``arrayflex`` end to end and asserts the logits agree (fp32-accumulation
-tolerance) — the arrayflex path covers every transformer GEMM shape with
-the padded kernel (no reference-GEMM fallback exists anymore).
+``attn.qk``, ..., recorded by kernels.substrate during a trace), this
+bench times the standalone substrate dispatch under each backend and
+prints it next to the analytic Eq.(6) model time at the planned collapse
+depth k — the paper's selection loop and the executed kernel, joined on
+the site label.  It then runs ``forward`` / ``decode_step`` /
+``prefill_step`` under ``xla`` and ``arrayflex`` end to end and asserts
+the logits agree (fp32-accumulation tolerance) — the arrayflex path
+covers every transformer GEMM shape with the padded kernel (no
+reference-GEMM fallback exists anymore).
+
+New in the fused-epilogue substrate: the ``fused`` section times the
+one-launch dual-GEMM swiglu against the unfused two-launch path and the
+expert-batched MoE kernel against the per-expert unroll (equal numerics
+asserted for both), and ``dispatch_counts`` / ``moe_expert_launches``
+record the per-site launch counts of a traced forward (3 per MoE layer's
+expert GEMMs, was 3E).  ``benchmarks/check_substrate_baseline.py`` diffs
+these fields against the committed baseline in CI.
 
 CPU wall-times are structural (the Pallas kernel runs in interpret mode);
 the Eq.(6) columns are the hardware-calibrated quantities.
@@ -55,6 +64,12 @@ def _time(fn, *args, iters=3):
     return (time.perf_counter() - t0) / iters * 1e6
 
 
+def _time_min(fn, *args, iters=3, repeats=3):
+    """min-of-repeats microbenchmark: the minimum is the least
+    contention-polluted sample, which is what the CI ratio gate needs."""
+    return min(_time(fn, *args, iters=iters) for _ in range(repeats))
+
+
 def _trace_site_plans(cfg, params, toks):
     """One abstract trace under the arrayflex backend leaves its GEMM
     working set in substrate.SITE_PLANS (plans are recorded at trace time,
@@ -68,21 +83,43 @@ def _trace_site_plans(cfg, params, toks):
 
 
 def _site_rows(site_plans, iters):
-    """Per-site: measured dispatch time per backend vs Eq.(6) prediction."""
+    """Per-site: measured dispatch time per backend vs Eq.(6') prediction.
+
+    The measured dispatch replays the site's recorded epilogue — the fused
+    swiglu plan prices TWO contractions plus the boundary ops, so timing a
+    plain single GEMM against it would compare different work.  The two
+    labels of a fused dual-GEMM pair share one plan and emit ONE row under
+    the joined label."""
     rows = []
     rng = np.random.RandomState(0)
+    fused_seen = set()
     for site, plan in sorted(site_plans.items()):
+        ep = plan.epilogue
+        if ep.dual:
+            if id(plan) in fused_seen:
+                continue              # second label of the same fused pair
+            fused_seen.add(id(plan))
+            site = "+".join(s for s, p in sorted(site_plans.items())
+                            if p is plan)
         x = jnp.asarray(rng.randn(plan.T, plan.N), jnp.float32)
         w = jnp.asarray(rng.randn(plan.N, plan.M), jnp.float32)
+        w2 = (jnp.asarray(rng.randn(plan.N, plan.M), jnp.float32)
+              if ep.dual else None)
+        b = jnp.asarray(rng.randn(plan.M), jnp.float32) if ep.bias else None
+        b2 = (jnp.asarray(rng.randn(plan.M), jnp.float32)
+              if ep.bias2 else None)
         row = {"site": site, "M": plan.M, "N": plan.N, "T": plan.T,
-               "k": plan.k,
+               "k": plan.k, "epilogue": ep.kind,
+               "contractions": ep.contractions,
                "eq6_pred_us": round(plan.t_pred_ps / 1e6, 4),
                "eq6_conventional_us": round(plan.t_conventional_ps / 1e6, 4),
                "eq6_saving_pct": round(100 * plan.saving, 1)}
         for backend in EXEC_BACKENDS:
-            f = jax.jit(lambda a, b, be=backend: substrate.gemm(
-                a, b, site=site, backend=be))
-            row[f"measured_{backend}_us"] = round(_time(f, x, w,
+            f = jax.jit(lambda a, be=backend, s=site, kind=ep.kind:
+                        substrate.gemm(a, w, site=s, backend=be,
+                                       epilogue=kind, w2=w2, bias=b,
+                                       bias2=b2))
+            row[f"measured_{backend}_us"] = round(_time(f, x,
                                                         iters=iters), 1)
         rows.append(row)
     return rows
@@ -118,15 +155,116 @@ def _model_rows(params, toks, iters):
     return steps, max_diff
 
 
+def _fused_swiglu_rows(iters):
+    """One-launch dual-GEMM swiglu vs the unfused two-launch path, per
+    backend, at equal numerics (max-abs-diff asserted tiny).
+
+    Even on the CPU interpreter the fusion wins (~1.3x at this shape): the
+    unfused path materializes both (T, N) intermediates and re-reads x.
+    ``iters`` should be >= ~10 — single-shot wall times on shared CPUs are
+    noise."""
+    rng = np.random.RandomState(1)
+    # SA-tile-scale mlp.wi shape: big enough that the saved intermediate
+    # materialization (the fusion's point) dominates, not launch overhead
+    T, K, N = 256, 512, 512
+    x = jnp.asarray(rng.randn(T, K), jnp.float32)
+    wg = jnp.asarray(rng.randn(K, N), jnp.float32)
+    wu = jnp.asarray(rng.randn(K, N), jnp.float32)
+    rows = []
+    for backend in EXEC_BACKENDS:
+        fused = jax.jit(lambda a, be=backend: substrate.gemm(
+            a, wg, w2=wu, epilogue="swiglu", backend=be))
+
+        def unfused(a, be=backend):
+            g = substrate.gemm(a, wg, backend=be)
+            u = substrate.gemm(a, wu, backend=be)
+            return jax.nn.silu(g) * u
+
+        unfused = jax.jit(unfused)
+        us_f = _time_min(fused, x, iters=iters, repeats=5)
+        us_u = _time_min(unfused, x, iters=iters, repeats=5)
+        diff = float(np.max(np.abs(np.float32(fused(x))
+                                   - np.float32(unfused(x)))))
+        assert diff < 1e-3, f"fused swiglu numerics diverged: {diff}"
+        rows.append({"backend": backend, "T": T, "K": K, "N": N,
+                     "fused_us": round(us_f, 1),
+                     "unfused_us": round(us_u, 1),
+                     "speedup": round(us_u / us_f, 3),
+                     "max_abs_diff": diff})
+    return rows
+
+
+def _expert_batching_row(iters):
+    """ONE expert-batched launch vs the per-expert unroll (what
+    expert_gemm did before) under the arrayflex backend.
+
+    CPU-interpret wall times are structural only for this row: the
+    interpreter serializes the whole (E, i, j, s) grid through one scan,
+    so the batched launch measures *slower* here — the hardware-relevant
+    metric is ``launches_batched`` vs ``launches_unrolled`` (1 vs E per
+    site; dispatch overhead and scheduling live per launch on TPU)."""
+    rng = np.random.RandomState(2)
+    G, E, C, K, N = 1, 8, 16, 64, 128
+    x = jnp.asarray(rng.randn(G, E, C, K), jnp.float32)
+    w = jnp.asarray(rng.randn(E, K, N), jnp.float32)
+    batched = jax.jit(lambda a: substrate.expert_gemm(
+        a, w, backend="arrayflex"))
+
+    def unrolled(a):
+        outs = [substrate.gemm(a[:, e], w[e], backend="arrayflex")
+                for e in range(E)]
+        return jnp.stack(outs, axis=1)
+
+    unrolled = jax.jit(unrolled)
+    us_b = _time_min(batched, x, iters=iters)
+    us_u = _time_min(unrolled, x, iters=iters)
+    diff = float(np.max(np.abs(np.float32(batched(x))
+                               - np.float32(unrolled(x)))))
+    assert diff < 1e-3, f"expert batching numerics diverged: {diff}"
+    return {"experts": E, "G": G, "C": C, "K": K, "N": N,
+            "batched_us": round(us_b, 1), "unrolled_us": round(us_u, 1),
+            "speedup": round(us_u / us_b, 3), "max_abs_diff": diff,
+            "launches_batched": 1, "launches_unrolled": E}
+
+
+def _dispatch_counts():
+    """Per-site substrate dispatch counts of one traced forward under the
+    arrayflex backend (scan traces one super-block, so counts are per
+    layer).  The MoE expert-GEMM sites must show 1 launch each — the
+    3E -> 3 acceptance claim."""
+    out = {}
+    for arch in ("qwen2-0.5b", "qwen3-moe-30b-a3b"):
+        cfg = reduced(get_config(arch), compute_dtype="float32",
+                      param_dtype="float32", gemm_backend="arrayflex")
+        params = lm.init_params(cfg, jax.random.PRNGKey(0))
+        substrate.clear_plan_cache()
+        jax.eval_shape(lambda p, b, c=cfg: lm.forward(c, p, b), params,
+                       {"tokens": jnp.ones((2, 8), jnp.int32)})
+        out[arch] = dict(sorted(substrate.DISPATCH_COUNTS.items()))
+    moe_cfg = reduced(get_config("qwen3-moe-30b-a3b"))
+    E = moe_cfg.moe.num_experts
+    moe_counts = out["qwen3-moe-30b-a3b"]
+    per_layer = sum(moe_counts.get(s, 0)
+                    for s in ("moe.wi_gate", "moe.wi_up", "moe.wo"))
+    assert per_layer == 3, f"expected 3 expert-GEMM launches, got {per_layer}"
+    launches = {"experts": E,
+                "per_moe_layer_unrolled": 3 * E,
+                "per_moe_layer_now": per_layer}
+    return out, launches
+
+
 def _analytic_full_rows():
-    """Eq.(6) plans for the FULL qwen2-0.5b decode cell (no execution):
-    what the selection loop buys at real scale."""
+    """Eq.(6') plans for the FULL qwen2-0.5b decode cell (no execution):
+    what the selection loop buys at real scale.  Uses planner.plan_gemm so
+    the fused-epilogue entries (the swiglu wi pair carries epilogue_ops=2)
+    are priced exactly as the executed substrate plans are."""
     rows = []
     for g in planner.model_gemms(get_config("qwen2-0.5b"), DECODE_32K):
-        p = substrate.plan_gemm(g.M, g.N, g.T, "arrayflex")
+        p = planner.plan_gemm(g, 128, 128)
         rows.append({"site": g.name, "M": g.M, "N": g.N, "T": g.T,
                      "count": g.count, "k": p.k,
-                     "eq6_pred_us": round(p.t_pred_ps / 1e6, 4),
+                     "epilogue_ops": g.epilogue_ops,
+                     "eq6_pred_us": round(p.t_abs_ps / g.count / 1e6, 4),
                      "eq6_saving_pct": round(100 * p.saving, 1)})
     return rows
 
@@ -142,12 +280,22 @@ def substrate_report(smoke: bool = False):
     site_plans = _trace_site_plans(cfg, params, toks)
     site_rows = _site_rows(site_plans, iters)
     model_rows, max_diff = _model_rows(params, toks, iters)
+    # the CI gate compares the fused/unfused *ratio* against the baseline
+    # with 20% headroom — average enough iterations that run-to-run ratio
+    # noise stays well inside it even on shared runners
+    fused_iters = 20 if smoke else 50
+    fused_rows = _fused_swiglu_rows(fused_iters)
+    expert_row = _expert_batching_row(fused_iters)
+    dispatch_counts, moe_launches = _dispatch_counts()
 
     report = {
         "config": {"arch": "qwen2-0.5b (reduced)", "batch": B, "seq": S,
                    "backends": list(EXEC_BACKENDS), "smoke": smoke},
         "sites": site_rows,
         "model_steps": model_rows,
+        "fused": {"swiglu": fused_rows, "expert_batching": expert_row},
+        "dispatch_counts": dispatch_counts,
+        "moe_expert_launches": moe_launches,
         "equivalence": {"logits_max_abs_diff": max_diff,
                         "reference_fallbacks": 0},
         "plan_cache": dict(substrate.plan_cache_info()._asdict()),
@@ -157,9 +305,11 @@ def substrate_report(smoke: bool = False):
     os.makedirs(os.path.dirname(OUT_JSON), exist_ok=True)
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=1)
+    af_swiglu = next(r for r in fused_rows if r["backend"] == "arrayflex")
     derived = (f"{len(site_rows)} sites, logits max diff {max_diff:.1e}, "
-               f"plan cache {report['plan_cache']['currsize']} entries -> "
-               f"{OUT_JSON}")
+               f"fused swiglu {af_swiglu['speedup']:.2f}x, "
+               f"moe launches {moe_launches['per_moe_layer_unrolled']}->"
+               f"{moe_launches['per_moe_layer_now']}/layer -> {OUT_JSON}")
     return site_rows, derived
 
 

@@ -99,6 +99,11 @@ class ModelConfig:
     # "arrayflex" (Pallas K-collapse kernel at the planner's Eq.(6) k),
     # "ref" (fp32 oracle).
     gemm_backend: str = "xla"
+    # Pallas interpret-mode override threaded to every kernel launch.
+    # None resolves via the REPRO_PALLAS_INTERPRET env var, else the
+    # default (compiled on real TPU backends, interpreted elsewhere) —
+    # see kernels.runtime.resolve_interpret.  True/False force it.
+    pallas_interpret: Optional[bool] = None
 
     # ------------------------------------------------------------------
     @property

@@ -33,6 +33,10 @@ class GEMM:
     N: int
     T: int
     count: int = 1        # how many times this GEMM runs (e.g. layers)
+    # fused-epilogue pricing (Eq. 5'/6'): vector ops at the collapsed-block
+    # boundary and fused contraction count (2 = dual-GEMM swiglu)
+    epilogue_ops: int = 0
+    contractions: int = 1
 
 
 @dataclass
@@ -52,14 +56,17 @@ class LayerPlan:
 
 def plan_gemm(g: GEMM, R: int, C: int,
               tp: TimingParams = DEFAULT_TIMING) -> LayerPlan:
-    k = timing.best_k(g.M, g.N, g.T, R, C, tp)
+    k = timing.best_k(g.M, g.N, g.T, R, C, tp, epilogue_ops=g.epilogue_ops)
     return LayerPlan(
         gemm=g, k=k, k_hat=timing.k_hat(R, C, g.T, tp),
-        cycles=timing.total_cycles(g.M, g.N, g.T, R, C, k),
-        clock_ghz=tp.clock_ghz(k),
-        t_abs_ps=timing.t_abs_ps(g.M, g.N, g.T, R, C, k, tp) * g.count,
+        cycles=g.contractions * timing.total_cycles(g.M, g.N, g.T, R, C, k),
+        clock_ghz=tp.clock_ghz(k, g.epilogue_ops),
+        t_abs_ps=timing.t_abs_ps(g.M, g.N, g.T, R, C, k, tp,
+                                 epilogue_ops=g.epilogue_ops,
+                                 contractions=g.contractions) * g.count,
         t_conventional_ps=timing.t_abs_conventional_ps(
-            g.M, g.N, g.T, R, C, tp) * g.count,
+            g.M, g.N, g.T, R, C, tp, contractions=g.contractions,
+            epilogue_ops=g.epilogue_ops) * g.count,
     )
 
 
@@ -137,9 +144,14 @@ def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
             GEMM("mamba.out", d, d_in, toks, n_mamba),
         ]
     if n_dense:
+        # the wi pair executes as ONE fused dual-GEMM swiglu launch (see
+        # nn/layers.swiglu): each entry carries the Eq.(5') epilogue term
+        # (silu + gate = 2 boundary ops) so per-entry t_abs sums to exactly
+        # the fused plan's contractions=2 prediction and best_k matches the
+        # substrate's plan_collapse(..., epilogue_ops=2) pick
         out += [
-            GEMM("mlp.wi_gate", cfg.d_ff, d, toks, n_dense),
-            GEMM("mlp.wi_up", cfg.d_ff, d, toks, n_dense),
+            GEMM("mlp.wi_gate", cfg.d_ff, d, toks, n_dense, epilogue_ops=2),
+            GEMM("mlp.wi_up", cfg.d_ff, d, toks, n_dense, epilogue_ops=2),
             GEMM("mlp.wo", d, cfg.d_ff, toks, n_dense),
         ]
     if n_moe and cfg.moe:

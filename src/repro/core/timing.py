@@ -9,6 +9,19 @@ Matrix multiply X[T,M] = A[T,N] x B[N,M] on an R x C weight-stationary SA:
   Eq.(6)  T_abs(k) = L_tot(k) * T_clk(k)
   Eq.(7)  k_hat    = sqrt( (R+C)/(R+T-2) * (d_FF+d_mul+d_add)/(d_CSA+2d_mux) )
 
+Fused epilogues (bias add, activation, gated multiply) extend Eq.(5): the
+carry-propagate stage at the collapsed-block boundary gains ``e`` fused
+vector operations, each adding ``d_epi`` to the critical path, so
+
+  Eq.(5')  T_clk(k, e) = T_clk(k) + e * d_epi
+  Eq.(6')  T_abs(k, e) = n_con * L_tot(k) * T_clk(k, e)
+
+where ``n_con`` counts fused contractions (2 for the dual-GEMM swiglu
+epilogue, which streams both weight matrices through the same collapsed
+schedule).  Because the epilogue term is k-independent while the cycle
+count falls with k, a fused epilogue shifts the Eq.(6) argmin toward
+deeper collapse — ``best_k`` re-picks k accordingly.
+
 Clock numbers are calibrated to the paper's 28nm silicon results:
 conventional SA 2.0 GHz; ArrayFlex 1.8 / 1.7 / 1.4 GHz at k = 1 / 2 / 4.
 A least-squares fit of Eq.(5) to those three points gives
@@ -31,17 +44,24 @@ class TimingParams:
     freq_table_ghz: tuple = ((1, 1.8), (2, 1.7), (4, 1.4))
     mode: str = "table"           # "table" | "linear"
     supported_k: tuple = (1, 2, 4)
+    # Eq.(5') epilogue coefficient: critical-path cost of one fused vector
+    # op (bias add / activation / gated multiply) at the carry-propagate
+    # stage.  Sized like a CSA+mux stage — the epilogue ALU sits behind the
+    # same collapsed-block boundary the carry-propagate adder does.
+    d_epilogue_ps: float = 54.35
 
-    def clock_period_ps(self, k: int) -> float:
-        """Minimum clock period of a k-collapsed ArrayFlex pipeline."""
+    def clock_period_ps(self, k: int, epilogue_ops: int = 0) -> float:
+        """Eq.(5'): minimum clock period of a k-collapsed ArrayFlex
+        pipeline with ``epilogue_ops`` fused vector ops at the boundary."""
+        epi = epilogue_ops * self.d_epilogue_ps
         if self.mode == "table":
             for kk, ghz in self.freq_table_ghz:
                 if kk == k:
-                    return 1000.0 / ghz
-        return self.d_base_ps + k * self.d_inc_ps
+                    return 1000.0 / ghz + epi
+        return self.d_base_ps + k * self.d_inc_ps + epi
 
-    def clock_ghz(self, k: int) -> float:
-        return 1000.0 / self.clock_period_ps(k)
+    def clock_ghz(self, k: int, epilogue_ops: int = 0) -> float:
+        return 1000.0 / self.clock_period_ps(k, epilogue_ops)
 
 
 DEFAULT_TIMING = TimingParams()
@@ -71,16 +91,31 @@ def total_cycles_conventional(M: int, N: int, T: int, R: int, C: int) -> int:
 
 
 def t_abs_ps(M: int, N: int, T: int, R: int, C: int, k: int,
-             params: TimingParams = DEFAULT_TIMING) -> float:
-    """Eq.(6): absolute execution time (ps) on a k-collapsed ArrayFlex."""
-    return total_cycles(M, N, T, R, C, k) * params.clock_period_ps(k)
+             params: TimingParams = DEFAULT_TIMING,
+             epilogue_ops: int = 0, contractions: int = 1) -> float:
+    """Eq.(6'): absolute execution time (ps) on a k-collapsed ArrayFlex.
+
+    ``epilogue_ops`` prices fused post-GEMM work into the per-step period
+    (Eq. 5'); ``contractions`` > 1 streams that many weight matrices
+    through the same collapsed schedule (the dual-GEMM swiglu epilogue).
+    """
+    return (contractions * total_cycles(M, N, T, R, C, k)
+            * params.clock_period_ps(k, epilogue_ops))
 
 
 def t_abs_conventional_ps(M: int, N: int, T: int, R: int, C: int,
-                          params: TimingParams = DEFAULT_TIMING) -> float:
-    """Fixed-pipeline SA at its (higher) max clock."""
-    return (total_cycles_conventional(M, N, T, R, C)
-            * params.conventional_period_ps)
+                          params: TimingParams = DEFAULT_TIMING,
+                          contractions: int = 1,
+                          epilogue_ops: int = 0) -> float:
+    """Fixed-pipeline SA at its (higher) max clock, with the SAME fused
+    epilogue datapath (``epilogue_ops`` boundary ops on the period).
+    Pricing the epilogue into both machines keeps the *saving* a measure
+    of the transparent-pipelining technique alone — otherwise every fused
+    GEMM would be charged the epilogue against an epilogue-free baseline
+    that must run it as an (uncosted) post-pass anyway."""
+    return (contractions * total_cycles_conventional(M, N, T, R, C)
+            * (params.conventional_period_ps
+               + epilogue_ops * params.d_epilogue_ps))
 
 
 def k_hat(R: int, C: int, T: int,
@@ -91,7 +126,14 @@ def k_hat(R: int, C: int, T: int,
 
 
 def best_k(M: int, N: int, T: int, R: int, C: int,
-           params: TimingParams = DEFAULT_TIMING) -> int:
-    """Discrete argmin of Eq.(6) over the supported collapse depths."""
+           params: TimingParams = DEFAULT_TIMING,
+           epilogue_ops: int = 0) -> int:
+    """Discrete argmin of Eq.(6') over the supported collapse depths.
+
+    The epilogue term is additive on the period, so it never changes the
+    ordering *between* two depths with equal cycle counts but can tip the
+    argmin toward deeper collapse (fewer boundary crossings amortize the
+    fixed epilogue cost better)."""
     return min(params.supported_k,
-               key=lambda k: t_abs_ps(M, N, T, R, C, k, params))
+               key=lambda k: t_abs_ps(M, N, T, R, C, k, params,
+                                      epilogue_ops))

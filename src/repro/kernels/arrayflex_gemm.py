@@ -1,4 +1,5 @@
-"""ArrayFlex GEMM as a Pallas TPU kernel with configurable K-collapse.
+"""ArrayFlex GEMM as a Pallas TPU kernel: configurable K-collapse with
+fused epilogues and an expert-batched variant.
 
 TPU adaptation of the paper's configurable transparent pipelining (DESIGN.md
 §Hardware adaptation): the MXU is itself a 128x128 systolic array whose
@@ -13,6 +14,17 @@ K-panels into ONE grid step:
     sums stay in "redundant" form across the k sub-tiles and the final
     cast/store is the carry-propagate add at the collapsed-block boundary.
 
+That carry-propagate boundary is exactly where an **epilogue** belongs:
+bias add, activation, and the gated multiply of a second fused contraction
+(dual-GEMM swiglu: ``silu(x@w + b) * (x@w2 + b2)``) are applied to the
+resolved fp32 accumulator *before* the single cast/store, so the
+activation never round-trips through HBM.  Eq.(5') in core.timing prices
+the fused vector ops into the per-step period and ``best_k`` re-picks k.
+
+``arrayflex_expert_gemm`` runs a whole stack of per-expert GEMMs in ONE
+``pallas_call`` whose *leading grid dimension is the expert axis* — the
+MoE layer's 3E per-layer kernel launches become 3.
+
 core.planner.best_k picks k per GEMM shape exactly as the paper picks the
 pipeline depth per CNN layer.
 """
@@ -25,38 +37,121 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
 
-def _kernel(x_ref, w_ref, o_ref, acc_ref, *, k_collapse: int, n_steps: int):
+# Epilogue activations applicable at the carry-propagate boundary.
+ACTIVATIONS = ("none", "silu", "gelu")
+
+
+def _act(y, activation: str):
+    if activation == "none":
+        return y
+    if activation == "silu":
+        return jax.nn.silu(y)
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    raise ValueError(f"unknown epilogue activation {activation!r}; "
+                     f"supported: {ACTIVATIONS}")
+
+
+def apply_epilogue(y, y2=None, bias=None, bias2=None, activation="none"):
+    """The epilogue's reference semantics, shared by the fused kernel's
+    store phase and every unfused backend:
+
+        out = act(y [+ bias]) [* (y2 [+ bias2])]
+
+    Operates in the dtype of ``y`` (fp32 inside the kernel; the operands'
+    dtype on the unfused xla path, reproducing the pre-fusion op order
+    bit for bit).
+    """
+    if bias is not None:
+        y = y + bias.astype(y.dtype)
+    out = _act(y, activation)
+    if y2 is not None:
+        if bias2 is not None:
+            y2 = y2 + bias2.astype(y2.dtype)
+        out = out * y2
+    return out
+
+
+# ---------------------------------------------------------------------------
+# single-GEMM kernel (optionally dual-contraction) with fused epilogue
+
+def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
+            dual: bool, has_b: bool, has_b2: bool):
+    """refs = x, w, [w2], [b], [b2], o, acc, [acc2] (inputs, outputs,
+    scratch — in pallas_call order)."""
+    i = 2
+    x_ref, w_ref = refs[0], refs[1]
+    w2_ref = refs[i] if dual else None
+    i += dual
+    b_ref = refs[i] if has_b else None
+    i += has_b
+    b2_ref = refs[i] if has_b2 else None
+    i += has_b2
+    o_ref = refs[i]
+    acc_ref = refs[i + 1]
+    acc2_ref = refs[i + 2] if dual else None
+
     @pl.when(pl.program_id(2) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
+        if dual:
+            acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
     x = x_ref[...]                     # (bm, bk * k)
     w = w_ref[...]                     # (bk * k, bn)
+    w2 = w2_ref[...] if dual else None
     bk = x.shape[1] // k_collapse
     acc = acc_ref[...]
+    acc2 = acc2_ref[...] if dual else None
     # the k-deep "carry-save" chain: k MXU passes accumulate into the same
-    # fp32 VMEM accumulator within one grid step
+    # fp32 VMEM accumulator within one grid step (both contractions stream
+    # through the same collapsed schedule when dual)
     for i in range(k_collapse):
-        acc = acc + jnp.dot(x[:, i * bk:(i + 1) * bk],
-                            w[i * bk:(i + 1) * bk, :],
+        xs = x[:, i * bk:(i + 1) * bk]
+        ws = slice(i * bk, (i + 1) * bk)
+        acc = acc + jnp.dot(xs, w[ws, :],
                             preferred_element_type=jnp.float32)
+        if dual:
+            acc2 = acc2 + jnp.dot(xs, w2[ws, :],
+                                  preferred_element_type=jnp.float32)
     acc_ref[...] = acc
+    if dual:
+        acc2_ref[...] = acc2
 
     @pl.when(pl.program_id(2) == n_steps - 1)
-    def _store():                      # carry-propagate: resolve + cast once
-        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+    def _store():                      # carry-propagate: resolve the fp32
+        out = apply_epilogue(          # accumulator(s), fuse the epilogue,
+            acc_ref[...],              # cast and store ONCE
+            acc2_ref[...] if dual else None,
+            b_ref[...].astype(jnp.float32) if has_b else None,
+            b2_ref[...].astype(jnp.float32) if has_b2 else None,
+            activation)
+        o_ref[...] = out.astype(o_ref.dtype)
 
 
-def arrayflex_gemm(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128,
-                   k_collapse: int = 1, out_dtype=None,
-                   interpret: bool = True):
-    """X[M,K] @ W[K,N] with K-collapse factor k_collapse.
+def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
+                   activation: str = "none", bm: int = 128, bn: int = 128,
+                   bk: int = 128, k_collapse: int = 1, out_dtype=None,
+                   interpret=None):
+    """X[M,K] @ W[K,N] with K-collapse factor k_collapse and an optional
+    fused epilogue at the carry-propagate boundary:
+
+        out = act(X@W [+ bias]) [* (X@W2 [+ bias2])]
+
+    ``w2`` (same shape as ``w``) enables the dual-contraction gated form —
+    with ``activation="silu"`` this is the one-kernel swiglu.  ``bias`` /
+    ``bias2`` are (N,) vectors added to the fp32 accumulator(s) before the
+    activation/gate.  All epilogue math happens on the resolved fp32
+    accumulator; the output is cast exactly once.
 
     Divisibility contract:
       * ``bm`` (clamped to M) must divide M and ``bn`` (clamped to N) must
         divide N — otherwise a ``ValueError`` is raised;
-      * empty M, N or K returns an all-zero (M, N) result directly;
+      * empty M, N or K short-circuits: the epilogue is applied to the
+        exact zero accumulator(s) (NOT necessarily a zero result — a bias
+        epilogue with K=0 returns ``act(bias)``);
       * K may be anything.  The K axis is tiled into
         ``n_steps = ceil(K / (bk * k_collapse))`` collapsed blocks of
         ``k_collapse`` equal sub-tiles each; when K does not fill that grid
@@ -71,8 +166,25 @@ def arrayflex_gemm(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128,
         raise ValueError(f"contraction mismatch: x {x.shape} @ w {w.shape}")
     if k_collapse < 1:
         raise ValueError(f"k_collapse must be >= 1, got {k_collapse}")
-    if M == 0 or N == 0 or K == 0:      # empty operand: exact zero result
-        return jnp.zeros((M, N), out_dtype or x.dtype)
+    if activation not in ACTIVATIONS:
+        raise ValueError(f"unknown epilogue activation {activation!r}; "
+                         f"supported: {ACTIVATIONS}")
+    dual = w2 is not None
+    if dual and w2.shape != w.shape:
+        raise ValueError(f"w2 {w2.shape} must match w {w.shape}")
+    if bias2 is not None and not dual:
+        raise ValueError("bias2 requires w2 (the dual contraction)")
+    for name, b in (("bias", bias), ("bias2", bias2)):
+        if b is not None and b.shape != (N,):
+            raise ValueError(f"{name} must be ({N},), got {b.shape}")
+    out_dtype = out_dtype or x.dtype
+    if M == 0 or N == 0 or K == 0:      # empty operand: epilogue of zeros
+        zero = jnp.zeros((M, N), jnp.float32)
+        out = apply_epilogue(zero, zero if dual else None,
+                             None if bias is None else bias.astype(jnp.float32),
+                             None if bias2 is None else bias2.astype(jnp.float32),
+                             activation)
+        return out.astype(out_dtype)
     bm, bn = min(bm, M), min(bn, N)
     if M % bm or N % bn:
         raise ValueError(
@@ -87,19 +199,114 @@ def arrayflex_gemm(x, w, *, bm: int = 128, bn: int = 128, bk: int = 128,
     if K_pad != K:
         x = jnp.pad(x, ((0, 0), (0, K_pad - K)))
         w = jnp.pad(w, ((0, K_pad - K), (0, 0)))
+        if dual:
+            w2 = jnp.pad(w2, ((0, K_pad - K), (0, 0)))
     grid = (M // bm, N // bn, n_steps)
-    out_dtype = out_dtype or x.dtype
+    interpret = resolve_interpret(interpret)
     kernel = functools.partial(_kernel, k_collapse=k_collapse,
+                               n_steps=n_steps, activation=activation,
+                               dual=dual, has_b=bias is not None,
+                               has_b2=bias2 is not None)
+    operands = [x, w]
+    in_specs = [
+        pl.BlockSpec((bm, kk), lambda i, j, s: (i, s)),
+        pl.BlockSpec((kk, bn), lambda i, j, s: (s, j)),
+    ]
+    if dual:
+        operands.append(w2)
+        in_specs.append(pl.BlockSpec((kk, bn), lambda i, j, s: (s, j)))
+    for b in (bias, bias2):
+        if b is not None:
+            operands.append(b.reshape(1, N))
+            in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+    scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
+    if dual:
+        scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        scratch_shapes=scratch,
+        interpret=interpret,
+    )(*operands)
+
+
+# ---------------------------------------------------------------------------
+# expert-batched kernel: the expert axis is the leading grid dimension
+
+def _expert_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_collapse: int,
+                   n_steps: int):
+    @pl.when(pl.program_id(3) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    x = x_ref[0]                       # (bm, bk * k)  — this expert's rows
+    w = w_ref[0]                       # (bk * k, bn)  — this expert's weights
+    bk = x.shape[1] // k_collapse
+    acc = acc_ref[...]
+    for i in range(k_collapse):
+        acc = acc + jnp.dot(x[:, i * bk:(i + 1) * bk],
+                            w[i * bk:(i + 1) * bk, :],
+                            preferred_element_type=jnp.float32)
+    acc_ref[...] = acc
+
+    @pl.when(pl.program_id(3) == n_steps - 1)
+    def _store():                      # carry-propagate: resolve + cast once
+        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+
+
+def arrayflex_expert_gemm(x, w, *, bm: int = 128, bn: int = 128,
+                          bk: int = 128, k_collapse: int = 1,
+                          out_dtype=None, interpret=None):
+    """Batched per-expert GEMM in ONE launch: X[E,T,K] @ W[E,K,N] -> [E,T,N].
+
+    Grid = (E, T/bm, N/bn, n_steps) — the *leading* grid dimension walks
+    the expert axis, so every expert's K-collapsed schedule runs inside a
+    single ``pallas_call`` (the MoE layer's per-site dispatch count drops
+    from E to 1).  Each (e, i, j) output tile owns the same fp32
+    carry-save accumulator walk as :func:`arrayflex_gemm`; experts share
+    the collapse depth k, planned once for the common (T, K, N) shape.
+
+    Same divisibility contract as :func:`arrayflex_gemm` on T (rows) and
+    N; K is zero-padded to the collapsed-block grid; empty E/T/N/K
+    returns exact zeros.
+    """
+    E, T, K = x.shape
+    E2, K2, N = w.shape
+    if E != E2 or K != K2:
+        raise ValueError(f"expert gemm mismatch: x {x.shape} @ w {w.shape}")
+    if k_collapse < 1:
+        raise ValueError(f"k_collapse must be >= 1, got {k_collapse}")
+    out_dtype = out_dtype or x.dtype
+    if E == 0 or T == 0 or N == 0 or K == 0:
+        return jnp.zeros((E, T, N), out_dtype)
+    bm, bn = min(bm, T), min(bn, N)
+    if T % bm or N % bn:
+        raise ValueError(
+            f"bm must divide T and bn must divide N: "
+            f"T={T}, bm={bm}, N={N}, bn={bn}")
+    n_steps = -(-K // (bk * k_collapse))
+    bk_eff = -(-K // (n_steps * k_collapse))
+    kk = bk_eff * k_collapse
+    K_pad = n_steps * kk
+    if K_pad != K:
+        x = jnp.pad(x, ((0, 0), (0, 0), (0, K_pad - K)))
+        w = jnp.pad(w, ((0, 0), (0, K_pad - K), (0, 0)))
+    grid = (E, T // bm, N // bn, n_steps)
+    interpret = resolve_interpret(interpret)
+    kernel = functools.partial(_expert_kernel, k_collapse=k_collapse,
                                n_steps=n_steps)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((bm, kk), lambda i, j, s: (i, s)),
-            pl.BlockSpec((kk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((1, bm, kk), lambda e, i, j, s: (e, i, s)),
+            pl.BlockSpec((1, kk, bn), lambda e, i, j, s: (e, s, j)),
         ],
-        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, s: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, T, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
     )(x, w)

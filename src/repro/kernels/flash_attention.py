@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.runtime import resolve_interpret
+
 NEG_INF = -1e30
 
 
@@ -68,14 +70,17 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, *, kv_chunk: int, causal: bool,
 
 
 def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
-                    bq: int = 128, kv_chunk: int = 128,
-                    interpret: bool = True):
+                    bq: int = 128, kv_chunk: int = 128, interpret=None):
     """q: (BH, S, D); k/v: (BH, T, D).  Returns (BH, S, D).
 
     T need not divide ``kv_chunk``: K/V are zero-padded to the chunk grid
     and the kernel masks columns past the true length (so the planner's
     chunk pick runs as-is instead of degenerating via a divisor search).
+
+    ``interpret=None`` resolves via :func:`repro.kernels.runtime
+    .resolve_interpret` (env override, compiled on TPU).
     """
+    interpret = resolve_interpret(interpret)
     BH, S, D = q.shape
     T = k.shape[1]
     bq = min(bq, S)

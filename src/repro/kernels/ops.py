@@ -2,12 +2,20 @@
 
 ``arrayflex_matmul`` is the framework's ArrayFlex-scheduled GEMM: the
 collapse factor k comes from core.planner (Eq. 6/7) for the GEMM's (M,N,T)
-shape, mirroring the paper's per-CNN-layer pipeline-depth selection.
-``attention`` picks the flash kernel's KV-chunk with the same machinery.
+shape, mirroring the paper's per-CNN-layer pipeline-depth selection, and an
+optional fused epilogue (bias / activation / dual-GEMM gate) rides the
+carry-propagate store.  ``arrayflex_expert_matmul`` runs a stack of
+same-shape per-expert GEMMs in one launch.  ``attention`` picks the flash
+kernel's KV-chunk with the same machinery.
 
 ``plan_collapse`` is memoized: it is a pure function of small int tuples,
 and model tracing + per-request serving hit it with the same handful of
 shapes thousands of times.
+
+Pallas ``interpret`` resolution (the TPU-hardware switch): an explicit
+argument wins, else the ``REPRO_PALLAS_INTERPRET`` env var, else interpret
+mode everywhere but on real TPU backends.  ``ModelConfig.pallas_interpret``
+threads the explicit argument from model configs down to every kernel.
 """
 from __future__ import annotations
 
@@ -17,8 +25,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import planner, timing
-from repro.kernels.arrayflex_gemm import arrayflex_gemm
+from repro.kernels.arrayflex_gemm import (apply_epilogue, arrayflex_gemm,
+                                          arrayflex_expert_gemm)
 from repro.kernels.flash_attention import flash_attention
+from repro.kernels.runtime import resolve_interpret
 
 # MXU geometry: the TPU systolic tile the collapse factor schedules around.
 SA_R = 128
@@ -26,47 +36,81 @@ SA_C = 128
 
 
 @functools.lru_cache(maxsize=None)
-def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4) -> int:
+def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4,
+                  epilogue_ops: int = 0) -> int:
     """ArrayFlex pipeline depth for GEMM X[T,K] @ W[K,M] (Eq. 7 -> discrete).
 
     K is the contraction (the SA's R-tiled dim), M the output columns.
+    ``epilogue_ops`` prices fused post-GEMM vector ops into the per-step
+    period (Eq. 5'), which can shift the argmin toward deeper collapse.
     """
-    k = timing.best_k(M, K, T_rows, SA_R, SA_C)
+    k = timing.best_k(M, K, T_rows, SA_R, SA_C, epilogue_ops=epilogue_ops)
     return max(1, min(max_k, k))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("activation", "has_w2", "has_b",
+                                    "has_b2", "k_collapse", "bk",
+                                    "out_dtype", "interpret"))
+def _gemm(x, w, w2, bias, bias2, activation, has_w2, has_b, has_b2,
+          k_collapse: int, bk: int, out_dtype, interpret: bool):
+    return arrayflex_gemm(x, w,
+                          w2=w2 if has_w2 else None,
+                          bias=bias if has_b else None,
+                          bias2=bias2 if has_b2 else None,
+                          activation=activation, bk=bk,
+                          k_collapse=k_collapse, out_dtype=out_dtype,
+                          interpret=interpret)
 
 
 @functools.partial(jax.jit,
                    static_argnames=("k_collapse", "bk", "out_dtype",
                                     "interpret"))
-def _gemm(x, w, k_collapse: int, bk: int, out_dtype, interpret: bool):
-    return arrayflex_gemm(x, w, bk=bk, k_collapse=k_collapse,
-                          out_dtype=out_dtype, interpret=interpret)
+def _expert_gemm(x, w, k_collapse: int, bk: int, out_dtype,
+                 interpret: bool):
+    return arrayflex_expert_gemm(x, w, bk=bk, k_collapse=k_collapse,
+                                 out_dtype=out_dtype, interpret=interpret)
 
 
 def _round_up(x: int, m: int) -> int:
     return ((x + m - 1) // m) * m
 
 
-def arrayflex_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
-                     out_dtype=None, interpret: bool = True):
-    """Planner-configured GEMM.  x: (..., K), w: (K, N).
+def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
+                     activation: str = "none", k_collapse: int = 0,
+                     bk: int = 128, out_dtype=None, interpret=None):
+    """Planner-configured GEMM with fused epilogue.  x: (..., K), w: (K, N).
+
+        out = act(x@w [+ bias]) [* (x@w2 [+ bias2])]
 
     Covers *every* nonempty shape exactly: the kernel zero-pads ragged K
     itself, and ragged M rows / N columns (tilings the output grid cannot
     absorb) are zero-padded here to the systolic tile and sliced off the
     result — zeros contribute exactly 0 to the fp32 accumulator, so
-    padding is exact and no reference fallback is ever taken.
+    padding is exact and no reference fallback is ever taken.  Padded N
+    columns extend ``bias``/``bias2`` with zeros (sliced off with the
+    output); padded M rows run the epilogue on zero accumulators and are
+    sliced off.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
     N = w.shape[-1]
     out_dtype = out_dtype or x.dtype
-    if x.size == 0 or N == 0 or K == 0:   # empty operand: exact zero result
-        return jnp.zeros((*lead, N), out_dtype)
+    interpret = resolve_interpret(interpret)
+    if x.size == 0 or N == 0 or K == 0:   # empty operand: epilogue of zeros
+        zero = jnp.zeros((*lead, N), jnp.float32)
+        out = apply_epilogue(
+            zero, zero if w2 is not None else None,
+            None if bias is None else bias.astype(jnp.float32),
+            None if bias2 is None else bias2.astype(jnp.float32),
+            activation)
+        return out.astype(out_dtype)
     x2 = x.reshape(-1, K)
     M_rows = x2.shape[0]
     if not k_collapse:
-        k_collapse = plan_collapse(N, K, M_rows)
+        n_ops = ((activation != "none") + (bias is not None)
+                 + (bias2 is not None) + (w2 is not None))
+        k_collapse = plan_collapse(N, K, M_rows, epilogue_ops=n_ops)
     # tile sizes mirror the kernel's bm/bn clamp: a dim smaller than the SA
     # is its own (exactly dividing) tile; larger dims pad up to a multiple.
     Mp = M_rows if M_rows <= SA_R else _round_up(M_rows, SA_R)
@@ -75,14 +119,56 @@ def arrayflex_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
         x2 = jnp.pad(x2, ((0, Mp - M_rows), (0, 0)))
     if Np != N:
         w = jnp.pad(w, ((0, 0), (0, Np - N)))
-    out = _gemm(x2, w, k_collapse, bk, out_dtype, interpret)
+        if w2 is not None:
+            w2 = jnp.pad(w2, ((0, 0), (0, Np - N)))
+        if bias is not None:
+            bias = jnp.pad(bias, (0, Np - N))
+        if bias2 is not None:
+            bias2 = jnp.pad(bias2, (0, Np - N))
+    dummy = jnp.zeros((), x2.dtype)
+    out = _gemm(x2, w,
+                w2 if w2 is not None else dummy,
+                bias if bias is not None else dummy,
+                bias2 if bias2 is not None else dummy,
+                activation, w2 is not None, bias is not None,
+                bias2 is not None, k_collapse, bk, out_dtype, interpret)
     if (Mp, Np) != (M_rows, N):
         out = out[:M_rows, :N]
     return out.reshape(*lead, N)
 
 
+def arrayflex_expert_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
+                            out_dtype=None, interpret=None):
+    """Planner-configured batched expert GEMM in ONE kernel launch.
+
+    x: (E, T, K), w: (E, K, N) -> (E, T, N).  All experts share one
+    collapse depth k, planned for the common (N, K, T) shape (every expert
+    GEMM in a capacity-buffered MoE layer has identical shape).  Ragged
+    T / N are zero-padded to the systolic tile and sliced off, exactly as
+    in :func:`arrayflex_matmul`.
+    """
+    E, T, K = x.shape
+    N = w.shape[-1]
+    out_dtype = out_dtype or x.dtype
+    interpret = resolve_interpret(interpret)
+    if E == 0 or T == 0 or N == 0 or K == 0:
+        return jnp.zeros((E, T, N), out_dtype)
+    if not k_collapse:
+        k_collapse = plan_collapse(N, K, T)
+    Tp = T if T <= SA_R else _round_up(T, SA_R)
+    Np = N if N <= SA_C else _round_up(N, SA_C)
+    if Tp != T:
+        x = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0)))
+    if Np != N:
+        w = jnp.pad(w, ((0, 0), (0, 0), (0, Np - N)))
+    out = _expert_gemm(x, w, k_collapse, bk, out_dtype, interpret)
+    if (Tp, Np) != (T, N):
+        out = out[:, :T, :N]
+    return out
+
+
 def attention(q, k, v, *, causal=True, window=0, kv_chunk: int = 0,
-              interpret: bool = True):
+              interpret=None):
     """Flash attention with planner-chosen KV chunk.  (BH,S,D) layout.
 
     The KV length need not divide the chunk: the kernel pads K/V to the
@@ -92,4 +178,5 @@ def attention(q, k, v, *, causal=True, window=0, kv_chunk: int = 0,
     if not kv_chunk:
         kv_chunk = planner.attention_plan(q.shape[1], k.shape[1])
     return flash_attention(q, k, v, causal=causal, window=window,
-                           kv_chunk=kv_chunk, interpret=interpret)
+                           kv_chunk=kv_chunk,
+                           interpret=resolve_interpret(interpret))

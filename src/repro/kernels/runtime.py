@@ -1,0 +1,23 @@
+"""Kernel execution-policy helpers shared by every Pallas entry point."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def resolve_interpret(value=None) -> bool:
+    """Pallas interpret-mode resolution chain.
+
+    Explicit argument (e.g. threaded from ``ModelConfig.pallas_interpret``)
+    > ``REPRO_PALLAS_INTERPRET`` env var ("0"/"false"/"no" disable, anything
+    else enables) > default: compiled on real TPU backends, interpreted
+    everywhere else.  Before this chain existed every kernel hard-coded
+    ``interpret=True``, so TPU hardware runs executed the Mosaic emulator.
+    """
+    if value is not None:
+        return bool(value)
+    env = os.environ.get("REPRO_PALLAS_INTERPRET", "")
+    if env:
+        return env.lower() not in ("0", "false", "no")
+    return jax.default_backend() != "tpu"

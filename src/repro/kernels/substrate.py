@@ -4,24 +4,37 @@ The paper's selection loop (core.planner / core.timing, Eqs. 6-7) picks a
 pipeline-collapse depth k *per GEMM shape*; this module is the pipe that
 makes those picks configure actual execution.  Every dense contraction in
 nn/ and models/ routes through :func:`gemm` (or :func:`expert_gemm` for the
-MoE batched form), which
+MoE batched form, :func:`batched_gemm` for attention QK/PV products), which
 
   * resolves the GEMM's :class:`GemmPlan` from a process-wide **plan
-    cache** keyed on ``(M, N, T, backend)`` — the Eq.(6) argmin runs once
-    per shape, not once per jit trace or serving request;
+    cache** keyed on ``(M, N, T, backend, epilogue)`` — the Eq.(6') argmin
+    runs once per shape, not once per jit trace or serving request;
   * records the plan under the caller's **site label** (``attn.wq``,
-    ``mlp.wo``, ...), the same names ``core.planner.model_gemms`` emits,
-    so analytic plans and executed kernels are the same objects (the
-    substrate benchmark joins the two tables on these labels);
+    ``mlp.wo``, ``attn.qk``, ...), the same names
+    ``core.planner.model_gemms`` emits, so analytic plans and executed
+    kernels are the same objects (the substrate benchmark joins the two
+    tables on these labels), and counts the dispatch in
+    :data:`DISPATCH_COUNTS`;
   * dispatches to a **backend** from a pluggable registry:
 
       ``xla``       today's ``x @ w`` (the default; numerics unchanged),
       ``arrayflex`` the Pallas K-collapse kernel at the planned k,
       ``ref``       an fp32-everywhere oracle for equivalence tests.
 
-``ModelConfig.gemm_backend`` selects the backend model-wide; callers thread
-it through (see models/lm.py).  New backends (quantized, sharded, ...)
-register with :func:`register_backend`.
+**Epilogues**: ``gemm(..., epilogue="silu"|"gelu"|"swiglu", bias=...,
+w2=...)`` fuses bias add, activation, and the dual-contraction gated
+multiply (swiglu: ``silu(x@w [+bias]) * (x@w2 [+bias2])``) into the
+arrayflex kernel's carry-propagate store — no HBM round-trip between a
+GEMM and its activation.  Unfused backends (xla/ref) apply the identical
+math as a post-pass (``apply_epilogue``), so every backend computes the
+same function and equivalence tests stay meaningful.  The epilogue's
+vector ops are priced into Eq.(5')/(6') and can shift the planned k.
+
+``ModelConfig.gemm_backend`` selects the backend model-wide and
+``ModelConfig.pallas_interpret`` (or ``REPRO_PALLAS_INTERPRET``) the
+Pallas interpret mode; callers thread both through (see models/lm.py).
+New backends (quantized, sharded, ...) register with
+:func:`register_backend`.
 
 Shape convention matches core.planner: a call ``gemm(x, w)`` with
 ``x: (..., K)`` and ``w: (K, N_out)`` is the planner GEMM
@@ -31,26 +44,86 @@ Shape convention matches core.planner: a call ``gemm(x, w)`` with
 from __future__ import annotations
 
 import functools
+import math
 from dataclasses import dataclass
-from typing import Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional
 
 import jax.numpy as jnp
 
-from repro.core import timing
+from repro.core import planner, timing
 from repro.kernels import ops
+from repro.kernels.arrayflex_gemm import apply_epilogue
+
+
+# ---------------------------------------------------------------------------
+# epilogue spec (hashable: lives in the plan-cache key and in GemmPlan)
+
+EPILOGUE_KINDS = ("none", "silu", "gelu", "swiglu")
+
+
+@dataclass(frozen=True)
+class Epilogue:
+    """What is fused after the contraction, at the carry-propagate store.
+
+    ``kind`` names the activation structure (``swiglu`` = silu-gated dual
+    contraction, which requires the ``w2`` operand); ``bias``/``bias2``
+    record whether bias vectors ride along.  Pure shape-level metadata —
+    the actual arrays are per-call operands — so the spec is hashable and
+    participates in the memoized Eq.(6') plan.
+    """
+
+    kind: str = "none"
+    bias: bool = False
+    bias2: bool = False
+
+    @property
+    def dual(self) -> bool:
+        return self.kind == "swiglu"
+
+    @property
+    def activation(self) -> str:
+        return "silu" if self.kind == "swiglu" else self.kind
+
+    @property
+    def ops(self) -> int:
+        """Fused vector ops at the collapsed-block boundary (Eq. 5' ``e``):
+        one per activation, gate multiply, and bias add."""
+        return ((self.activation != "none") + self.dual
+                + self.bias + self.bias2)
+
+    @property
+    def contractions(self) -> int:
+        return 2 if self.dual else 1
+
+
+EPILOGUE_NONE = Epilogue()
+
+
+@dataclass
+class GemmCall:
+    """Per-call execution context handed to backends (operand arrays are
+    not part of the memoized plan)."""
+
+    out_dtype: Any = None       # None -> operand dtype; else fp32-acc cast
+    w2: Any = None              # second contraction (epilogue.dual)
+    bias: Any = None            # (N_out,) fused bias
+    bias2: Any = None           # (N_out,) fused bias on the w2 contraction
+    interpret: Optional[bool] = None   # Pallas interpret override
 
 
 @dataclass(frozen=True)
 class GemmPlan:
-    """One plan-cache entry: shape, chosen depth, Eq.(6) predictions (ps)."""
+    """One plan-cache entry: shape, epilogue, chosen depth, Eq.(6')
+    predictions (ps)."""
 
     M: int              # output columns
     N: int              # contraction
     T: int              # streamed rows
     backend: str
     k: int              # collapse depth the kernel runs with (1 off-ArrayFlex)
-    t_pred_ps: float    # Eq.(6) model time at k
-    t_conventional_ps: float  # fixed-pipeline SA baseline
+    t_pred_ps: float    # Eq.(6') model time at k
+    t_conventional_ps: float  # fixed-pipeline SA baseline (unfused)
+    epilogue: Epilogue = EPILOGUE_NONE
 
     @property
     def saving(self) -> float:
@@ -58,14 +131,21 @@ class GemmPlan:
 
 
 @functools.lru_cache(maxsize=None)
-def plan_gemm(M: int, N: int, T: int, backend: str = "arrayflex") -> GemmPlan:
-    """Plan-cache entry point: Eq.(6) argmin once per (M, N, T, backend)."""
-    k = ops.plan_collapse(M, N, T) if backend == "arrayflex" else 1
+def plan_gemm(M: int, N: int, T: int, backend: str = "arrayflex",
+              epilogue: Epilogue = EPILOGUE_NONE) -> GemmPlan:
+    """Plan-cache entry point: Eq.(6') argmin once per
+    (M, N, T, backend, epilogue)."""
+    k = (ops.plan_collapse(M, N, T, epilogue_ops=epilogue.ops)
+         if backend == "arrayflex" else 1)
     return GemmPlan(
-        M=M, N=N, T=T, backend=backend, k=k,
-        t_pred_ps=timing.t_abs_ps(M, N, T, ops.SA_R, ops.SA_C, k),
+        M=M, N=N, T=T, backend=backend, k=k, epilogue=epilogue,
+        t_pred_ps=timing.t_abs_ps(M, N, T, ops.SA_R, ops.SA_C, k,
+                                  epilogue_ops=epilogue.ops,
+                                  contractions=epilogue.contractions),
         t_conventional_ps=timing.t_abs_conventional_ps(
-            M, N, T, ops.SA_R, ops.SA_C))
+            M, N, T, ops.SA_R, ops.SA_C,
+            contractions=epilogue.contractions,
+            epilogue_ops=epilogue.ops))
 
 
 def plan_cache_info():
@@ -73,35 +153,62 @@ def plan_cache_info():
 
 
 def clear_plan_cache():
+    """Reset every plan memo this process holds: the Eq.(6') plan cache
+    AND the planner memos it feeds from (``ops.plan_collapse``,
+    ``planner.attention_plan``) — a timing-parameter or config change must
+    not see stale picks — plus the per-trace site/dispatch logs."""
     plan_gemm.cache_clear()
+    ops.plan_collapse.cache_clear()
+    planner.attention_plan.cache_clear()
     SITE_PLANS.clear()
+    DISPATCH_COUNTS.clear()
 
 
 # ---------------------------------------------------------------------------
 # backend registry
 
-def _xla_backend(x2, w, plan: GemmPlan, out_dtype):
-    if out_dtype is None:
-        return x2 @ w                       # bit-for-bit the pre-substrate path
-    return jnp.dot(x2, w,
-                   preferred_element_type=jnp.float32).astype(out_dtype)
+def _xla_backend(x2, w, plan: GemmPlan, call: GemmCall):
+    ep = plan.epilogue
+    if call.out_dtype is None:
+        # bit-for-bit the pre-substrate path: operand-dtype contraction(s),
+        # epilogue applied in the same op order the unfused layers used
+        y = x2 @ w
+        y2 = x2 @ call.w2 if ep.dual else None
+        return apply_epilogue(y, y2, call.bias, call.bias2, ep.activation)
+    y = jnp.dot(x2, w, preferred_element_type=jnp.float32)
+    y2 = (jnp.dot(x2, call.w2, preferred_element_type=jnp.float32)
+          if ep.dual else None)
+    return apply_epilogue(y, y2, call.bias, call.bias2,
+                          ep.activation).astype(call.out_dtype)
 
 
-def _arrayflex_backend(x2, w, plan: GemmPlan, out_dtype):
-    return ops.arrayflex_matmul(x2, w, k_collapse=plan.k,
-                                out_dtype=out_dtype)
+def _arrayflex_backend(x2, w, plan: GemmPlan, call: GemmCall):
+    return ops.arrayflex_matmul(x2, w, w2=call.w2, bias=call.bias,
+                                bias2=call.bias2,
+                                activation=plan.epilogue.activation,
+                                k_collapse=plan.k, out_dtype=call.out_dtype,
+                                interpret=call.interpret)
 
 
-def _ref_backend(x2, w, plan: GemmPlan, out_dtype):
-    out = jnp.dot(x2.astype(jnp.float32), w.astype(jnp.float32))
-    return out.astype(out_dtype or x2.dtype)
+def _ref_backend(x2, w, plan: GemmPlan, call: GemmCall):
+    x32 = x2.astype(jnp.float32)
+    y = jnp.dot(x32, w.astype(jnp.float32))
+    y2 = (jnp.dot(x32, call.w2.astype(jnp.float32))
+          if plan.epilogue.dual else None)
+    b = None if call.bias is None else call.bias.astype(jnp.float32)
+    b2 = None if call.bias2 is None else call.bias2.astype(jnp.float32)
+    out = apply_epilogue(y, y2, b, b2, plan.epilogue.activation)
+    return out.astype(call.out_dtype or x2.dtype)
 
 
 _BACKENDS: Dict[str, Callable] = {}
 
 
 def register_backend(name: str, fn: Callable) -> None:
-    """fn(x2: (T, K), w: (K, N_out), plan: GemmPlan, out_dtype) -> (T, N_out)."""
+    """fn(x2: (T, K), w: (K, N_out), plan: GemmPlan, call: GemmCall)
+    -> (T, N_out).  ``call`` carries out_dtype, the epilogue operands
+    (w2/bias/bias2 — apply with ``kernels.arrayflex_gemm.apply_epilogue``
+    if not fusing) and the Pallas interpret override."""
     _BACKENDS[name] = fn
 
 
@@ -121,49 +228,158 @@ register_backend("xla", _xla_backend)
 register_backend("arrayflex", _arrayflex_backend)
 register_backend("ref", _ref_backend)
 
+_BUILTIN_BACKENDS = {"xla": _xla_backend, "arrayflex": _arrayflex_backend,
+                     "ref": _ref_backend}
+
+
+def _is_builtin(name: str) -> bool:
+    """True when ``name`` still resolves to the built-in implementation —
+    a re-registered override must win on the batched/expert fast paths
+    exactly as it does in :func:`gemm`."""
+    return _BACKENDS.get(name) is _BUILTIN_BACKENDS.get(name)
+
 
 # site label -> GemmPlan of the most recent trace through that site.
 # Populated at jit-trace time (shapes are static there), so one model
 # forward leaves exactly its GEMM working set behind for inspection.
+# A fused dual-GEMM site like "mlp.wi_gate+mlp.wi_up" records the shared
+# plan under BOTH component labels.
 SITE_PLANS: Dict[str, GemmPlan] = {}
+
+# site label (as passed, fused labels kept joined) -> number of substrate
+# dispatches traced through that site.  For the arrayflex backend one
+# dispatch == one kernel launch, so this is the launch count the MoE
+# batching and epilogue fusion reduce (3E -> 3, 2 GEMM launches -> 1).
+DISPATCH_COUNTS: Dict[str, int] = {}
+
+
+def _record(site: str, plan: GemmPlan, launches: int = 1) -> None:
+    if not site:
+        return
+    for label in site.split("+"):
+        SITE_PLANS[label] = plan
+    DISPATCH_COUNTS[site] = DISPATCH_COUNTS.get(site, 0) + launches
+
+
+def _epilogue_spec(epilogue: str, w2, bias, bias2) -> Epilogue:
+    if epilogue not in EPILOGUE_KINDS:
+        raise ValueError(f"unknown epilogue {epilogue!r}; "
+                         f"supported: {EPILOGUE_KINDS}")
+    if (epilogue == "swiglu") != (w2 is not None):
+        raise ValueError("epilogue='swiglu' requires w2 (and only swiglu "
+                         "takes a second contraction)")
+    if bias2 is not None and w2 is None:
+        raise ValueError("bias2 requires the w2 contraction")
+    return Epilogue(kind=epilogue, bias=bias is not None,
+                    bias2=bias2 is not None)
 
 
 # ---------------------------------------------------------------------------
 # dispatch
 
-def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None):
+def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
+         epilogue: str = "none", w2=None, bias=None, bias2=None,
+         interpret=None):
     """The substrate entry: x (..., K) @ w (K, N_out) -> (..., N_out).
 
     ``out_dtype=None`` returns the operands' dtype with the backend's
     native accumulation; passing a dtype requests fp32 accumulation cast
     to it (the unembed/logits contract).
+
+    ``epilogue`` fuses post-GEMM work into the dispatch (one kernel launch
+    on the arrayflex backend): ``"silu"``/``"gelu"`` apply the activation
+    to ``x@w [+ bias]``; ``"swiglu"`` computes
+    ``silu(x@w [+ bias]) * (x@w2 [+ bias2])`` — the dual-GEMM gated MLP in
+    ONE launch.  A fused site label like ``"mlp.wi_gate+mlp.wi_up"``
+    records the shared plan under both component names.
     """
     fn = get_backend(backend)
+    ep = _epilogue_spec(epilogue, w2, bias, bias2)
     lead = x.shape[:-1]
     K = x.shape[-1]
     N_out = w.shape[-1]
-    x2 = x.reshape(-1, K)
-    plan = plan_gemm(N_out, K, x2.shape[0], backend)
-    if site:
-        SITE_PLANS[site] = plan
-    out = fn(x2, w, plan, out_dtype)
+    x2 = x.reshape(math.prod(lead), K)   # explicit rows: K may be 0
+    plan = plan_gemm(N_out, K, x2.shape[0], backend, ep)
+    _record(site, plan)
+    out = fn(x2, w, plan, GemmCall(out_dtype=out_dtype, w2=w2, bias=bias,
+                                   bias2=bias2, interpret=interpret))
     return out.reshape(*lead, N_out)
 
 
-def expert_gemm(x, w, *, site: str = "", backend: str = "xla"):
+def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
+                 out_dtype=None, interpret=None):
+    """Batched GEMM: x (B, T, K) @ w (B, K, N) -> (B, T, N).
+
+    The substrate path for attention QK/PV products (``attn.qk`` /
+    ``attn.pv`` sites): every batch element runs the same planned shape,
+    and the arrayflex backend executes ALL of them in one expert-batched
+    kernel launch (batch = the leading grid dimension).  ``out_dtype``
+    follows the :func:`gemm` contract (None -> operand dtype; a dtype ->
+    fp32 accumulation cast once).
+    """
+    B, T, K = x.shape
+    N_out = w.shape[-1]
+    plan = plan_gemm(N_out, K, T, backend)
+    if _is_builtin(backend):
+        if backend == "arrayflex":
+            _record(site, plan)
+            return ops.arrayflex_expert_matmul(x, w, k_collapse=plan.k,
+                                               out_dtype=out_dtype,
+                                               interpret=interpret)
+        if backend == "ref":
+            _record(site, plan)
+            out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+            return out.astype(out_dtype or x.dtype)
+        if backend == "xla":
+            _record(site, plan)
+            if out_dtype is None:
+                return jnp.matmul(x, w)
+            return jnp.matmul(
+                x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+    # custom backend: unroll the (static) batch through the 2-D entry —
+    # B launches, each recorded against the shared per-shape plan
+    _record(site, plan, launches=B)
+    fn = get_backend(backend)
+    call = GemmCall(out_dtype=out_dtype, interpret=interpret)
+    return jnp.stack([fn(x[b], w[b], plan, call) for b in range(B)])
+
+
+def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
+                interpret=None):
     """Batched expert GEMM: x (G, E, C, K) @ w (E, K, N) -> (G, E, C, N).
 
-    The xla backend keeps the einsum the MoE layer always used (one fused
-    batched contraction); other backends unroll the (static) expert axis
-    into per-expert substrate GEMMs so each runs the planned kernel.
+    Every backend plans ONE consistent (M=N, N=K, T=G*C) shape per site —
+    the per-expert GEMMs of a capacity-buffered MoE layer are identical,
+    so one plan covers all E of them.  The xla backend keeps the einsum
+    the MoE layer always used (one fused batched contraction); the
+    arrayflex backend folds the dispatch groups into the row dim and runs
+    ALL experts in ONE kernel launch whose leading grid dimension is the
+    expert axis (per-site launch count: 1, was E).
     """
     G, E, C, K = x.shape
     N_out = w.shape[-1]
-    if backend == "xla":
-        if site:
-            SITE_PLANS[site] = plan_gemm(N_out, K, G * C, backend)
-        return jnp.einsum("gecd,edf->gecf", x, w)
-    outs = [gemm(x[:, e], w[e], site=site if e == 0 else "",
-                 backend=backend)
+    plan = plan_gemm(N_out, K, G * C, backend)
+    if _is_builtin(backend):
+        if backend == "xla":
+            _record(site, plan)
+            return jnp.einsum("gecd,edf->gecf", x, w)
+        if backend == "ref":
+            _record(site, plan)
+            out = jnp.einsum("gecd,edf->gecf", x.astype(jnp.float32),
+                             w.astype(jnp.float32))
+            return out.astype(x.dtype)
+        if backend == "arrayflex":
+            _record(site, plan)
+            xe = x.transpose(1, 0, 2, 3).reshape(E, G * C, K)
+            out = ops.arrayflex_expert_matmul(xe, w, k_collapse=plan.k,
+                                              interpret=interpret)
+            return out.reshape(E, G, C, N_out).transpose(1, 0, 2, 3)
+    # custom backend: unroll the (static) expert axis through the 2-D
+    # entry — E launches, each recorded against the shared per-shape plan
+    _record(site, plan, launches=E)
+    fn = get_backend(backend)
+    call = GemmCall(interpret=interpret)
+    outs = [fn(x[:, e].reshape(G * C, K), w[e], plan,
+               call).reshape(G, C, N_out)
             for e in range(E)]
     return jnp.stack(outs, axis=1)

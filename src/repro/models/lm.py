@@ -92,20 +92,20 @@ def attn_init(key, cfg: ModelConfig, dtype):
 def _proj_qkv(p, x, kv_src, cfg, cd):
     B, S = x.shape[0], x.shape[1]
     hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
-    be = cfg.gemm_backend
+    be, ip = cfg.gemm_backend, cfg.pallas_interpret
     cross = kv_src is not None
     q = layers.linear(p["wq"], x, cd,
                       site="xattn.wq" if cross else "attn.wq",
-                      backend=be).reshape(B, S, H, hd)
+                      backend=be, interpret=ip).reshape(B, S, H, hd)
     src = x if kv_src is None else kv_src
     T = src.shape[1]
     # the planner fuses cross-attention K/V into one "xattn.kv" GEMM
     k = layers.linear(p["wk"], src, cd,
                       site="xattn.kv" if cross else "attn.wk",
-                      backend=be).reshape(B, T, KV, hd)
+                      backend=be, interpret=ip).reshape(B, T, KV, hd)
     v = layers.linear(p["wv"], src, cd,
                       site="xattn.kv" if cross else "attn.wv",
-                      backend=be).reshape(B, T, KV, hd)
+                      backend=be, interpret=ip).reshape(B, T, KV, hd)
     return q, k, v
 
 
@@ -120,11 +120,13 @@ def attn_full(p, x, cfg: ModelConfig, positions, *, causal=True,
     out = attn_lib.attention(
         q, k, v, causal=causal, window=cfg.sliding_window,
         q_chunk=cfg.attn_q_chunk, kv_chunk=cfg.attn_kv_chunk,
-        dense_below=cfg.attn_dense_below)
+        dense_below=cfg.attn_dense_below, backend=cfg.gemm_backend,
+        interpret=cfg.pallas_interpret)
     B, S = x.shape[0], x.shape[1]
     out = layers.linear(p["wo"], out.reshape(B, S, -1), cd,
                         site="xattn.wo" if kv_src is not None else "attn.wo",
-                        backend=cfg.gemm_backend)
+                        backend=cfg.gemm_backend,
+                        interpret=cfg.pallas_interpret)
     return out, (k, v)
 
 
@@ -154,9 +156,12 @@ def attn_decode(p, x, cfg: ModelConfig, cache, pos):
         k_cache = jnp.where(hit, k_new.astype(cache["k"].dtype), cache["k"])
         v_cache = jnp.where(hit, v_new.astype(cache["v"].dtype), cache["v"])
     out = attn_lib.decode_attention(q, k_cache, v_cache, pos,
-                                    window=cfg.sliding_window)
+                                    window=cfg.sliding_window,
+                                    backend=cfg.gemm_backend,
+                                    interpret=cfg.pallas_interpret)
     out = layers.linear(p["wo"], out.reshape(B, 1, -1), cd, site="attn.wo",
-                        backend=cfg.gemm_backend)
+                        backend=cfg.gemm_backend,
+                        interpret=cfg.pallas_interpret)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -197,20 +202,25 @@ def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths):
         ok[:, :, None, None],
         jnp.take_along_axis(v_new.astype(cache["v"].dtype), idx, axis=1),
         cache["v"])
-    # causal attention of the C queries against the full (masked) buffer
+    # causal attention of the C queries against the full (masked) buffer;
+    # QK/PV dispatch through the substrate (attn.qk / attn.pv) exactly as
+    # attn_lib.decode_attention does, preserving bit-for-bit prefill/decode
+    # equivalence
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
     g = H // KV
     qg = q.reshape(B, C, KV, g, hd)
     scale = 1.0 / math.sqrt(hd)
-    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
-                   preferred_element_type=jnp.float32) * scale
+    s = attn_lib.qk_scores(qg, k_cache, backend=cfg.gemm_backend,
+                           interpret=cfg.pallas_interpret) * scale
     valid = j[:, None, :] <= positions[:, :, None]             # (B,C,cl)
     s = jnp.where(valid[:, None, None], s, attn_lib.NEG_INF)
     w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_cache.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache)
+    out = attn_lib.pv_mix(w, v_cache, backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret)
     out = out.reshape(B, C, H, hd).astype(q.dtype)
     out = layers.linear(p["wo"], out.reshape(B, C, -1), cd, site="attn.wo",
-                        backend=cfg.gemm_backend)
+                        backend=cfg.gemm_backend,
+                        interpret=cfg.pallas_interpret)
     return out, {"k": k_cache, "v": v_cache}
 
 
@@ -220,11 +230,15 @@ def cross_attn_decode(p, x, cfg: ModelConfig, cache):
     B = x.shape[0]
     hd, H = cfg.resolved_head_dim, cfg.n_heads
     q = layers.linear(p["wq"], x, cd, site="xattn.wq",
-                      backend=cfg.gemm_backend).reshape(B, 1, H, hd)
+                      backend=cfg.gemm_backend,
+                      interpret=cfg.pallas_interpret).reshape(B, 1, H, hd)
     out = attn_lib.dense_attention(q, cache["xk"].astype(cd),
-                                   cache["xv"].astype(cd), causal=False)
+                                   cache["xv"].astype(cd), causal=False,
+                                   backend=cfg.gemm_backend,
+                                   interpret=cfg.pallas_interpret)
     return layers.linear(p["wo"], out.reshape(B, 1, -1), cd, site="xattn.wo",
-                         backend=cfg.gemm_backend)
+                         backend=cfg.gemm_backend,
+                         interpret=cfg.pallas_interpret)
 
 
 # ---------------------------------------------------------------------------
@@ -275,7 +289,8 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
     else:
         out, state, conv = mamba_lib.mamba_forward(
             p["mamba"], h, cfg.ssm or SSMConfig(), _cdtype(cfg),
-            backend=cfg.gemm_backend)
+            backend=cfg.gemm_backend,
+            interpret=cfg.pallas_interpret)
         cache = {"state": state.astype(jnp.float32),
                  "conv": conv.astype(jnp.bfloat16)}
     x = x + out
@@ -289,7 +304,8 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend)
+                              backend=cfg.gemm_backend,
+                              interpret=cfg.pallas_interpret)
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -298,7 +314,8 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
                                  groups=0,  # one dispatch group per sequence
                                  compute_dtype=_cdtype(cfg),
                                  aux_loss_weight=m.aux_loss_weight,
-                                 backend=cfg.gemm_backend)
+                                 backend=cfg.gemm_backend,
+                                 interpret=cfg.pallas_interpret)
         x = x + y
         aux = aux + a
     return x, aux, cache
@@ -316,7 +333,8 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
         out, state, conv = mamba_lib.mamba_decode_step(
             p["mamba"], h[:, 0], cache["state"], cache["conv"],
             cfg.ssm or SSMConfig(), _cdtype(cfg),
-            backend=cfg.gemm_backend)
+            backend=cfg.gemm_backend,
+            interpret=cfg.pallas_interpret)
         out = out[:, None]
         new_cache["state"] = state
         new_cache["conv"] = conv.astype(cache["conv"].dtype)
@@ -327,7 +345,8 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend)
+                              backend=cfg.gemm_backend,
+                              interpret=cfg.pallas_interpret)
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -336,7 +355,8 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
                                  groups=1,  # decode: one global group
                                  compute_dtype=_cdtype(cfg),
                                  aux_loss_weight=0.0,
-                                 backend=cfg.gemm_backend)
+                                 backend=cfg.gemm_backend,
+                                 interpret=cfg.pallas_interpret)
         x = x + y
     return x, new_cache
 
@@ -360,7 +380,8 @@ def sublayer_prefill(p, cfg: ModelConfig, pos_idx: int, x, cache, pos,
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend)
+                              backend=cfg.gemm_backend,
+                              interpret=cfg.pallas_interpret)
     return x, new_cache
 
 
@@ -422,7 +443,8 @@ def _remat(cfg, fn):
 def _encode_audio(cfg, params, frames):
     cd = _cdtype(cfg)
     x = layers.linear(params["audio_proj"], frames, cd,
-                      site="frontend.audio", backend=cfg.gemm_backend)
+                      site="frontend.audio", backend=cfg.gemm_backend,
+                                             interpret=cfg.pallas_interpret)
     positions = jnp.arange(x.shape[1])[None, :]
 
     def body(carry, p):
@@ -431,7 +453,8 @@ def _encode_audio(cfg, params, frames):
         out, _ = attn_full(p["attn"], h, cfg, positions, causal=False)
         x = x + out
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, cd, backend=cfg.gemm_backend)
+        x = x + layers.swiglu(p["mlp"], h, cd, backend=cfg.gemm_backend,
+                                               interpret=cfg.pallas_interpret)
         return x, None
 
     x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_blocks"][0])
@@ -441,9 +464,11 @@ def _encode_audio(cfg, params, frames):
 def _logits(cfg, params, x, cd):
     """fp32 logits via the substrate (site "unembed", tied or untied)."""
     if cfg.tie_embeddings:
-        return layers.unembed(params["embed"], x, backend=cfg.gemm_backend)
+        return layers.unembed(params["embed"], x, backend=cfg.gemm_backend,
+                                                  interpret=cfg.pallas_interpret)
     return layers.linear(params["lm_head"], x, cd, site="unembed",
-                         backend=cfg.gemm_backend).astype(jnp.float32)
+                         backend=cfg.gemm_backend,
+                         interpret=cfg.pallas_interpret).astype(jnp.float32)
 
 
 def _context(cfg, params, batch):
@@ -451,7 +476,8 @@ def _context(cfg, params, batch):
         return layers.linear(params["img_proj"],
                              batch["image_embeds"].astype(_cdtype(cfg)),
                              _cdtype(cfg), site="frontend.img",
-                             backend=cfg.gemm_backend)
+                             backend=cfg.gemm_backend,
+                             interpret=cfg.pallas_interpret)
     if cfg.family == "audio":
         return _encode_audio(cfg, params, batch["frames"])
     return None

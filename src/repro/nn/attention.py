@@ -6,6 +6,13 @@ weight-stationary systolic array performs (see core.planner): the chunk size
 plays the role of the ArrayFlex pipeline-collapse factor k, trading the
 number of sequential steps against per-step work.  core.planner.attention_plan
 picks the chunk size with the paper's Eq.(6)-style analytical model.
+
+The dense and decode paths' QK and PV contractions dispatch through the
+GEMM substrate under the ``attn.qk`` / ``attn.pv`` site labels
+(:func:`qk_scores` / :func:`pv_mix`): the planner's Eq.(6) table and the
+executed attention kernels are joined on the same names as every
+projection GEMM, and the arrayflex backend runs all (batch x kv-head)
+products of a step in ONE expert-batched kernel launch.
 """
 from __future__ import annotations
 
@@ -16,9 +23,43 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import substrate
 from repro.parallel.sharding import constrain
 
 NEG_INF = -1e30
+
+
+def qk_scores(qg, k, *, backend="xla", interpret=None):
+    """Attention scores via the substrate (site ``attn.qk``).
+
+    qg: (B, S, KV, g, D) grouped queries; k: (B, T, KV, D).  Returns fp32
+    scores laid out (B, KV, g, S, T) — the ``bskgd,btkd->bkgst`` einsum,
+    executed as a (B*KV)-batched GEMM with the g*S query rows streamed
+    against each kv-head's K^T.  Unscaled: callers apply 1/sqrt(D).
+    """
+    B, S, KV, g, D = qg.shape
+    T = k.shape[1]
+    qb = qg.transpose(0, 2, 3, 1, 4).reshape(B * KV, g * S, D)
+    kb = k.transpose(0, 2, 3, 1).reshape(B * KV, D, T)
+    s = substrate.batched_gemm(qb, kb, site="attn.qk", backend=backend,
+                               out_dtype=jnp.float32, interpret=interpret)
+    return s.reshape(B, KV, g, S, T)
+
+
+def pv_mix(w, v, *, backend="xla", interpret=None):
+    """Probability-weighted value mix via the substrate (site ``attn.pv``).
+
+    w: (B, KV, g, S, T) attention weights (cast to v.dtype by callers);
+    v: (B, T, KV, D).  Returns (B, S, KV, g, D) — the
+    ``bkgst,btkd->bskgd`` einsum as a (B*KV)-batched GEMM.
+    """
+    B, KV, g, S, T = w.shape
+    D = v.shape[-1]
+    pb = w.reshape(B * KV, g * S, T)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
+    o = substrate.batched_gemm(pb, vb, site="attn.pv", backend=backend,
+                               interpret=interpret)
+    return o.reshape(B, KV, g, S, D).transpose(0, 3, 1, 2, 4)
 
 
 def _causal_pairs(n_q: int, n_k: int, q_chunk: int, kv_chunk: int,
@@ -51,8 +92,10 @@ def _block_mask(row0, col0, q_chunk, kv_chunk, window, causal):
 
 
 def dense_attention(q, k, v, *, causal=True, window=0, q_offset=0,
-                    kv_len=None):
-    """q: (B,S,H,D), k/v: (B,T,KV,D).  fp32 softmax.  Returns (B,S,H,D)."""
+                    kv_len=None, backend="xla", interpret=None):
+    """q: (B,S,H,D), k/v: (B,T,KV,D).  fp32 softmax.  Returns (B,S,H,D).
+
+    QK and PV dispatch through the substrate (``attn.qk``/``attn.pv``)."""
     B, S, H, D = q.shape
     T, KV = k.shape[1], k.shape[2]
     g = H // KV
@@ -60,8 +103,7 @@ def dense_attention(q, k, v, *, causal=True, window=0, q_offset=0,
     k = constrain(k, "attn_qkv")
     v = constrain(v, "attn_qkv")
     scale = 1.0 / math.sqrt(D)
-    scores = jnp.einsum("bskgd,btkd->bkgst", qg, k,
-                        preferred_element_type=jnp.float32) * scale
+    scores = qk_scores(qg, k, backend=backend, interpret=interpret) * scale
     scores = constrain(scores, "attn_scores_seq")
     r = q_offset + jnp.arange(S)[:, None]
     c = jnp.arange(T)[None, :]
@@ -74,7 +116,7 @@ def dense_attention(q, k, v, *, causal=True, window=0, q_offset=0,
         ok = ok & (c < kv_len)
     scores = jnp.where(ok[None, None, None], scores, NEG_INF)
     w = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", w, v)
+    out = pv_mix(w, v, backend=backend, interpret=interpret)
     return out.reshape(B, S, H, D)
 
 
@@ -150,29 +192,37 @@ def chunked_attention(q, k, v, *, causal=True, window=0, q_offset=0,
 
 
 def attention(q, k, v, *, causal=True, window=0, q_offset=0,
-              q_chunk=1024, kv_chunk=1024, dense_below=2048):
+              q_chunk=1024, kv_chunk=1024, dense_below=2048,
+              backend="xla", interpret=None):
+    """``backend``/``interpret`` apply to the dense path's substrate QK/PV
+    dispatch only: above ``dense_below`` the chunked flash-style scan runs
+    its own schedule, whose ArrayFlex-collapse analogue is the KV chunk
+    picked by ``planner.attention_plan`` (see docs/substrate.md) — it has
+    no substrate GEMMs or Pallas launches to configure."""
     if q.shape[1] <= dense_below:
         return dense_attention(q, k, v, causal=causal, window=window,
-                               q_offset=q_offset)
+                               q_offset=q_offset, backend=backend,
+                               interpret=interpret)
     return chunked_attention(q, k, v, causal=causal, window=window,
                              q_offset=q_offset, q_chunk=q_chunk,
                              kv_chunk=kv_chunk)
 
 
-def decode_attention(q, k_cache, v_cache, pos, *, window=0):
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, backend="xla",
+                     interpret=None):
     """Single-token attention against a (possibly ring-buffered) KV cache.
 
     q: (B,1,H,D); caches (B,T,KV,D); pos: scalar int32 OR per-sequence
     (B,) int32 (ragged continuous batching).  For ring buffers (window>0)
     the cache length T == window and all slots are valid once pos >= window.
+    QK and PV dispatch through the substrate (``attn.qk``/``attn.pv``).
     """
     B, _, H, D = q.shape
     T, KV = k_cache.shape[1], k_cache.shape[2]
     g = H // KV
     qg = q.reshape(B, 1, KV, g, D)
     scale = 1.0 / math.sqrt(D)
-    s = jnp.einsum("bskgd,btkd->bkgst", qg, k_cache,
-                   preferred_element_type=jnp.float32) * scale
+    s = qk_scores(qg, k_cache, backend=backend, interpret=interpret) * scale
     idx = jnp.arange(T)
     pos_v = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (B,))
     if window:
@@ -182,5 +232,5 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0):
         valid = idx[None, :] <= pos_v[:, None]
     s = jnp.where(valid[:, None, None, None, :], s, NEG_INF)
     w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_cache.dtype)
-    out = jnp.einsum("bkgst,btkd->bskgd", w, v_cache)
+    out = pv_mix(w, v_cache, backend=backend, interpret=interpret)
     return out.reshape(B, 1, H, D).astype(q.dtype)

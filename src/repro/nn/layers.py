@@ -33,21 +33,22 @@ def linear_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32,
     return p
 
 
-def linear(p, x, compute_dtype=None, *, site="", backend="xla"):
+def linear(p, x, compute_dtype=None, *, site="", backend="xla",
+           interpret=None):
     """Dense projection through the GEMM substrate (kernels.substrate).
 
     ``backend`` selects the execution backend; ``site`` labels the GEMM
     with its ``planner.model_gemms`` name so the plan cache lines up with
     the analytic model.  The default backend reproduces ``x @ w`` exactly.
+    A bias rides the substrate's fused epilogue (one kernel launch on the
+    arrayflex backend, no HBM round-trip between GEMM and add).
     """
     w = p["w"]
     if compute_dtype is not None:
         w = w.astype(compute_dtype)
         x = x.astype(compute_dtype)
-    y = substrate.gemm(x, w, site=site, backend=backend)
-    if "b" in p:
-        y = y + p["b"].astype(y.dtype)
-    return y
+    return substrate.gemm(x, w, site=site, backend=backend,
+                          bias=p.get("b"), interpret=interpret)
 
 
 # ---------------------------------------------------------------- norms
@@ -86,10 +87,11 @@ def embed(p, ids, compute_dtype=jnp.bfloat16):
     return p["table"].astype(compute_dtype)[ids]
 
 
-def unembed(p, x, *, backend="xla"):
+def unembed(p, x, *, backend="xla", interpret=None):
     """Logits against the embedding table (tied) — fp32 accumulation."""
     return substrate.gemm(x, p["table"].astype(x.dtype).T, site="unembed",
-                          backend=backend, out_dtype=jnp.float32)
+                          backend=backend, out_dtype=jnp.float32,
+                          interpret=interpret)
 
 
 # ---------------------------------------------------------------- rope
@@ -120,13 +122,24 @@ def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
     }
 
 
-def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla"):
-    g = linear(p["wi_gate"], x, compute_dtype, site="mlp.wi_gate",
-               backend=backend)
-    u = linear(p["wi_up"], x, compute_dtype, site="mlp.wi_up",
-               backend=backend)
-    return linear(p["wo"], jax.nn.silu(g) * u, compute_dtype, site="mlp.wo",
-                  backend=backend)
+def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
+           interpret=None):
+    """Gated MLP via the substrate's dual-GEMM swiglu epilogue:
+    ``silu(x@Wg) * (x@Wu)`` is ONE dispatch (one fused kernel launch on
+    the arrayflex backend — both contractions stream the collapsed
+    schedule, the gate resolves at the carry-propagate store)."""
+    wg, wu = p["wi_gate"]["w"], p["wi_up"]["w"]
+    if compute_dtype is not None:
+        wg = wg.astype(compute_dtype)
+        wu = wu.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    h = substrate.gemm(x, wg, w2=wu, epilogue="swiglu",
+                       bias=p["wi_gate"].get("b"),
+                       bias2=p["wi_up"].get("b"),
+                       site="mlp.wi_gate+mlp.wi_up", backend=backend,
+                       interpret=interpret)
+    return linear(p["wo"], h, compute_dtype, site="mlp.wo",
+                  backend=backend, interpret=interpret)
 
 
 def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
@@ -135,9 +148,17 @@ def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
             "wo": linear_init(k2, d_ff, d_model, bias=True, dtype=dtype)}
 
 
-def gelu_mlp(p, x, compute_dtype=jnp.bfloat16):
-    return linear(p["wo"], jax.nn.gelu(linear(p["wi"], x, compute_dtype)),
-                  compute_dtype)
+def gelu_mlp(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
+             interpret=None):
+    """Biased MLP with the gelu fused into the wi GEMM's epilogue."""
+    wi = p["wi"]["w"]
+    if compute_dtype is not None:
+        wi = wi.astype(compute_dtype)
+        x = x.astype(compute_dtype)
+    h = substrate.gemm(x, wi, bias=p["wi"].get("b"), epilogue="gelu",
+                       backend=backend, interpret=interpret)
+    return linear(p["wo"], h, compute_dtype, backend=backend,
+                  interpret=interpret)
 
 
 # ---------------------------------------------------------------- loss

@@ -120,16 +120,17 @@ def ssd_chunked(x, dt, A, B_, C_, chunk):
     return y.astype(x.dtype), final_state
 
 
-def mamba_forward(p, x, ssm, compute_dtype=jnp.bfloat16, backend="xla"):
+def mamba_forward(p, x, ssm, compute_dtype=jnp.bfloat16, backend="xla",
+                  interpret=None):
     """Full-sequence forward.  x: (B,S,d) -> (y, final_state, conv_state)."""
     B, S, d = x.shape
     d_inner = ssm.expand * d
     H = d_inner // ssm.head_dim
     G, N = ssm.n_groups, ssm.d_state
     z = layers.linear(p["z_proj"], x, compute_dtype, site="mamba.z",
-                      backend=backend)
+                      backend=backend, interpret=interpret)
     xbc_raw = layers.linear(p["xbc_proj"], x, compute_dtype,
-                            site="mamba.xbc", backend=backend)
+                            site="mamba.xbc", backend=backend, interpret=interpret)
     K = ssm.d_conv
     if S >= K - 1:
         conv_state = xbc_raw[:, S - (K - 1):]
@@ -142,7 +143,7 @@ def mamba_forward(p, x, ssm, compute_dtype=jnp.bfloat16, backend="xla"):
     Cmat = xbc[..., d_inner + G * N:].reshape(B, S, G, N)
     dt = jax.nn.softplus(
         layers.linear(p["dt_proj"], x, compute_dtype, site="mamba.dt",
-                      backend=backend).astype(jnp.float32)
+                      backend=backend, interpret=interpret).astype(jnp.float32)
         + p["dt_bias"])
     A = -jnp.exp(p["a_log"])
     chunk = min(ssm.chunk_size, S)
@@ -154,11 +155,12 @@ def mamba_forward(p, x, ssm, compute_dtype=jnp.bfloat16, backend="xla"):
     y = y.reshape(B, S, d_inner)
     y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
     return (layers.linear(p["out_proj"], y, compute_dtype, site="mamba.out",
-                          backend=backend), final_state, conv_state)
+                          backend=backend, interpret=interpret), final_state, conv_state)
 
 
 def mamba_decode_step(p, x, state, conv_state, ssm,
-                      compute_dtype=jnp.bfloat16, backend="xla"):
+                      compute_dtype=jnp.bfloat16, backend="xla",
+                      interpret=None):
     """One-token step.  x: (B,d); state: (B,G,hg,P,N); conv_state: (B,K-1,ch).
 
     Returns (y, new_state, new_conv_state).
@@ -169,9 +171,9 @@ def mamba_decode_step(p, x, state, conv_state, ssm,
     G, N, P = ssm.n_groups, ssm.d_state, ssm.head_dim
     hg = H // G
     z = layers.linear(p["z_proj"], x, compute_dtype, site="mamba.z",
-                      backend=backend)
+                      backend=backend, interpret=interpret)
     xbc = layers.linear(p["xbc_proj"], x, compute_dtype, site="mamba.xbc",
-                        backend=backend)                      # (B,ch)
+                        backend=backend, interpret=interpret)                      # (B,ch)
     window = jnp.concatenate([conv_state, xbc[:, None, :]], axis=1)  # (B,K,ch)
     conv_out = jnp.einsum("bkc,kc->bc", window,
                           p["conv_w"].astype(window.dtype))
@@ -182,7 +184,7 @@ def mamba_decode_step(p, x, state, conv_state, ssm,
     Cmat = xbc[..., d_inner + G * N:].reshape(B, G, N).astype(jnp.float32)
     dt = jax.nn.softplus(
         layers.linear(p["dt_proj"], x, compute_dtype, site="mamba.dt",
-                      backend=backend).astype(jnp.float32)
+                      backend=backend, interpret=interpret).astype(jnp.float32)
         + p["dt_bias"]).reshape(B, G, hg)
     A = -jnp.exp(p["a_log"]).reshape(G, hg)
     dec = jnp.exp(dt * A)                                     # (B,G,hg)
@@ -193,4 +195,4 @@ def mamba_decode_step(p, x, state, conv_state, ssm,
     y = y.reshape(B, d_inner).astype(compute_dtype)
     y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z))
     return layers.linear(p["out_proj"], y, compute_dtype, site="mamba.out",
-                         backend=backend), new_state, new_conv_state
+                         backend=backend, interpret=interpret), new_state, new_conv_state

@@ -47,7 +47,7 @@ def moe_init(key, d_model, d_ff, num_experts, *, num_shared=0,
 
 def moe_apply(p, x, *, top_k, capacity_factor=1.25, groups=0,
               compute_dtype=jnp.bfloat16, aux_loss_weight=0.01,
-              backend="xla"):
+              backend="xla", interpret=None):
     """x: (B, S, d) -> (y, aux_loss).  groups=0 -> one group per sequence."""
     B, S, d = x.shape
     T = B * S
@@ -58,7 +58,8 @@ def moe_apply(p, x, *, top_k, capacity_factor=1.25, groups=0,
     xf = x.reshape(G, Tg, d)
 
     logits = substrate.gemm(xf.astype(jnp.float32), p["router"],
-                            site="moe.router", backend=backend)
+                            site="moe.router", backend=backend,
+                            interpret=interpret)
     probs = jax.nn.softmax(logits, axis=-1)                  # (G,Tg,E)
     top_vals, top_idx = jax.lax.top_k(probs, top_k)          # (G,Tg,k)
     top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
@@ -97,17 +98,21 @@ def moe_apply(p, x, *, top_k, capacity_factor=1.25, groups=0,
     he = he.reshape(G, E, cap, d) * slot_valid[..., None].astype(compute_dtype)
     he = constrain(he, "moe_buf4")
 
-    # ---- expert GEMMs (substrate-dispatched; xla keeps the fused einsum) --
+    # ---- expert GEMMs (substrate-dispatched; xla keeps the fused einsum,
+    # arrayflex runs each site's E GEMMs in ONE expert-batched launch) ----
     wg = p["wi_gate"].astype(compute_dtype)
     wu = p["wi_up"].astype(compute_dtype)
     wo = p["wo"].astype(compute_dtype)
     hg = constrain(substrate.expert_gemm(he, wg, site="moe.wi_gate",
-                                         backend=backend), "moe_h4")
+                                         backend=backend,
+                                         interpret=interpret), "moe_h4")
     hu = constrain(substrate.expert_gemm(he, wu, site="moe.wi_up",
-                                         backend=backend), "moe_h4")
+                                         backend=backend,
+                                         interpret=interpret), "moe_h4")
     h = jax.nn.silu(hg) * hu
     hout = constrain(substrate.expert_gemm(h, wo, site="moe.wo",
-                                           backend=backend), "moe_buf4")
+                                           backend=backend,
+                                           interpret=interpret), "moe_buf4")
 
     # ---- combine back (gather token slots, weight, sum over k) ------------
     dst = jnp.where(keep, flat_e * cap + rank, 0)            # (G,TK)
@@ -120,7 +125,7 @@ def moe_apply(p, x, *, top_k, capacity_factor=1.25, groups=0,
     y = y.reshape(B, S, d)
     if "shared" in p:
         y = y + layers.swiglu(p["shared"], x.reshape(B, S, d), compute_dtype,
-                              backend=backend)
+                              backend=backend, interpret=interpret)
     return y.astype(x.dtype), aux
 
 

@@ -30,16 +30,19 @@ def test_backend_registry():
         substrate.gemm(jnp.ones((2, 4)), jnp.ones((4, 4)), backend="nope")
     calls = []
 
-    def mine(x2, w, plan, out_dtype):
-        calls.append(plan)
+    def mine(x2, w, plan, call):
+        calls.append((plan, call))
         return x2 @ w
 
     substrate.register_backend("_test", mine)
     try:
         out = substrate.gemm(jnp.ones((2, 4)), jnp.ones((4, 8)),
-                             backend="_test")
+                             backend="_test", interpret=False)
         assert out.shape == (2, 8) and len(calls) == 1
-        assert calls[0].M == 8 and calls[0].N == 4 and calls[0].T == 2
+        plan, call = calls[0]
+        assert plan.M == 8 and plan.N == 4 and plan.T == 2
+        assert plan.epilogue == substrate.EPILOGUE_NONE
+        assert call.out_dtype is None and call.interpret is False
     finally:
         substrate._BACKENDS.pop("_test")
 
