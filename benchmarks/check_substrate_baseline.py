@@ -7,6 +7,10 @@ What is gated (and why these fields):
   match required.  Launch counts are deterministic structure (the 3E -> 3
   MoE batching, the fused swiglu's single dual-GEMM launch, attention
   QK/PV routed through the substrate); any drift is a real regression.
+* ``sharded.dispatch_counts`` — exact match required *when measured*
+  (the section needs a >= 4-device host; the multi-device CI job
+  provides one via XLA_FLAGS).  Sharded dispatch must stay one launch
+  per site — a per-shard unroll sneaking back in is a regression.
 * fused swiglu ``speedup`` (arrayflex backend) — must not regress more
   than ``--tolerance`` (default 20%) below the baseline ratio.  A ratio
   of two timings on the same machine is stable enough to gate on, unlike
@@ -61,6 +65,19 @@ def check(current: dict, baseline: dict, tolerance: float):
             baseline["fused"]["expert_batching"]["launches_batched"],
             baseline["fused"]["expert_batching"]["launches_unrolled"]):
         errors.append(f"expert-batching launch counts changed: {eb}")
+
+    # --- sharded: per-shard dispatch counts (exact) when measured --------
+    cur_sh = current.get("sharded")
+    base_sh = baseline.get("sharded")
+    if cur_sh and base_sh:
+        if cur_sh["dispatch_counts"] != base_sh["dispatch_counts"]:
+            errors.append(
+                f"sharded dispatch_counts changed: "
+                f"{cur_sh['dispatch_counts']} != baseline "
+                f"{base_sh['dispatch_counts']}")
+    elif base_sh and not cur_sh:
+        print("note: sharded section not measured on this host (needs "
+              ">= 4 devices); skipping the sharded dispatch-count gate")
 
     # --- perf: fused swiglu ratio within tolerance of the baseline -------
     # The ratio is machine-dependent (the baseline was committed from a

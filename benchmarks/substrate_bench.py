@@ -21,6 +21,14 @@ record the per-site launch counts of a traced forward (3 per MoE layer's
 expert GEMMs, was 3E).  ``benchmarks/check_substrate_baseline.py`` diffs
 these fields against the committed baseline in CI.
 
+New in the sharded substrate: the ``sharded`` section traces the model
+under an FSDP=2 x TP=2 host mesh (needs >= 4 devices, else null) and
+reports, per site, the logical vs post-partition (M, N, T), the shard
+signature, the per-shard Eq.(6') cycles/prediction, and the measured
+per-shard standalone dispatch — predicted vs measured time *per shard*.
+Its dispatch counts (one launch per site, sharded or not) are gated
+exactly against the baseline.
+
 CPU wall-times are structural (the Pallas kernel runs in interpret mode);
 the Eq.(6) columns are the hardware-calibrated quantities.
 
@@ -43,7 +51,7 @@ import jax.numpy as jnp
 from repro.configs import get_config, reduced
 from repro.configs.base import DECODE_32K
 from repro.core import planner
-from repro.kernels import substrate
+from repro.kernels import ops, substrate
 from repro.models import lm
 
 OUT_JSON = os.path.join("results", "bench", "BENCH_substrate.json")
@@ -253,6 +261,73 @@ def _dispatch_counts():
     return out, launches
 
 
+def _sharded_section(iters):
+    """Post-partition plans + per-shard dispatch counts of a traced
+    forward under an FSDP=2 x TP=2 host mesh.
+
+    Per site: logical vs per-shard (M, N, T), the shard signature, the
+    per-shard Eq.(6') cycle count / prediction, and the measured time of
+    the per-shard standalone dispatch — the GEMM each device actually
+    executes, epilogue replayed — so predicted vs measured joins per
+    shard.  The dispatch counts are gated exactly by
+    check_substrate_baseline.py: sharded dispatch stays ONE launch per
+    site.  Returns None on hosts with fewer than 4 devices (the
+    multi-device CI job provides them via XLA_FLAGS).
+    """
+    if len(jax.devices()) < 4:
+        return None
+    import dataclasses
+    cfg = dataclasses.replace(_cfg("arrayflex"), mesh_shape=(2, 2))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jnp.ones((2, 8), jnp.int32)
+    substrate.clear_plan_cache()
+    jax.eval_shape(lambda p, b: lm.forward(cfg, p, b), params,
+                   {"tokens": toks})
+    counts = dict(sorted(substrate.DISPATCH_COUNTS.items()))
+    site_plans = dict(substrate.SITE_PLANS)
+    rng = np.random.RandomState(3)
+    rows, fused_seen = [], set()
+    for site, plan in sorted(site_plans.items()):
+        ep = plan.epilogue
+        # only the two labels of a fused dual-GEMM pair share a dispatch:
+        # collapse those under the joined label (matching the
+        # dispatch_counts key); distinct sites that merely hash to the
+        # same cached plan (attn.wk / attn.wv) each keep their row
+        if ep.dual:
+            if id(plan) in fused_seen:
+                continue
+            fused_seen.add(id(plan))
+            site = "+".join(s for s, p in sorted(site_plans.items())
+                            if p is plan)
+        x = jnp.asarray(rng.randn(plan.T_shard, plan.N_shard), jnp.float32)
+        w = jnp.asarray(rng.randn(plan.N_shard, plan.M_shard), jnp.float32)
+        # replay the exact per-shard kernel the sharded dispatch runs: the
+        # recorded plan's k (reduce pricing can shift it away from what a
+        # fresh unsharded plan of the same shape would pick), and for
+        # reduce sites the contraction-only kernel (epilogue post-psum)
+        reduce = plan.shard.reduce_ops > 0
+        w2 = (jnp.asarray(rng.randn(plan.N_shard, plan.M_shard),
+                          jnp.float32) if ep.dual and not reduce else None)
+        b = (jnp.asarray(rng.randn(plan.M_shard), jnp.float32)
+             if ep.bias and not reduce else None)
+        act = "none" if reduce else ep.activation
+        f = jax.jit(lambda a, k=plan.k, a_=act: ops.arrayflex_matmul(
+            a, w, w2=w2, bias=b, activation=a_, k_collapse=k))
+        rows.append({
+            "site": site,
+            "logical_MNT": [plan.M, plan.N, plan.T],
+            "per_shard_MNT": [plan.M_shard, plan.N_shard, plan.T_shard],
+            "shard": [plan.shard.rows, plan.shard.contraction,
+                      plan.shard.cols, plan.shard.reduce_ops],
+            "k": plan.k, "cycles": plan.cycles,
+            "eq6_pred_us": round(plan.t_pred_ps / 1e6, 4),
+            "measured_per_shard_us": round(_time(f, x, iters=iters), 1),
+        })
+    substrate.clear_plan_cache()
+    return {"mesh": {"data": 2, "model": 2}, "dispatch_counts": counts,
+            "sites": rows}
+
+
 def _analytic_full_rows():
     """Eq.(6') plans for the FULL qwen2-0.5b decode cell (no execution):
     what the selection loop buys at real scale.  Uses planner.plan_gemm so
@@ -287,6 +362,10 @@ def substrate_report(smoke: bool = False):
     fused_rows = _fused_swiglu_rows(fused_iters)
     expert_row = _expert_batching_row(fused_iters)
     dispatch_counts, moe_launches = _dispatch_counts()
+    # snapshot before _sharded_section, whose trace clears the plan cache:
+    # the field must mean the same thing on single- and multi-device hosts
+    plan_cache = dict(substrate.plan_cache_info()._asdict())
+    sharded = _sharded_section(iters)
 
     report = {
         "config": {"arch": "qwen2-0.5b (reduced)", "batch": B, "seq": S,
@@ -296,9 +375,10 @@ def substrate_report(smoke: bool = False):
         "fused": {"swiglu": fused_rows, "expert_batching": expert_row},
         "dispatch_counts": dispatch_counts,
         "moe_expert_launches": moe_launches,
+        "sharded": sharded,
         "equivalence": {"logits_max_abs_diff": max_diff,
                         "reference_fallbacks": 0},
-        "plan_cache": dict(substrate.plan_cache_info()._asdict()),
+        "plan_cache": plan_cache,
     }
     if not smoke:
         report["analytic_full_decode_32k"] = _analytic_full_rows()
@@ -306,10 +386,13 @@ def substrate_report(smoke: bool = False):
     with open(OUT_JSON, "w") as f:
         json.dump(report, f, indent=1)
     af_swiglu = next(r for r in fused_rows if r["backend"] == "arrayflex")
+    sh_note = (f", {len(sharded['sites'])} sharded sites @ FSDP2xTP2"
+               if sharded else ", sharded: skipped (<4 devices)")
     derived = (f"{len(site_rows)} sites, logits max diff {max_diff:.1e}, "
                f"fused swiglu {af_swiglu['speedup']:.2f}x, "
                f"moe launches {moe_launches['per_moe_layer_unrolled']}->"
-               f"{moe_launches['per_moe_layer_now']}/layer -> {OUT_JSON}")
+               f"{moe_launches['per_moe_layer_now']}/layer"
+               f"{sh_note} -> {OUT_JSON}")
     return site_rows, derived
 
 

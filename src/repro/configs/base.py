@@ -104,6 +104,17 @@ class ModelConfig:
     # default (compiled on real TPU backends, interpreted elsewhere) —
     # see kernels.runtime.resolve_interpret.  True/False force it.
     pallas_interpret: Optional[bool] = None
+    # --- SPMD sharded dispatch -------------------------------------------
+    # (data, model) host-mesh axis sizes for sharded GEMM dispatch; ()
+    # runs unsharded.  The lm entry points activate the mesh from this
+    # field (parallel.sharding.mesh_from_config), so the substrate plans
+    # on post-partition per-shard shapes and runs each device's GEMM
+    # under jax.shard_map (TP 'wo'-style contractions psum at the
+    # collapsed-block boundary).
+    mesh_shape: Tuple[int, ...] = ()
+    # "auto" shards dispatch whenever mesh_shape declares a mesh; "none"
+    # keeps replicated dispatch (the planner then sees logical shapes).
+    gemm_sharding: str = "auto"
 
     # ------------------------------------------------------------------
     @property

@@ -16,7 +16,9 @@ Three planning surfaces:
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
+import math
 from dataclasses import dataclass, field
 from typing import List, Optional
 
@@ -94,12 +96,53 @@ def plan_network(gemms: List[GEMM], R: int, C: int,
 # ---------------------------------------------------------------------------
 # transformer GEMM walker
 
+def _postshard(g: GEMM, dp: int, tp: int, experts: int,
+               qk_batch: int) -> GEMM:
+    """Post-partition view of one analytic GEMM under a (data, model)
+    mesh, mirroring ``parallel.sharding.gemm_shard_ctx``: column-parallel
+    sites divide M by tp, row-parallel sites divide N by tp and price the
+    boundary psum combine tree as epilogue ops, every 2-D site divides
+    its streamed rows by dp, and the batched/expert sites divide their
+    ``count`` by the shards of their batch/expert axis.  Indivisible axes
+    replicate (dims unchanged) — the same fallback the dispatch takes.
+
+    ``qk_batch`` is the runtime batch axis of the attention products
+    (B*KV): the dispatch shards on it, NOT on the analytic count
+    (n_attn*B*H), whose extra factors would claim sharding the runtime
+    cannot perform (GQA under high TP).  The divisibility chain itself is
+    ``sharding.batched_shard_count`` — the same function the dispatch
+    uses."""
+    from repro.parallel.sharding import (_COL_SITES, _ROW_SITES,
+                                         batched_shard_count)
+    if g.name in ("attn.qk", "attn.pv"):
+        return dataclasses.replace(
+            g, count=g.count // batched_shard_count(qk_batch, dp, tp))
+    if g.name in ("moe.wi_gate", "moe.wi_up", "moe.wo"):
+        if tp > 1 and experts % tp == 0:
+            return dataclasses.replace(g, count=g.count // tp)
+        return g
+    M, N, T, e = g.M, g.N, g.T, g.epilogue_ops
+    if dp > 1 and T % dp == 0:
+        T //= dp
+    if g.name in _COL_SITES and tp > 1 and M % tp == 0:
+        M //= tp
+    elif g.name in _ROW_SITES and tp > 1 and N % tp == 0:
+        N //= tp
+        e += math.ceil(math.log2(tp))
+    return dataclasses.replace(g, M=M, N=N, T=T, epilogue_ops=e)
+
+
 def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
     """Every GEMM one step of this (model, shape) cell executes.
 
     T is the streamed dimension (tokens), N the contraction, M the output.
     Attention score/PV products fold batch*heads into the tile count via
     ``count`` (the SA processes them back to back).
+
+    When ``cfg.mesh_shape`` declares a (data, model) mesh (and
+    ``gemm_sharding`` is not "none"), every entry is the *post-partition*
+    per-device GEMM — the shape the sharded substrate actually executes —
+    so the analytic table and the shard-keyed plan cache stay joined.
     """
     d, hd = cfg.d_model, cfg.resolved_head_dim
     H, KV = cfg.n_heads, cfg.n_kv_heads
@@ -177,6 +220,12 @@ def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
     out.append(GEMM("unembed", cfg.padded_vocab, d,
                     shape.global_batch if shape.kind == "decode"
                     else shape.tokens, 1))
+    ms = tuple(getattr(cfg, "mesh_shape", ()) or ())
+    if (len(ms) == 2 and (ms[0] > 1 or ms[1] > 1)
+            and getattr(cfg, "gemm_sharding", "auto") != "none"):
+        E = cfg.moe.num_experts if cfg.moe else 0
+        out = [_postshard(g, ms[0], ms[1], E, shape.global_batch * KV)
+               for g in out]
     return out
 
 

@@ -7,8 +7,9 @@ nn/ and models/ routes through :func:`gemm` (or :func:`expert_gemm` for the
 MoE batched form, :func:`batched_gemm` for attention QK/PV products), which
 
   * resolves the GEMM's :class:`GemmPlan` from a process-wide **plan
-    cache** keyed on ``(M, N, T, backend, epilogue)`` — the Eq.(6') argmin
-    runs once per shape, not once per jit trace or serving request;
+    cache** keyed on ``(M, N, T, backend, epilogue, shard)`` — the Eq.(6')
+    argmin runs once per *post-partition* shape, not once per jit trace or
+    serving request;
   * records the plan under the caller's **site label** (``attn.wq``,
     ``mlp.wo``, ``attn.qk``, ...), the same names
     ``core.planner.model_gemms`` emits, so analytic plans and executed
@@ -33,22 +34,41 @@ vector ops are priced into Eq.(5')/(6') and can shift the planned k.
 ``ModelConfig.gemm_backend`` selects the backend model-wide and
 ``ModelConfig.pallas_interpret`` (or ``REPRO_PALLAS_INTERPRET``) the
 Pallas interpret mode; callers thread both through (see models/lm.py).
-New backends (quantized, sharded, ...) register with
-:func:`register_backend`.
+New backends (quantized, ...) register with :func:`register_backend`.
+
+**Sharded SPMD dispatch**: every entry point accepts a :class:`ShardCtx`
+(mesh + operand PartitionSpecs + contraction reduce axes, derived per
+site by ``parallel.sharding.gemm_shard_ctx`` and friends).  The dispatch
+then runs the backend inside ``jax.shard_map`` so each device executes
+its *post-partition* per-shard GEMM through the planned kernel, and the
+plan itself is computed on the per-shard (M, N, T) — under tensor/FSDP
+partitioning that is the shape the array actually executes, so the
+Eq.(6') k-selection stays correct for sharded runs.  A TP row-parallel
+weight (``attn.wo``-style, contraction sharded over 'model') psums its
+partial accumulators at the collapsed-block boundary, *before* the
+epilogue, and the psum's combine tree is priced into Eq.(5') as boundary
+ops (``ShardSig.reduce_ops``) — which can legitimately shift the argmin
+toward deeper collapse.
 
 Shape convention matches core.planner: a call ``gemm(x, w)`` with
 ``x: (..., K)`` and ``w: (K, N_out)`` is the planner GEMM
 ``X[T, M] = A[T, N] x B[N, M]`` with ``M = N_out`` (output columns),
 ``N = K`` (contraction), ``T = prod(leading dims)`` (streamed rows).
+``GemmPlan`` keeps those *logical* values and records the post-partition
+``M_shard/N_shard/T_shard`` plus the per-shard Eq.(4) ``cycles``.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from dataclasses import dataclass
-from typing import Any, Callable, Dict, Optional
+from typing import Any, Callable, Dict, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import PartitionSpec as P
 
 from repro.core import planner, timing
 from repro.kernels import ops
@@ -111,19 +131,99 @@ class GemmCall:
     interpret: Optional[bool] = None   # Pallas interpret override
 
 
+# ---------------------------------------------------------------------------
+# shard signature / context
+
+@dataclass(frozen=True)
+class ShardSig:
+    """Post-partition signature of a sharded dispatch (plan-cache key part).
+
+    ``rows``/``contraction``/``cols`` are the shard counts of the logical
+    T / N / M dims; ``reduce_ops`` prices the contraction psum's combine
+    tree (``ceil(log2(shards))`` boundary adds) into Eq.(5') — the reduce
+    resolves at the collapsed-block boundary alongside the epilogue, so it
+    rides the same ``d_epilogue_ps`` critical-path term.
+    """
+
+    rows: int = 1
+    contraction: int = 1
+    cols: int = 1
+    reduce_ops: int = 0
+
+
+SHARD_NONE = ShardSig()
+
+
+def _spec_shards(mesh, entry) -> int:
+    """Total shard count a PartitionSpec entry induces under ``mesh``
+    (absent axes count 1 — ``sharding.mesh_axis_size`` is the single
+    source of truth for that rule)."""
+    from repro.parallel.sharding import mesh_axis_size
+    if entry is None:
+        return 1
+    axes = (entry,) if isinstance(entry, str) else tuple(entry)
+    n = 1
+    for a in axes:
+        n *= mesh_axis_size(mesh, a)
+    return n
+
+
+@dataclass(frozen=True)
+class ShardCtx:
+    """How one substrate dispatch runs under the SPMD mesh.
+
+    ``x_spec``/``w_spec``/``out_spec`` are PartitionSpecs of the operands
+    *as dispatched* (x already flattened to ``(T, K)`` for :func:`gemm`;
+    the batched/expert entries keep their leading batch/expert dims).
+    ``reduce_axes`` names mesh axes the contraction is sharded over: each
+    device computes a partial GEMM and the psum applies at the
+    collapsed-block boundary, before the epilogue.  Derivation from the
+    ``parallel.sharding`` site rules lives in ``sharding.gemm_shard_ctx``
+    / ``batched_shard_ctx`` / ``expert_shard_ctx``.
+    """
+
+    mesh: Any
+    x_spec: Any
+    w_spec: Any
+    out_spec: Any
+    reduce_axes: Tuple[str, ...] = ()
+
+    def axis_shards(self, entry) -> int:
+        return _spec_shards(self.mesh, entry)
+
+    def signature(self) -> ShardSig:
+        """ShardSig for the 2-D :func:`gemm` entry (the plan-cache key)."""
+        r = _spec_shards(self.mesh, tuple(self.reduce_axes) or None)
+        return ShardSig(
+            rows=self.axis_shards(self.x_spec[0]),
+            contraction=self.axis_shards(self.x_spec[1]),
+            cols=self.axis_shards(self.w_spec[1]),
+            reduce_ops=math.ceil(math.log2(r)) if r > 1 else 0)
+
+    def divides(self, T: int, K: int, N_out: int) -> bool:
+        s = self.signature()
+        return (T % s.rows == 0 and K % s.contraction == 0
+                and N_out % s.cols == 0)
+
+
 @dataclass(frozen=True)
 class GemmPlan:
-    """One plan-cache entry: shape, epilogue, chosen depth, Eq.(6')
-    predictions (ps)."""
+    """One plan-cache entry: logical shape, epilogue, shard signature,
+    chosen depth, and *per-shard* Eq.(6') predictions (ps)."""
 
-    M: int              # output columns
-    N: int              # contraction
-    T: int              # streamed rows
+    M: int              # output columns (logical, pre-partition)
+    N: int              # contraction (logical)
+    T: int              # streamed rows (logical)
     backend: str
     k: int              # collapse depth the kernel runs with (1 off-ArrayFlex)
-    t_pred_ps: float    # Eq.(6') model time at k
-    t_conventional_ps: float  # fixed-pipeline SA baseline (unfused)
+    t_pred_ps: float    # per-shard Eq.(6') model time at k
+    t_conventional_ps: float  # per-shard fixed-pipeline SA baseline
     epilogue: Epilogue = EPILOGUE_NONE
+    shard: ShardSig = SHARD_NONE
+    M_shard: int = 0    # post-partition shape each device executes
+    N_shard: int = 0
+    T_shard: int = 0
+    cycles: int = 0     # per-shard Eq.(4) cycles x fused contractions
 
     @property
     def saving(self) -> float:
@@ -132,20 +232,33 @@ class GemmPlan:
 
 @functools.lru_cache(maxsize=None)
 def plan_gemm(M: int, N: int, T: int, backend: str = "arrayflex",
-              epilogue: Epilogue = EPILOGUE_NONE) -> GemmPlan:
+              epilogue: Epilogue = EPILOGUE_NONE,
+              shard: ShardSig = SHARD_NONE) -> GemmPlan:
     """Plan-cache entry point: Eq.(6') argmin once per
-    (M, N, T, backend, epilogue)."""
-    k = (ops.plan_collapse(M, N, T, epilogue_ops=epilogue.ops)
+    (M, N, T, backend, epilogue, shard).
+
+    (M, N, T) are the *logical* dims; the argmin runs on the
+    post-partition per-shard shape — the GEMM the array actually executes
+    under the mesh — and a sharded contraction prices its psum combine
+    tree into the boundary ops (see :class:`ShardSig`)."""
+    Ms = -(-M // shard.cols)
+    Ns = -(-N // shard.contraction)
+    Ts = -(-T // shard.rows)
+    e_ops = epilogue.ops + shard.reduce_ops
+    k = (ops.plan_collapse(Ms, Ns, Ts, epilogue_ops=e_ops)
          if backend == "arrayflex" else 1)
     return GemmPlan(
-        M=M, N=N, T=T, backend=backend, k=k, epilogue=epilogue,
-        t_pred_ps=timing.t_abs_ps(M, N, T, ops.SA_R, ops.SA_C, k,
-                                  epilogue_ops=epilogue.ops,
+        M=M, N=N, T=T, backend=backend, k=k, epilogue=epilogue, shard=shard,
+        M_shard=Ms, N_shard=Ns, T_shard=Ts,
+        cycles=epilogue.contractions * timing.total_cycles(
+            Ms, Ns, Ts, ops.SA_R, ops.SA_C, k),
+        t_pred_ps=timing.t_abs_ps(Ms, Ns, Ts, ops.SA_R, ops.SA_C, k,
+                                  epilogue_ops=e_ops,
                                   contractions=epilogue.contractions),
         t_conventional_ps=timing.t_abs_conventional_ps(
-            M, N, T, ops.SA_R, ops.SA_C,
+            Ms, Ns, Ts, ops.SA_R, ops.SA_C,
             contractions=epilogue.contractions,
-            epilogue_ops=epilogue.ops))
+            epilogue_ops=e_ops))
 
 
 def plan_cache_info():
@@ -277,9 +390,58 @@ def _epilogue_spec(epilogue: str, w2, bias, bias2) -> Epilogue:
 # ---------------------------------------------------------------------------
 # dispatch
 
+def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
+    """Run one planned 2-D GEMM under ``jax.shard_map``: each device
+    executes the post-partition per-shard GEMM through ``fn`` at the
+    plan's k.  A sharded contraction (``ctx.reduce_axes``) psums the
+    partial fp32 accumulators at the collapsed-block boundary and applies
+    the epilogue *after* the reduce (a per-shard bias/activation on
+    partial sums would be wrong)."""
+    ep = plan.epilogue
+    reduce_axes = ctx.reduce_axes
+    col_spec = P(ctx.w_spec[1])          # (N_out,) operands follow out cols
+    operands, in_specs = [x2, w], [ctx.x_spec, ctx.w_spec]
+    flags = []
+    for arr, spec in ((call.w2, ctx.w_spec), (call.bias, col_spec),
+                      (call.bias2, col_spec)):
+        flags.append(arr is not None)
+        if arr is not None:
+            operands.append(arr)
+            in_specs.append(spec)
+    has_w2, has_b, has_b2 = flags
+    # reduce path: the per-shard kernel runs the contraction(s) only, at
+    # the SAME k the (reduce-priced) plan picked
+    exec_plan = (dataclasses.replace(plan, epilogue=EPILOGUE_NONE)
+                 if reduce_axes else plan)
+
+    def body(*ops_):
+        it = iter(ops_)
+        xs, ws = next(it), next(it)
+        w2s = next(it) if has_w2 else None
+        bs = next(it) if has_b else None
+        b2s = next(it) if has_b2 else None
+        if not reduce_axes:
+            return fn(xs, ws, plan,
+                      GemmCall(out_dtype=call.out_dtype, w2=w2s, bias=bs,
+                               bias2=b2s, interpret=call.interpret))
+        pc = GemmCall(out_dtype=jnp.float32, interpret=call.interpret)
+        y = jax.lax.psum(fn(xs, ws, exec_plan, pc), reduce_axes)
+        y2 = (jax.lax.psum(fn(xs, w2s, exec_plan, pc), reduce_axes)
+              if has_w2 else None)
+        out = apply_epilogue(
+            y, y2,
+            None if bs is None else bs.astype(jnp.float32),
+            None if b2s is None else b2s.astype(jnp.float32),
+            ep.activation)
+        return out.astype(call.out_dtype or xs.dtype)
+
+    return shard_map(body, mesh=ctx.mesh, in_specs=tuple(in_specs),
+                     out_specs=ctx.out_spec, check_rep=False)(*operands)
+
+
 def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
          epilogue: str = "none", w2=None, bias=None, bias2=None,
-         interpret=None):
+         interpret=None, shard: Optional[ShardCtx] = None):
     """The substrate entry: x (..., K) @ w (K, N_out) -> (..., N_out).
 
     ``out_dtype=None`` returns the operands' dtype with the backend's
@@ -292,6 +454,14 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     ``silu(x@w [+ bias]) * (x@w2 [+ bias2])`` — the dual-GEMM gated MLP in
     ONE launch.  A fused site label like ``"mlp.wi_gate+mlp.wi_up"``
     records the shared plan under both component names.
+
+    ``shard`` (a :class:`ShardCtx`) dispatches under the SPMD mesh: the
+    plan is computed on the post-partition per-shard (M, N, T) — keyed in
+    the plan cache by the shard signature — and each device runs its
+    per-shard GEMM inside ``jax.shard_map`` (contraction shards psum at
+    the collapsed-block boundary, then the epilogue applies).  A shard
+    context whose counts do not divide the dims (or an empty operand)
+    falls back to replicated dispatch.
     """
     fn = get_backend(backend)
     ep = _epilogue_spec(epilogue, w2, bias, bias2)
@@ -299,15 +469,41 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     K = x.shape[-1]
     N_out = w.shape[-1]
     x2 = x.reshape(math.prod(lead), K)   # explicit rows: K may be 0
-    plan = plan_gemm(N_out, K, x2.shape[0], backend, ep)
-    _record(site, plan)
-    out = fn(x2, w, plan, GemmCall(out_dtype=out_dtype, w2=w2, bias=bias,
-                                   bias2=bias2, interpret=interpret))
+    T = x2.shape[0]
+    if shard is not None and (T * K * N_out == 0
+                              or not shard.divides(T, K, N_out)):
+        shard = None
+    call = GemmCall(out_dtype=out_dtype, w2=w2, bias=bias, bias2=bias2,
+                    interpret=interpret)
+    if shard is not None:
+        plan = plan_gemm(N_out, K, T, backend, ep, shard.signature())
+        _record(site, plan)
+        out = _sharded_gemm(fn, x2, w, plan, shard, call)
+    else:
+        plan = plan_gemm(N_out, K, T, backend, ep)
+        _record(site, plan)
+        out = fn(x2, w, plan, call)
     return out.reshape(*lead, N_out)
 
 
+def _batched_exec(x, w, plan: GemmPlan, backend: str, out_dtype, interpret):
+    """Builtin batched execution (B, T, K) @ (B, K, N): ONE launch."""
+    if backend == "arrayflex":
+        return ops.arrayflex_expert_matmul(x, w, k_collapse=plan.k,
+                                           out_dtype=out_dtype,
+                                           interpret=interpret)
+    if backend == "ref":
+        out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
+        return out.astype(out_dtype or x.dtype)
+    if out_dtype is None:
+        return jnp.matmul(x, w)
+    return jnp.matmul(
+        x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
 def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
-                 out_dtype=None, interpret=None):
+                 out_dtype=None, interpret=None,
+                 shard: Optional[ShardCtx] = None):
     """Batched GEMM: x (B, T, K) @ w (B, K, N) -> (B, T, N).
 
     The substrate path for attention QK/PV products (``attn.qk`` /
@@ -316,26 +512,31 @@ def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
     kernel launch (batch = the leading grid dimension).  ``out_dtype``
     follows the :func:`gemm` contract (None -> operand dtype; a dtype ->
     fp32 accumulation cast once).
+
+    ``shard`` (3-dim specs) splits the batch dim over mesh axes under
+    ``jax.shard_map`` — each device runs ONE launch over its batch slice.
+    Batch sharding leaves the per-element (M, N, T) unchanged, so the plan
+    key does not change.  Custom backends and indivisible batches fall
+    back to replicated dispatch.
     """
     B, T, K = x.shape
     N_out = w.shape[-1]
     plan = plan_gemm(N_out, K, T, backend)
+    if shard is not None and (not _is_builtin(backend)
+                              or B % shard.axis_shards(shard.x_spec[0])):
+        shard = None
+    if shard is not None:
+        _record(site, plan)
+
+        def body(xs, ws):
+            return _batched_exec(xs, ws, plan, backend, out_dtype, interpret)
+
+        return shard_map(body, mesh=shard.mesh,
+                         in_specs=(shard.x_spec, shard.w_spec),
+                         out_specs=shard.out_spec, check_rep=False)(x, w)
     if _is_builtin(backend):
-        if backend == "arrayflex":
-            _record(site, plan)
-            return ops.arrayflex_expert_matmul(x, w, k_collapse=plan.k,
-                                               out_dtype=out_dtype,
-                                               interpret=interpret)
-        if backend == "ref":
-            _record(site, plan)
-            out = jnp.matmul(x.astype(jnp.float32), w.astype(jnp.float32))
-            return out.astype(out_dtype or x.dtype)
-        if backend == "xla":
-            _record(site, plan)
-            if out_dtype is None:
-                return jnp.matmul(x, w)
-            return jnp.matmul(
-                x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+        _record(site, plan)
+        return _batched_exec(x, w, plan, backend, out_dtype, interpret)
     # custom backend: unroll the (static) batch through the 2-D entry —
     # B launches, each recorded against the shared per-shape plan
     _record(site, plan, launches=B)
@@ -344,8 +545,24 @@ def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
     return jnp.stack([fn(x[b], w[b], plan, call) for b in range(B)])
 
 
+def _expert_exec(x, w, plan: GemmPlan, backend: str, interpret):
+    """Builtin expert execution (G, E, C, K) @ (E, K, N): ONE launch."""
+    if backend == "xla":
+        return jnp.einsum("gecd,edf->gecf", x, w)
+    if backend == "ref":
+        out = jnp.einsum("gecd,edf->gecf", x.astype(jnp.float32),
+                         w.astype(jnp.float32))
+        return out.astype(x.dtype)
+    G, E, C, K = x.shape
+    N_out = w.shape[-1]
+    xe = x.transpose(1, 0, 2, 3).reshape(E, G * C, K)
+    out = ops.arrayflex_expert_matmul(xe, w, k_collapse=plan.k,
+                                      interpret=interpret)
+    return out.reshape(E, G, C, N_out).transpose(1, 0, 2, 3)
+
+
 def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
-                interpret=None):
+                interpret=None, shard: Optional[ShardCtx] = None):
     """Batched expert GEMM: x (G, E, C, K) @ w (E, K, N) -> (G, E, C, N).
 
     Every backend plans ONE consistent (M=N, N=K, T=G*C) shape per site —
@@ -355,25 +572,31 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
     arrayflex backend folds the dispatch groups into the row dim and runs
     ALL experts in ONE kernel launch whose leading grid dimension is the
     expert axis (per-site launch count: 1, was E).
+
+    ``shard`` (from ``sharding.expert_shard_ctx``) runs expert-parallel:
+    the expert axis splits over 'model' under ``jax.shard_map`` and each
+    device launches once over its E/tp experts (per-expert shape — and so
+    the plan — unchanged).  Custom backends and indivisible expert counts
+    fall back to replicated dispatch.
     """
     G, E, C, K = x.shape
     N_out = w.shape[-1]
     plan = plan_gemm(N_out, K, G * C, backend)
+    if shard is not None and (not _is_builtin(backend)
+                              or E % shard.axis_shards(shard.x_spec[1])):
+        shard = None
+    if shard is not None:
+        _record(site, plan)
+
+        def body(xs, ws):
+            return _expert_exec(xs, ws, plan, backend, interpret)
+
+        return shard_map(body, mesh=shard.mesh,
+                         in_specs=(shard.x_spec, shard.w_spec),
+                         out_specs=shard.out_spec, check_rep=False)(x, w)
     if _is_builtin(backend):
-        if backend == "xla":
-            _record(site, plan)
-            return jnp.einsum("gecd,edf->gecf", x, w)
-        if backend == "ref":
-            _record(site, plan)
-            out = jnp.einsum("gecd,edf->gecf", x.astype(jnp.float32),
-                             w.astype(jnp.float32))
-            return out.astype(x.dtype)
-        if backend == "arrayflex":
-            _record(site, plan)
-            xe = x.transpose(1, 0, 2, 3).reshape(E, G * C, K)
-            out = ops.arrayflex_expert_matmul(xe, w, k_collapse=plan.k,
-                                              interpret=interpret)
-            return out.reshape(E, G, C, N_out).transpose(1, 0, 2, 3)
+        _record(site, plan)
+        return _expert_exec(x, w, plan, backend, interpret)
     # custom backend: unroll the (static) expert axis through the 2-D
     # entry — E launches, each recorded against the shared per-shape plan
     _record(site, plan, launches=E)

@@ -3,6 +3,14 @@
   PYTHONPATH=src python -m repro.launch.serve --arch qwen2-0.5b --reduced \
       --requests 6 --max-new 24 --prefill-chunk 32
 
+Sharded SPMD serving: ``--tp``/``--fsdp`` declare the (data, model) host
+mesh — every model GEMM then plans on its post-partition shape and runs
+per-shard under jax.shard_map (see docs/substrate.md).  On CPU,
+``--host-devices N`` fans the host out to N devices (the XLA_FLAGS
+device-count override) so a TP=4 mesh is testable on a laptop:
+
+  PYTHONPATH=src python -m repro.launch.serve --tp 4 --host-devices 8
+
 Prints per-request outputs plus per-phase timing: prefill and decode
 throughput (tokens/s), dispatch counts, and mean time-to-first-token.
 """
@@ -10,6 +18,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import os
 import time
 
 import jax
@@ -51,12 +60,30 @@ def main(argv=None):
     ap.add_argument("--gemm-backend", default="xla",
                     help="GEMM substrate backend (kernels.substrate): "
                          "xla | arrayflex | ref")
+    ap.add_argument("--tp", type=int, default=1,
+                    help="tensor-parallel degree (mesh 'model' axis); "
+                         "GEMMs plan per-shard and run under shard_map")
+    ap.add_argument("--fsdp", type=int, default=1,
+                    help="FSDP/data-parallel degree (mesh 'data' axis)")
+    ap.add_argument("--host-devices", type=int, default=0,
+                    help="fan the host out to N devices before the backend "
+                         "initializes (XLA_FLAGS "
+                         "--xla_force_host_platform_device_count; CPU only)")
     args = ap.parse_args(argv)
+
+    if args.host_devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.host_devices}")
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     cfg = dataclasses.replace(cfg, gemm_backend=args.gemm_backend)
+    if args.tp > 1 or args.fsdp > 1:
+        cfg = dataclasses.replace(cfg, mesh_shape=(args.fsdp, args.tp))
+        print(f"mesh: data={args.fsdp} x model={args.tp} over "
+              f"{len(jax.devices())} host devices")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_batch=args.max_batch,

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
 from repro.nn import layers, attention as attn_lib, moe as moe_lib, mamba as mamba_lib
+from repro.parallel import sharding
 from repro.parallel.sharding import constrain
 
 
@@ -484,7 +485,17 @@ def _context(cfg, params, batch):
 
 
 def forward(cfg: ModelConfig, params, batch, *, return_cache=False):
-    """Returns (logits, aux_loss, cache-or-None).  batch['tokens']: (B,S)."""
+    """Returns (logits, aux_loss, cache-or-None).  batch['tokens']: (B,S).
+
+    Activates cfg's GEMM-dispatch mesh (``mesh_shape``) for the trace, so
+    every substrate dispatch below derives its per-site shard context and
+    the planner sees post-partition shapes.
+    """
+    with sharding.gemm_mesh_scope(cfg):
+        return _forward(cfg, params, batch, return_cache=return_cache)
+
+
+def _forward(cfg: ModelConfig, params, batch, *, return_cache=False):
     P = period(cfg)
     cd = _cdtype(cfg)
     tokens = batch["tokens"]
@@ -524,7 +535,15 @@ def prefill(cfg: ModelConfig, params, batch):
 
 
 def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
-    """token: (B,) int32; pos: scalar int32.  Returns (logits (B,V), cache)."""
+    """token: (B,) int32; pos: scalar int32.  Returns (logits (B,V), cache).
+
+    Activates cfg's GEMM-dispatch mesh (``mesh_shape``), like ``forward``.
+    """
+    with sharding.gemm_mesh_scope(cfg):
+        return _decode_step(cfg, params, cache, token, pos, ctx)
+
+
+def _decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
     P = period(cfg)
     cd = _cdtype(cfg)
     x = layers.embed(params["embed"], token[:, None], cd)
@@ -569,7 +588,14 @@ def prefill_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
     prefill path inflicted on co-resident slots).  Returns
     ``(logits (B,V) at each row's last valid chunk token, new_cache)``;
     logits rows with ``lengths == 0`` are meaningless.
+
+    Activates cfg's GEMM-dispatch mesh (``mesh_shape``), like ``forward``.
     """
+    with sharding.gemm_mesh_scope(cfg):
+        return _prefill_step(cfg, params, cache, tokens, pos, lengths)
+
+
+def _prefill_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
     P = period(cfg)
     cd = _cdtype(cfg)
     tokens = jnp.asarray(tokens, jnp.int32)

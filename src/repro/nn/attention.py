@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import substrate
+from repro.parallel import sharding
 from repro.parallel.sharding import constrain
 
 NEG_INF = -1e30
@@ -42,7 +43,8 @@ def qk_scores(qg, k, *, backend="xla", interpret=None):
     qb = qg.transpose(0, 2, 3, 1, 4).reshape(B * KV, g * S, D)
     kb = k.transpose(0, 2, 3, 1).reshape(B * KV, D, T)
     s = substrate.batched_gemm(qb, kb, site="attn.qk", backend=backend,
-                               out_dtype=jnp.float32, interpret=interpret)
+                               out_dtype=jnp.float32, interpret=interpret,
+                               shard=sharding.batched_shard_ctx(B * KV))
     return s.reshape(B, KV, g, S, T)
 
 
@@ -58,7 +60,8 @@ def pv_mix(w, v, *, backend="xla", interpret=None):
     pb = w.reshape(B * KV, g * S, T)
     vb = v.transpose(0, 2, 1, 3).reshape(B * KV, T, D)
     o = substrate.batched_gemm(pb, vb, site="attn.pv", backend=backend,
-                               interpret=interpret)
+                               interpret=interpret,
+                               shard=sharding.batched_shard_ctx(B * KV))
     return o.reshape(B, KV, g, S, D).transpose(0, 3, 1, 2, 4)
 
 

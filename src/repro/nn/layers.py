@@ -6,11 +6,14 @@ axes via the parallel.sharding rules, keyed by their path names.
 """
 from __future__ import annotations
 
+import math
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import substrate
+from repro.parallel import sharding
 
 
 def _dtype(name: str):
@@ -34,7 +37,7 @@ def linear_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32,
 
 
 def linear(p, x, compute_dtype=None, *, site="", backend="xla",
-           interpret=None):
+           interpret=None, shard=None):
     """Dense projection through the GEMM substrate (kernels.substrate).
 
     ``backend`` selects the execution backend; ``site`` labels the GEMM
@@ -42,13 +45,22 @@ def linear(p, x, compute_dtype=None, *, site="", backend="xla",
     the analytic model.  The default backend reproduces ``x @ w`` exactly.
     A bias rides the substrate's fused epilogue (one kernel launch on the
     arrayflex backend, no HBM round-trip between GEMM and add).
+
+    Under an active GEMM mesh (``sharding.use_gemm_mesh`` — the lm entry
+    points activate it from ``ModelConfig.mesh_shape``) the dispatch
+    derives the site's ShardCtx, so the substrate plans on post-partition
+    shapes and each device runs its per-shard GEMM under
+    ``jax.shard_map``.  Pass ``shard`` to override the derivation.
     """
     w = p["w"]
     if compute_dtype is not None:
         w = w.astype(compute_dtype)
         x = x.astype(compute_dtype)
+    if shard is None:
+        shard = sharding.gemm_shard_ctx(site, math.prod(x.shape[:-1]),
+                                        w.shape[0], w.shape[-1])
     return substrate.gemm(x, w, site=site, backend=backend,
-                          bias=p.get("b"), interpret=interpret)
+                          bias=p.get("b"), interpret=interpret, shard=shard)
 
 
 # ---------------------------------------------------------------- norms
@@ -89,9 +101,12 @@ def embed(p, ids, compute_dtype=jnp.bfloat16):
 
 def unembed(p, x, *, backend="xla", interpret=None):
     """Logits against the embedding table (tied) — fp32 accumulation."""
-    return substrate.gemm(x, p["table"].astype(x.dtype).T, site="unembed",
+    w = p["table"].astype(x.dtype).T
+    shard = sharding.gemm_shard_ctx("unembed", math.prod(x.shape[:-1]),
+                                    w.shape[0], w.shape[-1])
+    return substrate.gemm(x, w, site="unembed",
                           backend=backend, out_dtype=jnp.float32,
-                          interpret=interpret)
+                          interpret=interpret, shard=shard)
 
 
 # ---------------------------------------------------------------- rope
@@ -133,11 +148,14 @@ def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
         wg = wg.astype(compute_dtype)
         wu = wu.astype(compute_dtype)
         x = x.astype(compute_dtype)
+    shard = sharding.gemm_shard_ctx("mlp.wi_gate+mlp.wi_up",
+                                    math.prod(x.shape[:-1]),
+                                    wg.shape[0], wg.shape[-1])
     h = substrate.gemm(x, wg, w2=wu, epilogue="swiglu",
                        bias=p["wi_gate"].get("b"),
                        bias2=p["wi_up"].get("b"),
                        site="mlp.wi_gate+mlp.wi_up", backend=backend,
-                       interpret=interpret)
+                       interpret=interpret, shard=shard)
     return linear(p["wo"], h, compute_dtype, site="mlp.wo",
                   backend=backend, interpret=interpret)
 

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 
 from repro.kernels import substrate
 from repro.nn import layers
+from repro.parallel import sharding
 from repro.parallel.sharding import constrain
 
 
@@ -59,7 +60,9 @@ def moe_apply(p, x, *, top_k, capacity_factor=1.25, groups=0,
 
     logits = substrate.gemm(xf.astype(jnp.float32), p["router"],
                             site="moe.router", backend=backend,
-                            interpret=interpret)
+                            interpret=interpret,
+                            shard=sharding.gemm_shard_ctx(
+                                "moe.router", G * Tg, d, E))
     probs = jax.nn.softmax(logits, axis=-1)                  # (G,Tg,E)
     top_vals, top_idx = jax.lax.top_k(probs, top_k)          # (G,Tg,k)
     top_vals = top_vals / jnp.sum(top_vals, axis=-1, keepdims=True)
@@ -99,19 +102,22 @@ def moe_apply(p, x, *, top_k, capacity_factor=1.25, groups=0,
     he = constrain(he, "moe_buf4")
 
     # ---- expert GEMMs (substrate-dispatched; xla keeps the fused einsum,
-    # arrayflex runs each site's E GEMMs in ONE expert-batched launch) ----
+    # arrayflex runs each site's E GEMMs in ONE expert-batched launch;
+    # under the mesh the expert axis shards over 'model' when E % tp == 0
+    # — the _MOE_EP condition — else dispatch stays replicated) ----------
+    esh = sharding.expert_shard_ctx(E)
     wg = p["wi_gate"].astype(compute_dtype)
     wu = p["wi_up"].astype(compute_dtype)
     wo = p["wo"].astype(compute_dtype)
     hg = constrain(substrate.expert_gemm(he, wg, site="moe.wi_gate",
-                                         backend=backend,
+                                         backend=backend, shard=esh,
                                          interpret=interpret), "moe_h4")
     hu = constrain(substrate.expert_gemm(he, wu, site="moe.wi_up",
-                                         backend=backend,
+                                         backend=backend, shard=esh,
                                          interpret=interpret), "moe_h4")
     h = jax.nn.silu(hg) * hu
     hout = constrain(substrate.expert_gemm(h, wo, site="moe.wo",
-                                           backend=backend,
+                                           backend=backend, shard=esh,
                                            interpret=interpret), "moe_buf4")
 
     # ---- combine back (gather token slots, weight, sum over k) ------------

@@ -13,6 +13,7 @@ dim over 'model', so per-chip parameter bytes scale 1/(data*model).
 from __future__ import annotations
 
 import contextvars
+import functools
 from typing import Optional
 
 import jax
@@ -31,12 +32,21 @@ def all_axes(mesh: Mesh):
     return tuple(mesh.axis_names)
 
 
+def mesh_axis_size(mesh, name: str) -> int:
+    """Size of a mesh axis; 1 when the mesh doesn't have it.  A rule may
+    name an axis this mesh lacks (e.g. 'pod' on a single-pod mesh): an
+    absent axis means pure replication.  The single source of truth for
+    every shard-count computation (``_divisible``, the ShardCtx
+    derivations here, and ``kernels.substrate``'s spec signatures)."""
+    return int(dict(mesh.shape).get(name, 1))
+
+
 def _divisible(dim: int, mesh: Mesh, axes) -> bool:
     if axes is None:
         return True
     if isinstance(axes, str):
         axes = (axes,)
-    n = int(np.prod([mesh.shape[a] for a in axes]))
+    n = int(np.prod([mesh_axis_size(mesh, a) for a in axes]))
     return dim % n == 0
 
 
@@ -266,3 +276,171 @@ def constrain(x, name: str):
         return x
     parts = list(spec) + [None] * (x.ndim - len(spec))
     return jax.lax.with_sharding_constraint(x, P(*parts[:x.ndim]))
+
+
+# ---------------------------------------------------------------------------
+# SPMD GEMM-dispatch shard contexts (the sharded substrate)
+#
+# The substrate (kernels.substrate) accepts a ShardCtx per dispatch and runs
+# the per-shard GEMM under jax.shard_map, planning on post-partition shapes.
+# This section derives those contexts from the same logical rules the
+# parameter specs above use: _IN_OUT-style weights are column-parallel
+# (output dim over 'model'), _OUT_IN-style row-parallel (contraction over
+# 'model' + psum at the collapsed-block boundary), and every site may shard
+# its streamed rows over 'data' (FSDP/batch).  The mesh is scoped through a
+# contextvar — model code stays mesh-agnostic and the lm entry points
+# activate it from ModelConfig.mesh_shape.
+
+_GEMM_MESH: contextvars.ContextVar = contextvars.ContextVar(
+    "gemm_mesh", default=None)
+
+
+class use_gemm_mesh:
+    """Activate ``mesh`` for substrate shard-context derivation (``None``
+    deactivates).  Scoped like :class:`use_activation_rules`."""
+
+    def __init__(self, mesh):
+        self.mesh = mesh
+        self._token = None
+
+    def __enter__(self):
+        self._token = _GEMM_MESH.set(self.mesh)
+        return self
+
+    def __exit__(self, *exc):
+        _GEMM_MESH.reset(self._token)
+        return False
+
+
+def active_gemm_mesh():
+    return _GEMM_MESH.get()
+
+
+@functools.lru_cache(maxsize=None)
+def _host_mesh(data: int, model: int):
+    from repro.launch.mesh import make_host_mesh
+    return make_host_mesh(data, model, strict=True)
+
+
+def mesh_from_config(cfg):
+    """The (data, model) host mesh ``cfg.mesh_shape`` declares, or None.
+
+    Strict: raises (with the ``XLA_FLAGS`` fan-out hint) when the host has
+    fewer devices than the mesh needs — sharded plans for a silently
+    clamped mesh would be exactly the planned-vs-executed shape divergence
+    this substrate exists to close.  ``gemm_sharding="none"`` keeps
+    replicated dispatch regardless of ``mesh_shape``.
+    """
+    shape = tuple(getattr(cfg, "mesh_shape", ()) or ())
+    mode = getattr(cfg, "gemm_sharding", "auto")
+    if mode not in ("auto", "none"):
+        raise ValueError(f"unknown gemm_sharding {mode!r}; use auto|none")
+    if not shape or mode == "none":
+        return None
+    if len(shape) != 2:
+        raise ValueError(f"mesh_shape must be (data, model), got {shape}")
+    return _host_mesh(int(shape[0]), int(shape[1]))
+
+
+def gemm_mesh_scope(cfg):
+    """:class:`use_gemm_mesh` for a ModelConfig — the lm entry points wrap
+    themselves in this, so every consumer (tests, the serving engine,
+    benches) gets sharded dispatch from config alone."""
+    return use_gemm_mesh(mesh_from_config(cfg))
+
+
+# dispatch-site (planner.model_gemms label) -> TP decomposition, mirroring
+# the parameter rules: _IN_OUT weights column-parallel, _OUT_IN row-parallel
+_COL_SITES = {"attn.wq", "attn.wk", "attn.wv", "xattn.wq", "xattn.kv",
+              "mlp.wi_gate", "mlp.wi_up", "mlp.wi",
+              "mamba.z", "mamba.xbc", "mamba.dt", "unembed", "lm_head"}
+_ROW_SITES = {"attn.wo", "xattn.wo", "mlp.wo", "mamba.out"}
+
+
+def gemm_shard_ctx(site: str, rows: int, K: int, N_out: int, mesh=None):
+    """ShardCtx for a 2-D substrate GEMM dispatched at ``site`` (or None).
+
+    Column-parallel sites shard ``N_out`` over 'model'; row-parallel sites
+    shard the contraction ``K`` over 'model' (psum at the collapsed-block
+    boundary); every site shards the streamed ``rows`` over 'data'.  Any
+    axis that does not divide its dim falls back to replication (the
+    :func:`_maybe` rule); all-replicated returns None (unsharded
+    dispatch).  A fused label like ``"mlp.wi_gate+mlp.wi_up"`` takes its
+    kind from the first component.
+    """
+    mesh = mesh if mesh is not None else _GEMM_MESH.get()
+    if mesh is None or not site:
+        return None
+    from repro.kernels.substrate import ShardCtx
+    head = site.split("+")[0]
+    kind = ("col" if head in _COL_SITES
+            else "row" if head in _ROW_SITES else "rep")
+    dsize = mesh_axis_size(mesh, "data")
+    dax = "data" if dsize > 1 and rows and rows % dsize == 0 else None
+    tp = mesh_axis_size(mesh, "model")
+    if kind == "col" and tp > 1 and N_out % tp == 0:
+        return ShardCtx(mesh, P(dax, None), P(None, "model"),
+                        P(dax, "model"))
+    if kind == "row" and tp > 1 and K % tp == 0:
+        return ShardCtx(mesh, P(dax, "model"), P("model", None),
+                        P(dax, None), reduce_axes=("model",))
+    if dax is None:
+        return None
+    return ShardCtx(mesh, P(dax, None), P(None, None), P(dax, None))
+
+
+def batched_shard_count(batch: int, dp: int, tp: int) -> int:
+    """Shard count of a batched dispatch's leading axis: the
+    ('data','model') -> 'model' -> 'data' divisibility chain.  The ONE
+    definition shared by :func:`batched_shard_ctx` (runtime dispatch) and
+    ``core.planner._postshard`` (analytic table), so the two can never
+    drift: both must divide the same runtime batch (B*KV for attention)
+    by the same factor."""
+    if dp > 1 and tp > 1 and batch % (dp * tp) == 0:
+        return dp * tp
+    if tp > 1 and batch % tp == 0:
+        return tp
+    if dp > 1 and batch % dp == 0:
+        return dp
+    return 1
+
+
+def batched_shard_ctx(batch: int, mesh=None):
+    """ShardCtx splitting the leading batch dim of a batched GEMM (the
+    attention QK/PV products' ``B*KV`` head axis) over the mesh: prefers
+    the full ('data', 'model') split, then 'model' (TP over heads), then
+    'data'.  None when nothing divides.  Batch sharding never changes the
+    per-element plan shape — only which device runs which heads."""
+    mesh = mesh if mesh is not None else _GEMM_MESH.get()
+    if mesh is None:
+        return None
+    from repro.kernels.substrate import ShardCtx
+    d, m = mesh_axis_size(mesh, "data"), mesh_axis_size(mesh, "model")
+    s = batched_shard_count(batch, d, m)
+    if s == 1:
+        return None
+    if d > 1 and m > 1 and s == d * m:
+        ax = ("data", "model")
+    elif m > 1 and s == m:
+        ax = "model"
+    else:
+        ax = "data"
+    spec = P(ax, None, None)
+    return ShardCtx(mesh, spec, spec, spec)
+
+
+def expert_shard_ctx(num_experts: int, mesh=None):
+    """Expert-parallel ShardCtx for ``substrate.expert_gemm``: the expert
+    axis splits over 'model' when E divides the TP degree — the same
+    ``E % tp == 0`` condition as the ``_MOE_EP`` parameter toggle — else
+    None (replicated dispatch, the TP-fallback expert sharding)."""
+    mesh = mesh if mesh is not None else _GEMM_MESH.get()
+    if mesh is None:
+        return None
+    tp = mesh_axis_size(mesh, "model")
+    if tp <= 1 or num_experts % tp:
+        return None
+    from repro.kernels.substrate import ShardCtx
+    return ShardCtx(mesh, P(None, "model", None, None),
+                    P("model", None, None),
+                    P(None, "model", None, None))

@@ -46,6 +46,7 @@ import numpy as np
 from repro.configs.base import ModelConfig
 from repro.core import planner
 from repro.models import lm
+from repro.parallel import sharding
 
 PREFILL_CHUNK_CHOICES = (16, 32, 64, 128, 256, 512, 1024, 2048)
 
@@ -124,6 +125,12 @@ class ServingEngine:
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
+        # SPMD serving: cfg.mesh_shape activates sharded GEMM dispatch
+        # inside the jit'd lm steps (the lm entry points scope the mesh
+        # themselves).  Resolve the mesh eagerly so a config that needs
+        # more devices than the host has fails at engine construction
+        # with the XLA_FLAGS hint, not mid-serve.
+        self.mesh = sharding.mesh_from_config(cfg)
         B, S = serve_cfg.max_batch, serve_cfg.max_seq
         self.cache = lm.init_cache(cfg, B, S)
         self.slots = [Slot(i) for i in range(B)]
