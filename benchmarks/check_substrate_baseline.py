@@ -16,6 +16,17 @@ What is gated (and why these fields):
   of two timings on the same machine is stable enough to gate on, unlike
   absolute CPU wall times.
 * ``equivalence.logits_max_abs_diff`` — must stay within fp32 tolerance.
+* ``int8`` section — the weight-quantization memo hit rate must be
+  exactly 1.0 after warmup (a per-dispatch requantization sneaking back
+  in is a regression), the int8 dispatch counts must match exactly (the
+  fused/batched launch structure survives quantization), the int8
+  logits must stay within the documented 0.06 tolerance of fp32
+  arrayflex, and ``k_shift_sites`` (how many full-decode-cell sites the
+  int8 datapath replans to a different k) must match exactly — the
+  planner finding the shift is the point of the int8 timing model.  The
+  int8 wall-clock ratio is reported but NOT gated (the CPU grid
+  interpreter pays the dequant as extra interpreted ops; the Eq.(6')
+  columns carry the calibrated win).
 
 The expert-batching wall-time ratio is reported but NOT gated: the CPU
 grid interpreter serializes the batched launch (see substrate_bench), so
@@ -97,6 +108,39 @@ def check(current: dict, baseline: dict, tolerance: float):
     diff = current["equivalence"]["logits_max_abs_diff"]
     if diff > 1e-3:
         errors.append(f"backend logits diverged: {diff}")
+
+    # --- int8: memo hit rate, dispatch structure, tolerance, k shift -----
+    i8b = baseline.get("int8")
+    i8c = current.get("int8")
+    if i8b:
+        if not i8c:
+            errors.append("int8 section missing from current report")
+        else:
+            rate = i8c["quantize_cache"]["hit_rate_after_warmup"]
+            if rate != 1.0:
+                errors.append(
+                    f"int8 quantize-cache hit rate after warmup is {rate}, "
+                    f"expected 1.0 (per-dispatch requantization)")
+            if i8c["dispatch_counts"] != i8b["dispatch_counts"]:
+                errors.append(
+                    f"int8 dispatch_counts changed: "
+                    f"{i8c['dispatch_counts']} != baseline "
+                    f"{i8b['dispatch_counts']}")
+            d8 = i8c["equivalence"]["logits_max_abs_diff_vs_fp32"]
+            if d8 > i8c["equivalence"]["documented_atol"]:
+                errors.append(f"int8 logits beyond documented tolerance: "
+                              f"{d8}")
+            if i8c["k_shift_sites"] != i8b["k_shift_sites"]:
+                errors.append(
+                    f"int8 k_shift_sites changed: {i8c['k_shift_sites']} "
+                    f"!= baseline {i8b['k_shift_sites']}")
+            c_sh, b_sh = i8c.get("sharded"), i8b.get("sharded")
+            if c_sh and b_sh and (c_sh["dispatch_counts"]
+                                  != b_sh["dispatch_counts"]):
+                errors.append(
+                    f"int8 sharded dispatch_counts changed: "
+                    f"{c_sh['dispatch_counts']} != baseline "
+                    f"{b_sh['dispatch_counts']}")
     return errors
 
 
@@ -116,12 +160,18 @@ def main(argv=None):
         for e in errors:
             print(f"REGRESSION: {e}")
         return 1
+    i8 = current.get("int8") or {}
+    i8_note = (f", int8 quantize hit rate "
+               f"{i8['quantize_cache']['hit_rate_after_warmup']:.0%}, "
+               f"{i8['k_shift_sites']} k-shift sites"
+               if i8 else "")
     print(f"substrate baseline check OK: "
           f"moe launches {current['moe_expert_launches']['per_moe_layer_unrolled']}"
           f"->{current['moe_expert_launches']['per_moe_layer_now']}/layer, "
           f"fused swiglu {_fused_speedup(current):.2f}x "
           f"(baseline {_fused_speedup(baseline):.2f}x), "
-          f"logits diff {current['equivalence']['logits_max_abs_diff']:.1e}")
+          f"logits diff {current['equivalence']['logits_max_abs_diff']:.1e}"
+          f"{i8_note}")
     return 0
 
 

@@ -29,6 +29,13 @@ per-shard standalone dispatch — predicted vs measured time *per shard*.
 Its dispatch counts (one launch per site, sharded or not) are gated
 exactly against the baseline.
 
+New in the quantized substrate: the ``int8`` section (see
+``_int8_section``) gates the weight-quantization memo hit rate (100%
+after warmup — no per-dispatch requantization), the int8-vs-fp32 logits
+tolerance, the int8 dispatch structure, and the fp32-vs-int8 analytic
+k table (``k_shift_sites``: where the int8 datapath re-picks the
+collapse depth).
+
 CPU wall-times are structural (the Pallas kernel runs in interpret mode);
 the Eq.(6) columns are the hardware-calibrated quantities.
 
@@ -261,23 +268,25 @@ def _dispatch_counts():
     return out, launches
 
 
-def _sharded_section(iters):
+def _sharded_section(iters, backend="arrayflex"):
     """Post-partition plans + per-shard dispatch counts of a traced
     forward under an FSDP=2 x TP=2 host mesh.
 
     Per site: logical vs per-shard (M, N, T), the shard signature, the
     per-shard Eq.(6') cycle count / prediction, and the measured time of
     the per-shard standalone dispatch — the GEMM each device actually
-    executes, epilogue replayed — so predicted vs measured joins per
-    shard.  The dispatch counts are gated exactly by
-    check_substrate_baseline.py: sharded dispatch stays ONE launch per
-    site.  Returns None on hosts with fewer than 4 devices (the
-    multi-device CI job provides them via XLA_FLAGS).
+    executes, epilogue replayed (with int8 codes + scales when
+    ``backend`` quantizes) — so predicted vs measured joins per shard.
+    The dispatch counts are gated exactly by check_substrate_baseline.py:
+    sharded dispatch stays ONE launch per site.  Returns None on hosts
+    with fewer than 4 devices (the multi-device CI job provides them via
+    XLA_FLAGS).
     """
     if len(jax.devices()) < 4:
         return None
     import dataclasses
-    cfg = dataclasses.replace(_cfg("arrayflex"), mesh_shape=(2, 2))
+    quant = substrate._BACKEND_INFO[backend].quantize
+    cfg = dataclasses.replace(_cfg(backend), mesh_shape=(2, 2))
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     toks = jnp.ones((2, 8), jnp.int32)
     substrate.clear_plan_cache()
@@ -311,8 +320,14 @@ def _sharded_section(iters):
         b = (jnp.asarray(rng.randn(plan.M_shard), jnp.float32)
              if ep.bias and not reduce else None)
         act = "none" if reduce else ep.activation
+        ws = w2s = None
+        if quant and plan.precision == "int8":
+            w, ws = substrate._quantize(w)
+            if w2 is not None:
+                w2, w2s = substrate._quantize(w2)
         f = jax.jit(lambda a, k=plan.k, a_=act: ops.arrayflex_matmul(
-            a, w, w2=w2, bias=b, activation=a_, k_collapse=k))
+            a, w, w2=w2, bias=b, w_scale=ws, w2_scale=w2s,
+            activation=a_, k_collapse=k))
         rows.append({
             "site": site,
             "logical_MNT": [plan.M, plan.N, plan.T],
@@ -326,6 +341,115 @@ def _sharded_section(iters):
     substrate.clear_plan_cache()
     return {"mesh": {"data": 2, "model": 2}, "dispatch_counts": counts,
             "sites": rows}
+
+
+def _int8_section(params, toks, iters, fused_iters):
+    """Quantized-backend section (gated by check_substrate_baseline.py):
+
+    * ``quantize_cache`` — eager substrate dispatches against persistent
+      weights must hit the per-weight-identity memo on every lookup after
+      the first (hit_rate_after_warmup == 1.0: the hot path never
+      re-quantizes; gated exactly);
+    * ``fused_swiglu`` — the one-launch dual-GEMM swiglu under int8 vs
+      fp32 arrayflex (planned k for each; CPU-interpret wall times are
+      structural — the dequant runs extra interpreter ops — while the
+      Eq.(6') columns carry the hardware-calibrated int8 win);
+    * ``equivalence`` — int8 forward logits vs the fp32 arrayflex
+      backend within the documented tolerance (0.06 on the reduced dense
+      config; gated);
+    * ``dispatch_counts`` — one launch per site under int8, fused and
+      expert-batched structure intact (gated exactly);
+    * ``analytic_decode_32k`` — fp32-vs-int8 plans side by side for the
+      FULL qwen2-0.5b decode cell (planner.precision_table pricing);
+      ``k_shift_sites`` counts sites whose best_k moved (gated exactly —
+      the per-layer reconfiguration the quantized datapath buys);
+    * ``sharded`` — predicted vs measured *per-shard* int8 plans under
+      FSDP=2 x TP=2 (>= 4 devices, else null; dispatch counts gated).
+    """
+    rng = np.random.RandomState(4)
+    T, K, N = 256, 512, 512
+    x = jnp.asarray(rng.randn(T, K), jnp.float32)
+    wg = jnp.asarray(rng.randn(K, N), jnp.float32)
+    wu = jnp.asarray(rng.randn(K, N), jnp.float32)
+
+    # -- memo hit rate: every lookup after the first per weight must hit
+    substrate.clear_quant_cache()
+    n_disp = 12
+    for _ in range(n_disp):
+        substrate.gemm(x, wg, w2=wu, epilogue="swiglu",
+                       backend="arrayflex_int8")
+    st = substrate.quantize_cache_info()
+    weights = 2
+    lookups = st["hits"] + st["misses"]
+    assert st["misses"] == weights, f"re-quantized on the hot path: {st}"
+    quant_cache = {"dispatches": n_disp, "weights": weights,
+                   "lookups": lookups, "misses": st["misses"],
+                   "hit_rate_after_warmup":
+                       round(st["hits"] / (lookups - weights), 4)}
+
+    # -- fused swiglu: int8 vs fp32 arrayflex at the planned k each
+    ep = substrate.Epilogue(kind="swiglu")
+    k_fp = substrate.plan_gemm(N, K, T, "arrayflex", ep).k
+    k_i8 = substrate.plan_gemm(N, K, T, "arrayflex_int8", ep).k
+    t_us = {}
+    for backend in ("arrayflex", "arrayflex_int8"):
+        f = jax.jit(lambda a, be=backend: substrate.gemm(
+            a, wg, w2=wu, epilogue="swiglu", backend=be))
+        t_us[backend] = _time_min(f, x, iters=fused_iters, repeats=3)
+    fused_swiglu = {
+        "T": T, "K": K, "N": N, "k_fp32": k_fp, "k_int8": k_i8,
+        "fp32_us": round(t_us["arrayflex"], 1),
+        "int8_us": round(t_us["arrayflex_int8"], 1),
+        "wall_speedup_vs_fp32": round(
+            t_us["arrayflex"] / t_us["arrayflex_int8"], 3),
+        "eq6_speedup_vs_fp32": round(
+            substrate.plan_gemm(N, K, T, "arrayflex", ep).t_pred_ps
+            / substrate.plan_gemm(N, K, T, "arrayflex_int8", ep).t_pred_ps,
+            3)}
+
+    # -- model equivalence at the documented tolerance
+    fwd_fp = jax.jit(lambda p, b: lm.forward(_cfg("arrayflex"), p, b)[0])
+    fwd_i8 = jax.jit(lambda p, b: lm.forward(_cfg("arrayflex_int8"),
+                                             p, b)[0])
+    diff = float(np.max(np.abs(
+        np.float32(fwd_i8(params, {"tokens": toks}))
+        - np.float32(fwd_fp(params, {"tokens": toks})))))
+    assert diff < 0.06, f"int8 logits beyond documented tolerance: {diff}"
+
+    # -- dispatch structure under int8 (one launch per site)
+    counts = {}
+    for arch in ("qwen2-0.5b", "qwen3-moe-30b-a3b"):
+        cfg = reduced(get_config(arch), compute_dtype="float32",
+                      param_dtype="float32", gemm_backend="arrayflex_int8")
+        p = lm.init_params(cfg, jax.random.PRNGKey(0))
+        substrate.clear_plan_cache()
+        jax.eval_shape(lambda pp, b, c=cfg: lm.forward(c, pp, b), p,
+                       {"tokens": jnp.ones((2, 8), jnp.int32)})
+        counts[arch] = dict(sorted(substrate.DISPATCH_COUNTS.items()))
+    substrate.clear_plan_cache()
+
+    # -- analytic fp32-vs-int8 plans for the full decode cell
+    rows = []
+    for g in planner.model_gemms(get_config("qwen2-0.5b"), DECODE_32K):
+        pf = planner.plan_gemm_precision(g, 128, 128, "fp32")
+        p8 = planner.plan_gemm_precision(g, 128, 128, "int8")
+        rows.append({"site": g.name, "M": g.M, "N": g.N, "T": g.T,
+                     "k_fp32": pf.k, "k_int8": p8.k,
+                     "fp32_us": round(pf.t_abs_ps / g.count / 1e6, 4),
+                     "int8_us": round(p8.t_abs_ps / g.count / 1e6, 4),
+                     "int8_speedup": round(pf.t_abs_ps / p8.t_abs_ps, 3)})
+    k_shift = sum(r["k_fp32"] != r["k_int8"] for r in rows)
+
+    return {
+        "quantize_cache": quant_cache,
+        "fused_swiglu": fused_swiglu,
+        "equivalence": {"logits_max_abs_diff_vs_fp32": diff,
+                        "documented_atol": 0.06},
+        "dispatch_counts": counts,
+        "analytic_decode_32k": rows,
+        "k_shift_sites": k_shift,
+        "sharded": _sharded_section(iters, backend="arrayflex_int8"),
+    }
 
 
 def _analytic_full_rows():
@@ -366,6 +490,7 @@ def substrate_report(smoke: bool = False):
     # the field must mean the same thing on single- and multi-device hosts
     plan_cache = dict(substrate.plan_cache_info()._asdict())
     sharded = _sharded_section(iters)
+    int8 = _int8_section(params, toks, iters, fused_iters)
 
     report = {
         "config": {"arch": "qwen2-0.5b (reduced)", "batch": B, "seq": S,
@@ -376,6 +501,7 @@ def substrate_report(smoke: bool = False):
         "dispatch_counts": dispatch_counts,
         "moe_expert_launches": moe_launches,
         "sharded": sharded,
+        "int8": int8,
         "equivalence": {"logits_max_abs_diff": max_diff,
                         "reference_fallbacks": 0},
         "plan_cache": plan_cache,
@@ -392,7 +518,11 @@ def substrate_report(smoke: bool = False):
                f"fused swiglu {af_swiglu['speedup']:.2f}x, "
                f"moe launches {moe_launches['per_moe_layer_unrolled']}->"
                f"{moe_launches['per_moe_layer_now']}/layer"
-               f"{sh_note} -> {OUT_JSON}")
+               f"{sh_note}, int8: quantize hit rate "
+               f"{int8['quantize_cache']['hit_rate_after_warmup']:.0%}, "
+               f"{int8['k_shift_sites']} k-shift sites, eq6 swiglu "
+               f"{int8['fused_swiglu']['eq6_speedup_vs_fp32']:.2f}x "
+               f"-> {OUT_JSON}")
     return site_rows, derived
 
 

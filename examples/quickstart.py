@@ -6,6 +6,9 @@
 3. Plan + execute a GEMM through the Pallas kernel with the planner's k.
 4. Run a whole transformer with every GEMM dispatched through the
    ArrayFlex substrate (gemm_backend="arrayflex").
+5. Quantize to int8 weights (gemm_backend="arrayflex_int8"): the int8
+   datapath re-picks the collapse depth per layer and the weight memo
+   quantizes each weight exactly once.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -68,6 +71,26 @@ def main():
     for site, p in sorted(substrate.SITE_PLANS.items()):
         print(f"    {site:12s} M={p.M:4d} N={p.N:4d} T={p.T:4d} -> k={p.k} "
               f"(predicted saving {100 * p.saving:4.1f}%)")
+
+    # -- 5. quantized int8 backend ---------------------------------------
+    print("\n=== Int8 weights, fp32 accumulation, int8-planned k ===")
+    cfg_i8 = reduced(get_config("qwen2-0.5b"), compute_dtype="float32",
+                     param_dtype="float32", gemm_backend="arrayflex_int8")
+    substrate.clear_quant_cache()
+    l8, _, _ = lm.forward(cfg_i8, params, {"tokens": toks})
+    print(f"  fp32-arrayflex vs int8 logits max diff "
+          f"{float(jnp.max(jnp.abs(la - l8))):.3e} "
+          f"(documented tolerance 0.06: quantization noise only)")
+    print(f"  weight-quantize memo: {substrate.quantize_cache_info()}")
+    # the per-layer reconfiguration the paper argues for: the SAME shape
+    # plans a different collapse depth per datapath precision
+    M, N, T = 896, 4864, 512        # qwen2-0.5b mlp.wo, 512-row decode
+    k_fp = ops.plan_collapse(M, N, T)
+    k_i8 = ops.plan_collapse(M, N, T, precision="int8")
+    pf = substrate.plan_gemm(M, N, T, "arrayflex")
+    p8 = substrate.plan_gemm(M, N, T, "arrayflex_int8")
+    print(f"  mlp.wo (M={M}, N={N}, T={T}): fp32 k={k_fp}, int8 k={k_i8} "
+          f"-> int8 Eq.(6') speedup {pf.t_pred_ps / p8.t_pred_ps:.2f}x")
 
 
 if __name__ == "__main__":

@@ -97,7 +97,12 @@ class ModelConfig:
     # Execution backend every model GEMM dispatches through
     # (kernels.substrate registry): "xla" (plain x @ w, the default),
     # "arrayflex" (Pallas K-collapse kernel at the planner's Eq.(6) k),
-    # "ref" (fp32 oracle).
+    # "arrayflex_int8" (same kernel on memoized int8 weights +
+    # per-output-channel fp32 scales, fp32 accumulation, k planned with
+    # the int8 datapath timing), "ref" (fp32 oracle).  Validated against
+    # substrate.backends() at the execution entry points (lm.forward /
+    # decode_step / prefill_step, the serving engine, serve.py) so an
+    # unknown name fails with the registered list, not deep in dispatch.
     gemm_backend: str = "xla"
     # Pallas interpret-mode override threaded to every kernel launch.
     # None resolves via the REPRO_PALLAS_INTERPRET env var, else the

@@ -72,6 +72,37 @@ def plan_gemm(g: GEMM, R: int, C: int,
     )
 
 
+def plan_gemm_precision(g: GEMM, R: int, C: int,
+                        precision: str = "fp32") -> LayerPlan:
+    """:func:`plan_gemm` priced for a datapath precision.
+
+    ``int8`` uses ``timing.IntTimingParams`` (Eq. 5'/7 with the int8
+    d_mul/d_CSA) and adds one dequant boundary op per contraction —
+    exactly the pricing ``kernels.substrate`` applies for the
+    ``arrayflex_int8`` backend, so the analytic table and the executed
+    plan pick the same k."""
+    tp = timing.timing_for(precision)
+    if precision == "int8":
+        g = dataclasses.replace(g, epilogue_ops=g.epilogue_ops
+                                + g.contractions)
+    return plan_gemm(g, R, C, tp)
+
+
+def precision_table(cfg: "ModelConfig", shape: "ShapeConfig",
+                    R: int = 128, C: int = 128,
+                    precisions=("fp32", "int8")) -> list:
+    """Side-by-side per-GEMM plans across datapath precisions for one
+    (model, shape) cell: every ``model_gemms`` entry with one
+    :class:`LayerPlan` per precision.  This is where the quantized
+    backend's planning story is visible analytically — the int8 datapath
+    legitimately picks a different (usually deeper) k at the same shape,
+    the per-layer configurability the paper argues for."""
+    return [{"gemm": g,
+             "plans": {p: plan_gemm_precision(g, R, C, p)
+                       for p in precisions}}
+            for g in model_gemms(cfg, shape)]
+
+
 def plan_network(gemms: List[GEMM], R: int, C: int,
                  tp: TimingParams = DEFAULT_TIMING,
                  pp=None) -> dict:

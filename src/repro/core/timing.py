@@ -67,6 +67,65 @@ class TimingParams:
 DEFAULT_TIMING = TimingParams()
 
 
+@dataclass(frozen=True)
+class IntTimingParams(TimingParams):
+    """Eq.(5)/(7) coefficients for an **int8-weight** ArrayFlex datapath
+    (fp32 accumulation, per-output-channel dequant at the boundary).
+
+    What changes vs the fp32 fit and why:
+
+    * ``d_base_ps`` (= d_FF + d_mul + d_add) shrinks *moderately*: the
+      8x8 multiplier is far smaller than the fp32 one, but d_FF and the
+      accumulate add stay — accumulation is fp32 by contract, so d_add is
+      still the fp32 adder.  492.6 -> 372.6 ps (the fitted fp32 d_mul
+      shrunk by ~120 ps).
+    * ``d_inc_ps`` (= d_CSA + 2 d_mux, the per-k collapse cost) shrinks
+      *a lot*: the transparent stages' carry-save chain carries 8-bit
+      partial products instead of 32-bit ones, so the CSA stage is a
+      single narrow full-adder row and the bypass muxes switch a narrow
+      bus.  54.35 -> 15.0 ps.
+
+    Because d_base/d_inc RISES (9.1 -> 24.8), Eq.(7)'s k_hat rises too:
+    the int8 datapath amortizes its (cheap) collapse stages over more
+    merged pipeline levels, so the Eq.(6') argmin moves toward DEEPER
+    collapse than the fp32 datapath picks at the same (M, N, T) — e.g.
+    T=512 plans k=2 under fp32 silicon and k=4 here.  There is no
+    published int8 silicon to tabulate, so ``mode="linear"`` prices
+    every k from the Eq.(5) fit.
+
+    The conventional (fixed-pipeline) int8 SA comparator clocks at
+    ``conventional_period_ps = 357.1`` (2.8 GHz): the k=1 linear period
+    (387.6 ps) scaled by the same mux-overhead ratio the fp32 numbers
+    exhibit (500 / 546.95).
+
+    The per-output-channel dequant multiply is NOT part of these
+    coefficients: it resolves at the carry-propagate boundary exactly
+    like a fused epilogue op, so the substrate prices it as one extra
+    Eq.(5') boundary op per contraction (``d_epilogue_ps``).
+    """
+
+    d_base_ps: float = 372.6     # d_FF + d_mul(int8) + d_add(fp32 accum)
+    d_inc_ps: float = 15.0       # d_CSA(8-bit chain) + 2*d_mux(narrow bus)
+    conventional_period_ps: float = 357.1   # 2.8 GHz fixed-pipeline int8 SA
+    freq_table_ghz: tuple = ()
+    mode: str = "linear"         # no published int8 silicon: use the fit
+
+
+INT8_TIMING = IntTimingParams()
+
+# precision name -> the TimingParams pricing that datapath's Eq.(5)-(7)
+PRECISION_TIMING = {"fp32": DEFAULT_TIMING, "int8": INT8_TIMING}
+
+
+def timing_for(precision: str) -> TimingParams:
+    """The Eq.(5)-(7) coefficient set for a datapath precision."""
+    try:
+        return PRECISION_TIMING[precision]
+    except KeyError:
+        raise ValueError(f"unknown datapath precision {precision!r}; "
+                         f"supported: {sorted(PRECISION_TIMING)}")
+
+
 def latency_cycles_conventional(R: int, C: int, T: int) -> int:
     """Eq.(1)."""
     return 2 * R + C + T - 2

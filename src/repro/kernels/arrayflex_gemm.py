@@ -21,6 +21,14 @@ resolved fp32 accumulator *before* the single cast/store, so the
 activation never round-trips through HBM.  Eq.(5') in core.timing prices
 the fused vector ops into the per-step period and ``best_k`` re-picks k.
 
+The boundary also hosts **int8 dequantization** (``w_scale``/``w2_scale``):
+the contraction streams raw int8 weight codes into the fp32 accumulator
+and the per-output-channel scale multiply resolves with the
+carry-propagate — per-column scales factor out of the K sum, so the
+deferred dequant is exact and rides the same boundary ALU the epilogue
+does (one extra Eq.(5') op per contraction, priced by
+``timing.IntTimingParams``'s int8 datapath coefficients).
+
 ``arrayflex_expert_gemm`` runs a whole stack of per-expert GEMMs in ONE
 ``pallas_call`` whose *leading grid dimension is the expert axis* — the
 MoE layer's 3E per-layer kernel launches become 3.
@@ -78,13 +86,23 @@ def apply_epilogue(y, y2=None, bias=None, bias2=None, activation="none"):
 # single-GEMM kernel (optionally dual-contraction) with fused epilogue
 
 def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
-            dual: bool, has_b: bool, has_b2: bool):
-    """refs = x, w, [w2], [b], [b2], o, acc, [acc2] (inputs, outputs,
-    scratch — in pallas_call order)."""
+            dual: bool, quant: bool, has_b: bool, has_b2: bool):
+    """refs = x, w, [w2], [scale], [scale2], [b], [b2], o, acc, [acc2]
+    (inputs, outputs, scratch — in pallas_call order).
+
+    ``quant``: w (and w2) hold int8 codes with per-output-channel fp32
+    scales; the contraction accumulates the raw codes and the dequant
+    multiply resolves at the carry-propagate ``_store`` — the per-column
+    scale factors out of the K sum, so deferring it is exact and the
+    scale rides the same boundary ALU the epilogue does."""
     i = 2
     x_ref, w_ref = refs[0], refs[1]
     w2_ref = refs[i] if dual else None
     i += dual
+    s_ref = refs[i] if quant else None
+    i += quant
+    s2_ref = refs[i] if (quant and dual) else None
+    i += quant and dual
     b_ref = refs[i] if has_b else None
     i += has_b
     b2_ref = refs[i] if has_b2 else None
@@ -102,6 +120,10 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
     x = x_ref[...]                     # (bm, bk * k)
     w = w_ref[...]                     # (bk * k, bn)
     w2 = w2_ref[...] if dual else None
+    if quant:                          # int8 codes ride the MXU in x's dtype
+        w = w.astype(x.dtype)          # (exact: |code| <= 127)
+        if dual:
+            w2 = w2.astype(x.dtype)
     bk = x.shape[1] // k_collapse
     acc = acc_ref[...]
     acc2 = acc2_ref[...] if dual else None
@@ -122,9 +144,14 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
 
     @pl.when(pl.program_id(2) == n_steps - 1)
     def _store():                      # carry-propagate: resolve the fp32
-        out = apply_epilogue(          # accumulator(s), fuse the epilogue,
-            acc_ref[...],              # cast and store ONCE
-            acc2_ref[...] if dual else None,
+        y = acc_ref[...]               # accumulator(s), dequant, fuse the
+        y2 = acc2_ref[...] if dual else None   # epilogue, cast/store ONCE
+        if quant:
+            y = y * s_ref[...].astype(jnp.float32)
+            if dual:
+                y2 = y2 * s2_ref[...].astype(jnp.float32)
+        out = apply_epilogue(
+            y, y2,
             b_ref[...].astype(jnp.float32) if has_b else None,
             b2_ref[...].astype(jnp.float32) if has_b2 else None,
             activation)
@@ -132,6 +159,7 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
 
 
 def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
+                   w_scale=None, w2_scale=None,
                    activation: str = "none", bm: int = 128, bn: int = 128,
                    bk: int = 128, k_collapse: int = 1, out_dtype=None,
                    interpret=None):
@@ -145,6 +173,14 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     ``bias2`` are (N,) vectors added to the fp32 accumulator(s) before the
     activation/gate.  All epilogue math happens on the resolved fp32
     accumulator; the output is cast exactly once.
+
+    ``w_scale`` (an (N,) fp32 vector) enables the **int8-weight** path:
+    ``w`` then holds int8 codes and the effective weight is
+    ``w * w_scale`` per output channel.  The contraction accumulates raw
+    codes in fp32 and the dequant multiply resolves at the carry-propagate
+    store, *before* bias/activation — per-column scales factor out of the
+    K sum, so deferring the dequant to the boundary is exact.  A dual
+    contraction takes its own ``w2_scale``.
 
     Divisibility contract:
       * ``bm`` (clamped to M) must divide M and ``bn`` (clamped to N) must
@@ -174,7 +210,13 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
         raise ValueError(f"w2 {w2.shape} must match w {w.shape}")
     if bias2 is not None and not dual:
         raise ValueError("bias2 requires w2 (the dual contraction)")
-    for name, b in (("bias", bias), ("bias2", bias2)):
+    quant = w_scale is not None
+    if w2_scale is not None and not (quant and dual):
+        raise ValueError("w2_scale requires both w_scale and w2")
+    if quant and dual and w2_scale is None:
+        raise ValueError("int8 dual contraction needs w2_scale for w2")
+    for name, b in (("bias", bias), ("bias2", bias2),
+                    ("w_scale", w_scale), ("w2_scale", w2_scale)):
         if b is not None and b.shape != (N,):
             raise ValueError(f"{name} must be ({N},), got {b.shape}")
     out_dtype = out_dtype or x.dtype
@@ -205,7 +247,8 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     interpret = resolve_interpret(interpret)
     kernel = functools.partial(_kernel, k_collapse=k_collapse,
                                n_steps=n_steps, activation=activation,
-                               dual=dual, has_b=bias is not None,
+                               dual=dual, quant=quant,
+                               has_b=bias is not None,
                                has_b2=bias2 is not None)
     operands = [x, w]
     in_specs = [
@@ -215,7 +258,7 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     if dual:
         operands.append(w2)
         in_specs.append(pl.BlockSpec((kk, bn), lambda i, j, s: (s, j)))
-    for b in (bias, bias2):
+    for b in (w_scale, w2_scale, bias, bias2):
         if b is not None:
             operands.append(b.reshape(1, N))
             in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
@@ -236,14 +279,22 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
 # ---------------------------------------------------------------------------
 # expert-batched kernel: the expert axis is the leading grid dimension
 
-def _expert_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_collapse: int,
-                   n_steps: int):
+def _expert_kernel(*refs, k_collapse: int, n_steps: int, quant: bool):
+    """refs = x, w, [scale], o, acc.  ``quant``: int8 per-expert codes
+    with per-(expert, output-channel) scales dequantized at the store."""
+    x_ref, w_ref = refs[0], refs[1]
+    s_ref = refs[2] if quant else None
+    o_ref = refs[2 + quant]
+    acc_ref = refs[3 + quant]
+
     @pl.when(pl.program_id(3) == 0)
     def _init():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
     x = x_ref[0]                       # (bm, bk * k)  — this expert's rows
     w = w_ref[0]                       # (bk * k, bn)  — this expert's weights
+    if quant:
+        w = w.astype(x.dtype)          # exact: |code| <= 127
     bk = x.shape[1] // k_collapse
     acc = acc_ref[...]
     for i in range(k_collapse):
@@ -253,14 +304,22 @@ def _expert_kernel(x_ref, w_ref, o_ref, acc_ref, *, k_collapse: int,
     acc_ref[...] = acc
 
     @pl.when(pl.program_id(3) == n_steps - 1)
-    def _store():                      # carry-propagate: resolve + cast once
-        o_ref[0] = acc_ref[...].astype(o_ref.dtype)
+    def _store():                      # carry-propagate: resolve, dequant,
+        y = acc_ref[...]               # cast once
+        if quant:
+            y = y * s_ref[0].astype(jnp.float32)
+        o_ref[0] = y.astype(o_ref.dtype)
 
 
-def arrayflex_expert_gemm(x, w, *, bm: int = 128, bn: int = 128,
-                          bk: int = 128, k_collapse: int = 1,
+def arrayflex_expert_gemm(x, w, *, w_scale=None, bm: int = 128,
+                          bn: int = 128, bk: int = 128, k_collapse: int = 1,
                           out_dtype=None, interpret=None):
     """Batched per-expert GEMM in ONE launch: X[E,T,K] @ W[E,K,N] -> [E,T,N].
+
+    ``w_scale`` (an (E, N) fp32 array) enables the int8-weight path: ``w``
+    holds int8 codes and each expert's per-output-channel dequant multiply
+    resolves at its carry-propagate store, exactly as in
+    :func:`arrayflex_gemm`.
 
     Grid = (E, T/bm, N/bn, n_steps) — the *leading* grid dimension walks
     the expert axis, so every expert's K-collapsed schedule runs inside a
@@ -279,6 +338,9 @@ def arrayflex_expert_gemm(x, w, *, bm: int = 128, bn: int = 128,
         raise ValueError(f"expert gemm mismatch: x {x.shape} @ w {w.shape}")
     if k_collapse < 1:
         raise ValueError(f"k_collapse must be >= 1, got {k_collapse}")
+    quant = w_scale is not None
+    if quant and w_scale.shape != (E, N):
+        raise ValueError(f"w_scale must be ({E}, {N}), got {w_scale.shape}")
     out_dtype = out_dtype or x.dtype
     if E == 0 or T == 0 or N == 0 or K == 0:
         return jnp.zeros((E, T, N), out_dtype)
@@ -297,16 +359,21 @@ def arrayflex_expert_gemm(x, w, *, bm: int = 128, bn: int = 128,
     grid = (E, T // bm, N // bn, n_steps)
     interpret = resolve_interpret(interpret)
     kernel = functools.partial(_expert_kernel, k_collapse=k_collapse,
-                               n_steps=n_steps)
+                               n_steps=n_steps, quant=quant)
+    operands = [x, w]
+    in_specs = [
+        pl.BlockSpec((1, bm, kk), lambda e, i, j, s: (e, i, s)),
+        pl.BlockSpec((1, kk, bn), lambda e, i, j, s: (e, s, j)),
+    ]
+    if quant:
+        operands.append(w_scale)
+        in_specs.append(pl.BlockSpec((1, bn), lambda e, i, j, s: (e, j)))
     return pl.pallas_call(
         kernel,
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bm, kk), lambda e, i, j, s: (e, i, s)),
-            pl.BlockSpec((1, kk, bn), lambda e, i, j, s: (e, s, j)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, s: (e, i, j)),
         out_shape=jax.ShapeDtypeStruct((E, T, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
         interpret=interpret,
-    )(x, w)
+    )(*operands)

@@ -37,38 +37,49 @@ SA_C = 128
 
 @functools.lru_cache(maxsize=None)
 def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4,
-                  epilogue_ops: int = 0) -> int:
+                  epilogue_ops: int = 0, precision: str = "fp32") -> int:
     """ArrayFlex pipeline depth for GEMM X[T,K] @ W[K,M] (Eq. 7 -> discrete).
 
     K is the contraction (the SA's R-tiled dim), M the output columns.
     ``epilogue_ops`` prices fused post-GEMM vector ops into the per-step
     period (Eq. 5'), which can shift the argmin toward deeper collapse.
+    ``precision`` selects the datapath's Eq.(5) coefficients
+    (``timing.timing_for``): the int8 datapath's cheap collapse stages
+    move the argmin deeper than fp32 picks at the same shape.
     """
-    k = timing.best_k(M, K, T_rows, SA_R, SA_C, epilogue_ops=epilogue_ops)
+    k = timing.best_k(M, K, T_rows, SA_R, SA_C,
+                      timing.timing_for(precision),
+                      epilogue_ops=epilogue_ops)
     return max(1, min(max_k, k))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("activation", "has_w2", "has_b",
-                                    "has_b2", "k_collapse", "bk",
-                                    "out_dtype", "interpret"))
-def _gemm(x, w, w2, bias, bias2, activation, has_w2, has_b, has_b2,
-          k_collapse: int, bk: int, out_dtype, interpret: bool):
+                                    "has_b2", "has_s", "has_s2",
+                                    "k_collapse", "bk", "out_dtype",
+                                    "interpret"))
+def _gemm(x, w, w2, bias, bias2, w_scale, w2_scale, activation, has_w2,
+          has_b, has_b2, has_s, has_s2, k_collapse: int, bk: int,
+          out_dtype, interpret: bool):
     return arrayflex_gemm(x, w,
                           w2=w2 if has_w2 else None,
                           bias=bias if has_b else None,
                           bias2=bias2 if has_b2 else None,
+                          w_scale=w_scale if has_s else None,
+                          w2_scale=w2_scale if has_s2 else None,
                           activation=activation, bk=bk,
                           k_collapse=k_collapse, out_dtype=out_dtype,
                           interpret=interpret)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("k_collapse", "bk", "out_dtype",
-                                    "interpret"))
-def _expert_gemm(x, w, k_collapse: int, bk: int, out_dtype,
+                   static_argnames=("has_s", "k_collapse", "bk",
+                                    "out_dtype", "interpret"))
+def _expert_gemm(x, w, w_scale, has_s, k_collapse: int, bk: int, out_dtype,
                  interpret: bool):
-    return arrayflex_expert_gemm(x, w, bk=bk, k_collapse=k_collapse,
+    return arrayflex_expert_gemm(x, w,
+                                 w_scale=w_scale if has_s else None,
+                                 bk=bk, k_collapse=k_collapse,
                                  out_dtype=out_dtype, interpret=interpret)
 
 
@@ -77,20 +88,27 @@ def _round_up(x: int, m: int) -> int:
 
 
 def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
+                     w_scale=None, w2_scale=None,
                      activation: str = "none", k_collapse: int = 0,
                      bk: int = 128, out_dtype=None, interpret=None):
     """Planner-configured GEMM with fused epilogue.  x: (..., K), w: (K, N).
 
         out = act(x@w [+ bias]) [* (x@w2 [+ bias2])]
 
+    ``w_scale`` enables the int8-weight path (``w`` holds int8 codes,
+    effective weight ``w * w_scale`` per output channel; dequant at the
+    carry-propagate store) — the unplanned ``k_collapse=0`` then picks k
+    with the int8 datapath's Eq.(5) coefficients, which favor deeper
+    collapse than fp32.
+
     Covers *every* nonempty shape exactly: the kernel zero-pads ragged K
     itself, and ragged M rows / N columns (tilings the output grid cannot
     absorb) are zero-padded here to the systolic tile and sliced off the
     result — zeros contribute exactly 0 to the fp32 accumulator, so
     padding is exact and no reference fallback is ever taken.  Padded N
-    columns extend ``bias``/``bias2`` with zeros (sliced off with the
-    output); padded M rows run the epilogue on zero accumulators and are
-    sliced off.
+    columns extend ``bias``/``bias2`` (and the dequant scales) with zeros
+    (sliced off with the output); padded M rows run the epilogue on zero
+    accumulators and are sliced off.
     """
     lead = x.shape[:-1]
     K = x.shape[-1]
@@ -107,10 +125,14 @@ def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
         return out.astype(out_dtype)
     x2 = x.reshape(-1, K)
     M_rows = x2.shape[0]
+    quant = w_scale is not None
     if not k_collapse:
+        # dequant multiplies are boundary ops too: one per contraction
         n_ops = ((activation != "none") + (bias is not None)
-                 + (bias2 is not None) + (w2 is not None))
-        k_collapse = plan_collapse(N, K, M_rows, epilogue_ops=n_ops)
+                 + (bias2 is not None) + (w2 is not None)
+                 + quant * (1 + (w2 is not None)))
+        k_collapse = plan_collapse(N, K, M_rows, epilogue_ops=n_ops,
+                                   precision="int8" if quant else "fp32")
     # tile sizes mirror the kernel's bm/bn clamp: a dim smaller than the SA
     # is its own (exactly dividing) tile; larger dims pad up to a multiple.
     Mp = M_rows if M_rows <= SA_R else _round_up(M_rows, SA_R)
@@ -125,27 +147,35 @@ def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
             bias = jnp.pad(bias, (0, Np - N))
         if bias2 is not None:
             bias2 = jnp.pad(bias2, (0, Np - N))
+        if w_scale is not None:
+            w_scale = jnp.pad(w_scale, (0, Np - N))
+        if w2_scale is not None:
+            w2_scale = jnp.pad(w2_scale, (0, Np - N))
     dummy = jnp.zeros((), x2.dtype)
     out = _gemm(x2, w,
                 w2 if w2 is not None else dummy,
                 bias if bias is not None else dummy,
                 bias2 if bias2 is not None else dummy,
+                w_scale if w_scale is not None else dummy,
+                w2_scale if w2_scale is not None else dummy,
                 activation, w2 is not None, bias is not None,
-                bias2 is not None, k_collapse, bk, out_dtype, interpret)
+                bias2 is not None, w_scale is not None,
+                w2_scale is not None, k_collapse, bk, out_dtype, interpret)
     if (Mp, Np) != (M_rows, N):
         out = out[:M_rows, :N]
     return out.reshape(*lead, N)
 
 
-def arrayflex_expert_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
-                            out_dtype=None, interpret=None):
+def arrayflex_expert_matmul(x, w, *, w_scale=None, k_collapse: int = 0,
+                            bk: int = 128, out_dtype=None, interpret=None):
     """Planner-configured batched expert GEMM in ONE kernel launch.
 
     x: (E, T, K), w: (E, K, N) -> (E, T, N).  All experts share one
     collapse depth k, planned for the common (N, K, T) shape (every expert
-    GEMM in a capacity-buffered MoE layer has identical shape).  Ragged
-    T / N are zero-padded to the systolic tile and sliced off, exactly as
-    in :func:`arrayflex_matmul`.
+    GEMM in a capacity-buffered MoE layer has identical shape).
+    ``w_scale`` (E, N) enables the int8-weight path.  Ragged T / N are
+    zero-padded to the systolic tile and sliced off, exactly as in
+    :func:`arrayflex_matmul`.
     """
     E, T, K = x.shape
     N = w.shape[-1]
@@ -153,15 +183,21 @@ def arrayflex_expert_matmul(x, w, *, k_collapse: int = 0, bk: int = 128,
     interpret = resolve_interpret(interpret)
     if E == 0 or T == 0 or N == 0 or K == 0:
         return jnp.zeros((E, T, N), out_dtype)
+    quant = w_scale is not None
     if not k_collapse:
-        k_collapse = plan_collapse(N, K, T)
+        k_collapse = plan_collapse(N, K, T, epilogue_ops=int(quant),
+                                   precision="int8" if quant else "fp32")
     Tp = T if T <= SA_R else _round_up(T, SA_R)
     Np = N if N <= SA_C else _round_up(N, SA_C)
     if Tp != T:
         x = jnp.pad(x, ((0, 0), (0, Tp - T), (0, 0)))
     if Np != N:
         w = jnp.pad(w, ((0, 0), (0, 0), (0, Np - N)))
-    out = _expert_gemm(x, w, k_collapse, bk, out_dtype, interpret)
+        if w_scale is not None:
+            w_scale = jnp.pad(w_scale, ((0, 0), (0, Np - N)))
+    dummy = jnp.zeros((), x.dtype)
+    out = _expert_gemm(x, w, w_scale if quant else dummy, quant,
+                       k_collapse, bk, out_dtype, interpret)
     if (Tp, Np) != (T, N):
         out = out[:, :T, :N]
     return out

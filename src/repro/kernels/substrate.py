@@ -18,9 +18,33 @@ MoE batched form, :func:`batched_gemm` for attention QK/PV products), which
     :data:`DISPATCH_COUNTS`;
   * dispatches to a **backend** from a pluggable registry:
 
-      ``xla``       today's ``x @ w`` (the default; numerics unchanged),
-      ``arrayflex`` the Pallas K-collapse kernel at the planned k,
-      ``ref``       an fp32-everywhere oracle for equivalence tests.
+      ``xla``            today's ``x @ w`` (the default; numerics unchanged),
+      ``arrayflex``      the Pallas K-collapse kernel at the planned k,
+      ``arrayflex_int8`` the same kernel on int8 weights + per-output-
+                         channel fp32 scales (fp32 accumulation, dequant
+                         at the carry-propagate boundary), planned with
+                         the int8 datapath's Eq.(5) coefficients,
+      ``ref``            an fp32-everywhere oracle for equivalence tests.
+
+**Int8 weight quantization** (the ``arrayflex_int8`` backend): dispatch
+quantizes each weight once through a per-weight-identity memo
+(:func:`quantize_weight` — symmetric per-output-channel int8, fp32
+scales), so eager dispatch never re-quantizes a weight it has seen (the
+bench gates that hit rate at 100%).  Dispatch under a jit trace sees
+tracers, not weight identities: quantization is staged into the
+compiled step (once per compilation, but re-executed by XLA per call) —
+hoisting it out via pre-quantized parameter trees is the ROADMAP
+follow-up.  The kernel accumulates raw int8 codes in fp32 and the
+dequant multiply resolves at the carry-propagate store, priced into
+Eq.(5') as one boundary op per contraction.  Because the int8 datapath's collapse stages are cheap
+(``timing.IntTimingParams``), the Eq.(6') argmin lands on deeper k than
+fp32 picks at the same shape — the plan cache keys on the backend name,
+which carries the precision.  Attention QK/PV products dispatch their
+*activation* operands (K/V are not weights), so ``batched_gemm`` under
+the int8 backend falls back to the fp32 arrayflex kernel and plan;
+``moe.router`` is quantization-exempt (:data:`QUANT_EXEMPT_SITES`) —
+router logits feed a discrete top-k, where quantization noise would
+change expert routing rather than add bounded output error.
 
 **Epilogues**: ``gemm(..., epilogue="silu"|"gelu"|"swiglu", bias=...,
 w2=...)`` fuses bias add, activation, and the dual-contraction gated
@@ -62,7 +86,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from dataclasses import dataclass
+import weakref
+from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, Optional, Tuple
 
 import jax
@@ -128,7 +153,82 @@ class GemmCall:
     w2: Any = None              # second contraction (epilogue.dual)
     bias: Any = None            # (N_out,) fused bias
     bias2: Any = None           # (N_out,) fused bias on the w2 contraction
+    # per-output-channel fp32 dequant scales of an int8-quantized w / w2
+    # (set by the dispatch for quantizing backends; None = fp32 weights)
+    w_scale: Any = None
+    w2_scale: Any = None
     interpret: Optional[bool] = None   # Pallas interpret override
+
+
+# ---------------------------------------------------------------------------
+# weight quantization (the arrayflex_int8 backend's memoized prologue)
+
+# site labels whose weights stay fp32 under a quantizing backend: the
+# router's logits feed a discrete top-k — quantization noise there changes
+# *which experts run* instead of adding bounded output error, which would
+# break the backend-equivalence tolerance contract.
+QUANT_EXEMPT_SITES = frozenset({"moe.router"})
+
+# id(weight) -> (weakref-or-thunk, int8 codes, fp32 scales).  Keyed on the
+# weight array's identity: model params are long-lived objects, so every
+# dispatch after the first is a pure dict hit — the hot path never
+# re-quantizes.  The weakref death callback evicts the entry, so a reused
+# id can never serve a stale quantization (the `ref() is w` guard below
+# covers interpreters whose GC defers callbacks).
+_QUANT_CACHE: Dict[int, tuple] = {}
+QUANT_CACHE_STATS = {"hits": 0, "misses": 0, "traced": 0}
+
+
+def _quantize(w):
+    """Symmetric per-output-channel int8: codes in [-127, 127], fp32
+    scales over the contraction axis (-2), so ``codes * scale`` recovers
+    the weight to within scale/2 per element."""
+    w32 = w.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(w32), axis=-2)
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(w32 / scale[..., None, :]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def quantize_weight(w):
+    """(int8 codes, fp32 per-output-channel scales) for a weight array,
+    memoized on the array's identity.
+
+    A 2-D (K, N) weight quantizes per output column (scales (N,)); an
+    expert bank (E, K, N) per (expert, column) (scales (E, N)).  Concrete
+    arrays hit the memo (``hits``/``misses`` in
+    :data:`QUANT_CACHE_STATS`); tracers (dispatch under a jit trace)
+    quantize in-graph and count as ``traced`` — the trace itself is
+    cached by jit, so that cost is per-compilation, not per-step.
+    """
+    if isinstance(w, jax.core.Tracer):
+        QUANT_CACHE_STATS["traced"] += 1
+        return _quantize(w)
+    key = id(w)
+    ent = _QUANT_CACHE.get(key)
+    if ent is not None and ent[0]() is w:
+        QUANT_CACHE_STATS["hits"] += 1
+        return ent[1], ent[2]
+    QUANT_CACHE_STATS["misses"] += 1
+    q, s = _quantize(w)
+    try:
+        ref = weakref.ref(w, lambda _, k=key: _QUANT_CACHE.pop(k, None))
+    except TypeError:       # array type without weakref support: pin it
+        ref = functools.partial(lambda v: v, w)
+    _QUANT_CACHE[key] = (ref, q, s)
+    return q, s
+
+
+def quantize_cache_info() -> Dict[str, int]:
+    """hits / misses / traced counters plus the memo's current size."""
+    return dict(QUANT_CACHE_STATS, size=len(_QUANT_CACHE))
+
+
+def clear_quant_cache():
+    _QUANT_CACHE.clear()
+    for k in QUANT_CACHE_STATS:
+        QUANT_CACHE_STATS[k] = 0
 
 
 # ---------------------------------------------------------------------------
@@ -224,6 +324,7 @@ class GemmPlan:
     N_shard: int = 0
     T_shard: int = 0
     cycles: int = 0     # per-shard Eq.(4) cycles x fused contractions
+    precision: str = "fp32"   # datapath the Eq.(5)-(7) pricing used
 
     @property
     def saving(self) -> float:
@@ -231,6 +332,42 @@ class GemmPlan:
 
 
 @functools.lru_cache(maxsize=None)
+def _plan_gemm_cached(M: int, N: int, T: int, backend: str,
+                      epilogue: Epilogue, shard: ShardSig) -> GemmPlan:
+    info = _BACKEND_INFO.get(backend)
+    collapse = info.collapse if info else False
+    precision = info.precision if info else "fp32"
+    params = timing.timing_for(precision)
+    Ms = -(-M // shard.cols)
+    Ns = -(-N // shard.contraction)
+    Ts = -(-T // shard.rows)
+    # a quantizing backend's per-output-channel dequant multiply resolves
+    # at the carry-propagate boundary like any fused op: one per contraction
+    dequant_ops = epilogue.contractions if (info and info.quantize) else 0
+    e_ops = epilogue.ops + shard.reduce_ops + dequant_ops
+    k = (ops.plan_collapse(Ms, Ns, Ts, epilogue_ops=e_ops,
+                           precision=precision)
+         if collapse else 1)
+    return GemmPlan(
+        M=M, N=N, T=T, backend=backend, k=k, epilogue=epilogue, shard=shard,
+        M_shard=Ms, N_shard=Ns, T_shard=Ts, precision=precision,
+        cycles=epilogue.contractions * timing.total_cycles(
+            Ms, Ns, Ts, ops.SA_R, ops.SA_C, k),
+        t_pred_ps=timing.t_abs_ps(Ms, Ns, Ts, ops.SA_R, ops.SA_C, k,
+                                  params=params, epilogue_ops=e_ops,
+                                  contractions=epilogue.contractions),
+        t_conventional_ps=timing.t_abs_conventional_ps(
+            Ms, Ns, Ts, ops.SA_R, ops.SA_C, params=params,
+            contractions=epilogue.contractions,
+            epilogue_ops=e_ops))
+
+
+# backend name -> {"hits": n, "misses": n} of plan_gemm lookups: which
+# backends are planning fresh shapes vs running cache-hit-only.  Steady-
+# state serving must be all hits (see plan_cache_info / the serving test).
+PLAN_CACHE_STATS: Dict[str, Dict[str, int]] = {}
+
+
 def plan_gemm(M: int, N: int, T: int, backend: str = "arrayflex",
               epilogue: Epilogue = EPILOGUE_NONE,
               shard: ShardSig = SHARD_NONE) -> GemmPlan:
@@ -240,37 +377,51 @@ def plan_gemm(M: int, N: int, T: int, backend: str = "arrayflex",
     (M, N, T) are the *logical* dims; the argmin runs on the
     post-partition per-shard shape — the GEMM the array actually executes
     under the mesh — and a sharded contraction prices its psum combine
-    tree into the boundary ops (see :class:`ShardSig`)."""
-    Ms = -(-M // shard.cols)
-    Ns = -(-N // shard.contraction)
-    Ts = -(-T // shard.rows)
-    e_ops = epilogue.ops + shard.reduce_ops
-    k = (ops.plan_collapse(Ms, Ns, Ts, epilogue_ops=e_ops)
-         if backend == "arrayflex" else 1)
-    return GemmPlan(
-        M=M, N=N, T=T, backend=backend, k=k, epilogue=epilogue, shard=shard,
-        M_shard=Ms, N_shard=Ns, T_shard=Ts,
-        cycles=epilogue.contractions * timing.total_cycles(
-            Ms, Ns, Ts, ops.SA_R, ops.SA_C, k),
-        t_pred_ps=timing.t_abs_ps(Ms, Ns, Ts, ops.SA_R, ops.SA_C, k,
-                                  epilogue_ops=e_ops,
-                                  contractions=epilogue.contractions),
-        t_conventional_ps=timing.t_abs_conventional_ps(
-            Ms, Ns, Ts, ops.SA_R, ops.SA_C,
-            contractions=epilogue.contractions,
-            epilogue_ops=e_ops))
+    tree into the boundary ops (see :class:`ShardSig`).  The backend name
+    carries the datapath precision: a quantizing backend prices Eq.(5')
+    with its own ``timing`` coefficients plus one dequant boundary op per
+    contraction, so the same shape legitimately plans a different k under
+    int8 than under fp32.  Lookups are tallied per backend in
+    :data:`PLAN_CACHE_STATS`."""
+    before = _plan_gemm_cached.cache_info().misses
+    plan = _plan_gemm_cached(M, N, T, backend, epilogue, shard)
+    st = PLAN_CACHE_STATS.setdefault(backend, {"hits": 0, "misses": 0})
+    missed = _plan_gemm_cached.cache_info().misses > before
+    st["misses" if missed else "hits"] += 1
+    return plan
 
 
-def plan_cache_info():
-    return plan_gemm.cache_info()
+@dataclass(frozen=True)
+class PlanCacheInfo:
+    """Aggregate lru stats plus the per-backend hit/miss tallies."""
+
+    hits: int
+    misses: int
+    maxsize: Optional[int]
+    currsize: int
+    per_backend: Dict[str, Dict[str, int]] = field(default_factory=dict)
+
+    def _asdict(self):
+        return dataclasses.asdict(self)
+
+
+def plan_cache_info() -> PlanCacheInfo:
+    info = _plan_gemm_cached.cache_info()
+    return PlanCacheInfo(
+        hits=info.hits, misses=info.misses, maxsize=info.maxsize,
+        currsize=info.currsize,
+        per_backend={b: dict(st) for b, st in PLAN_CACHE_STATS.items()})
 
 
 def clear_plan_cache():
     """Reset every plan memo this process holds: the Eq.(6') plan cache
-    AND the planner memos it feeds from (``ops.plan_collapse``,
-    ``planner.attention_plan``) — a timing-parameter or config change must
-    not see stale picks — plus the per-trace site/dispatch logs."""
-    plan_gemm.cache_clear()
+    (and its per-backend tallies) AND the planner memos it feeds from
+    (``ops.plan_collapse``, ``planner.attention_plan``) — a
+    timing-parameter or config change must not see stale picks — plus the
+    per-trace site/dispatch logs.  The weight-quantization memo is NOT a
+    plan and survives (``clear_quant_cache`` resets it)."""
+    _plan_gemm_cached.cache_clear()
+    PLAN_CACHE_STATS.clear()
     ops.plan_collapse.cache_clear()
     planner.attention_plan.cache_clear()
     SITE_PLANS.clear()
@@ -314,34 +465,93 @@ def _ref_backend(x2, w, plan: GemmPlan, call: GemmCall):
     return out.astype(call.out_dtype or x2.dtype)
 
 
+def _arrayflex_int8_backend(x2, w, plan: GemmPlan, call: GemmCall):
+    # w arrives pre-quantized from the dispatch's weight memo: int8 codes
+    # with call.w_scale the per-output-channel fp32 dequant (w2 likewise).
+    # A quantization-exempt site (moe.router) passes fp32 w with no scale
+    # and runs the fp32 kernel unchanged, under the fp32-priced plan the
+    # dispatch substitutes for exempt sites.
+    return ops.arrayflex_matmul(x2, w, w2=call.w2, bias=call.bias,
+                                bias2=call.bias2, w_scale=call.w_scale,
+                                w2_scale=call.w2_scale,
+                                activation=plan.epilogue.activation,
+                                k_collapse=plan.k, out_dtype=call.out_dtype,
+                                interpret=call.interpret)
+
+
+@dataclass(frozen=True)
+class BackendInfo:
+    """Registry metadata driving planning and dispatch for one backend.
+
+    ``collapse``: plans an Eq.(6') collapse depth (ArrayFlex-family
+    kernels); others run k=1.  ``precision``: the datapath whose
+    ``timing`` coefficients price Eq.(5)-(7) for this backend (part of
+    the plan, carried by the backend name in the cache key).
+    ``quantize``: the dispatch pre-quantizes weight operands through
+    :func:`quantize_weight` and hands int8 codes + scales to ``fn``.
+    """
+
+    fn: Callable
+    collapse: bool = False
+    precision: str = "fp32"
+    quantize: bool = False
+
+
 _BACKENDS: Dict[str, Callable] = {}
+_BACKEND_INFO: Dict[str, BackendInfo] = {}
 
 
-def register_backend(name: str, fn: Callable) -> None:
+def register_backend(name: str, fn: Callable, *, collapse: bool = False,
+                     precision: str = "fp32",
+                     quantize: bool = False) -> None:
     """fn(x2: (T, K), w: (K, N_out), plan: GemmPlan, call: GemmCall)
     -> (T, N_out).  ``call`` carries out_dtype, the epilogue operands
     (w2/bias/bias2 — apply with ``kernels.arrayflex_gemm.apply_epilogue``
-    if not fusing) and the Pallas interpret override."""
+    if not fusing), the dequant scales of a quantizing backend
+    (``call.w_scale is None`` on paths that do not quantize: exempt
+    sites, batched activation products — the fn must handle fp32
+    operands then), and the Pallas interpret override.  See
+    :class:`BackendInfo` for the keyword metadata.
+
+    (Re-)registration evicts cached Eq.(6') plans: a plan embeds the
+    backend's collapse/precision metadata, so a name whose metadata
+    changes must not keep serving stale k picks."""
+    timing.timing_for(precision)     # fail fast on unknown precisions
     _BACKENDS[name] = fn
+    _BACKEND_INFO[name] = BackendInfo(fn=fn, collapse=collapse,
+                                      precision=precision,
+                                      quantize=quantize)
+    _plan_gemm_cached.cache_clear()
+    PLAN_CACHE_STATS.clear()
 
 
 def backends():
     return sorted(_BACKENDS)
 
 
-def get_backend(name: str) -> Callable:
-    try:
-        return _BACKENDS[name]
-    except KeyError:
+def check_backend(name: str) -> None:
+    """Validate a backend name against the registry (the config-resolve-
+    time guard: ModelConfig.gemm_backend / serve.py --gemm-backend call
+    this before any dispatch, so an unknown name fails with the
+    registered list instead of deep inside a jit trace)."""
+    if name not in _BACKENDS:
         raise ValueError(
             f"unknown gemm backend {name!r}; registered: {backends()}")
 
 
+def get_backend(name: str) -> Callable:
+    check_backend(name)
+    return _BACKENDS[name]
+
+
 register_backend("xla", _xla_backend)
-register_backend("arrayflex", _arrayflex_backend)
+register_backend("arrayflex", _arrayflex_backend, collapse=True)
+register_backend("arrayflex_int8", _arrayflex_int8_backend, collapse=True,
+                 precision="int8", quantize=True)
 register_backend("ref", _ref_backend)
 
 _BUILTIN_BACKENDS = {"xla": _xla_backend, "arrayflex": _arrayflex_backend,
+                     "arrayflex_int8": _arrayflex_int8_backend,
                      "ref": _ref_backend}
 
 
@@ -396,19 +606,28 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
     plan's k.  A sharded contraction (``ctx.reduce_axes``) psums the
     partial fp32 accumulators at the collapsed-block boundary and applies
     the epilogue *after* the reduce (a per-shard bias/activation on
-    partial sums would be wrong)."""
+    partial sums would be wrong).
+
+    Int8 operands (a quantizing backend): the dequant scales are (N_out,)
+    vectors and shard with the output-column axis exactly like fused
+    biases — replicated for a row-parallel (contraction-sharded) weight,
+    column-sharded for a column-parallel one.  On the reduce path each
+    shard dequants its *partial* accumulator before the psum (per-column
+    scales distribute over the K sum, so pre-psum dequant is exact) and
+    the cross-device psum itself stays fp32."""
     ep = plan.epilogue
     reduce_axes = ctx.reduce_axes
     col_spec = P(ctx.w_spec[1])          # (N_out,) operands follow out cols
     operands, in_specs = [x2, w], [ctx.x_spec, ctx.w_spec]
     flags = []
-    for arr, spec in ((call.w2, ctx.w_spec), (call.bias, col_spec),
+    for arr, spec in ((call.w2, ctx.w_spec), (call.w_scale, col_spec),
+                      (call.w2_scale, col_spec), (call.bias, col_spec),
                       (call.bias2, col_spec)):
         flags.append(arr is not None)
         if arr is not None:
             operands.append(arr)
             in_specs.append(spec)
-    has_w2, has_b, has_b2 = flags
+    has_w2, has_s, has_s2, has_b, has_b2 = flags
     # reduce path: the per-shard kernel runs the contraction(s) only, at
     # the SAME k the (reduce-priced) plan picked
     exec_plan = (dataclasses.replace(plan, epilogue=EPILOGUE_NONE)
@@ -418,15 +637,21 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
         it = iter(ops_)
         xs, ws = next(it), next(it)
         w2s = next(it) if has_w2 else None
+        ss = next(it) if has_s else None
+        s2s = next(it) if has_s2 else None
         bs = next(it) if has_b else None
         b2s = next(it) if has_b2 else None
         if not reduce_axes:
             return fn(xs, ws, plan,
                       GemmCall(out_dtype=call.out_dtype, w2=w2s, bias=bs,
-                               bias2=b2s, interpret=call.interpret))
-        pc = GemmCall(out_dtype=jnp.float32, interpret=call.interpret)
+                               bias2=b2s, w_scale=ss, w2_scale=s2s,
+                               interpret=call.interpret))
+        pc = GemmCall(out_dtype=jnp.float32, w_scale=ss,
+                      interpret=call.interpret)
         y = jax.lax.psum(fn(xs, ws, exec_plan, pc), reduce_axes)
-        y2 = (jax.lax.psum(fn(xs, w2s, exec_plan, pc), reduce_axes)
+        y2 = (jax.lax.psum(fn(xs, w2s, exec_plan,
+                              dataclasses.replace(pc, w_scale=s2s)),
+                           reduce_axes)
               if has_w2 else None)
         out = apply_epilogue(
             y, y2,
@@ -462,9 +687,27 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     the collapsed-block boundary, then the epilogue applies).  A shard
     context whose counts do not divide the dims (or an empty operand)
     falls back to replicated dispatch.
+
+    On a quantizing backend (``arrayflex_int8``) the dispatch swaps ``w``
+    (and ``w2``) for int8 codes + per-output-channel fp32 scales through
+    the weight memo (:func:`quantize_weight`) before planning/sharding —
+    unless the site is quantization-exempt (:data:`QUANT_EXEMPT_SITES`).
     """
     fn = get_backend(backend)
+    info = _BACKEND_INFO[backend]
     ep = _epilogue_spec(epilogue, w2, bias, bias2)
+    w_scale = w2_scale = None
+    plan_backend = backend
+    if info.quantize and site in QUANT_EXEMPT_SITES:
+        # an exempt site runs fp32 weights with no dequant: price (and
+        # record) it as the fp32 base so its Eq.(6') prediction matches
+        # the datapath it actually executes, not the quantized one
+        if backend == "arrayflex_int8":
+            plan_backend = "arrayflex"
+    elif info.quantize and w.shape[0] and w.shape[-1]:
+        w, w_scale = quantize_weight(w)
+        if w2 is not None:
+            w2, w2_scale = quantize_weight(w2)
     lead = x.shape[:-1]
     K = x.shape[-1]
     N_out = w.shape[-1]
@@ -474,13 +717,14 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
                               or not shard.divides(T, K, N_out)):
         shard = None
     call = GemmCall(out_dtype=out_dtype, w2=w2, bias=bias, bias2=bias2,
+                    w_scale=w_scale, w2_scale=w2_scale,
                     interpret=interpret)
     if shard is not None:
-        plan = plan_gemm(N_out, K, T, backend, ep, shard.signature())
+        plan = plan_gemm(N_out, K, T, plan_backend, ep, shard.signature())
         _record(site, plan)
         out = _sharded_gemm(fn, x2, w, plan, shard, call)
     else:
-        plan = plan_gemm(N_out, K, T, backend, ep)
+        plan = plan_gemm(N_out, K, T, plan_backend, ep)
         _record(site, plan)
         out = fn(x2, w, plan, call)
     return out.reshape(*lead, N_out)
@@ -518,7 +762,16 @@ def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
     Batch sharding leaves the per-element (M, N, T) unchanged, so the plan
     key does not change.  Custom backends and indivisible batches fall
     back to replicated dispatch.
+
+    The batched operands are attention K/V *activations*, not weights —
+    there is nothing to quantize once (weights-only quantization) — so
+    the builtin quantizing backend maps to its fp32 ArrayFlex base
+    (kernel AND plan); a custom quantizing backend dispatches itself
+    with ``call.w_scale=None`` (fp32 operands, the registry contract).
     """
+    check_backend(backend)
+    if backend == "arrayflex_int8":
+        backend = "arrayflex"
     B, T, K = x.shape
     N_out = w.shape[-1]
     plan = plan_gemm(N_out, K, T, backend)
@@ -545,8 +798,11 @@ def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
     return jnp.stack([fn(x[b], w[b], plan, call) for b in range(B)])
 
 
-def _expert_exec(x, w, plan: GemmPlan, backend: str, interpret):
-    """Builtin expert execution (G, E, C, K) @ (E, K, N): ONE launch."""
+def _expert_exec(x, w, plan: GemmPlan, backend: str, interpret,
+                 w_scale=None):
+    """Builtin expert execution (G, E, C, K) @ (E, K, N): ONE launch.
+    ``w_scale`` (E, N): int8 expert bank, dequantized per expert at the
+    kernel's carry-propagate store."""
     if backend == "xla":
         return jnp.einsum("gecd,edf->gecf", x, w)
     if backend == "ref":
@@ -556,7 +812,8 @@ def _expert_exec(x, w, plan: GemmPlan, backend: str, interpret):
     G, E, C, K = x.shape
     N_out = w.shape[-1]
     xe = x.transpose(1, 0, 2, 3).reshape(E, G * C, K)
-    out = ops.arrayflex_expert_matmul(xe, w, k_collapse=plan.k,
+    out = ops.arrayflex_expert_matmul(xe, w, w_scale=w_scale,
+                                      k_collapse=plan.k,
                                       interpret=interpret)
     return out.reshape(E, G, C, N_out).transpose(1, 0, 2, 3)
 
@@ -578,15 +835,34 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
     device launches once over its E/tp experts (per-expert shape — and so
     the plan — unchanged).  Custom backends and indivisible expert counts
     fall back to replicated dispatch.
+
+    A quantizing backend swaps the expert bank for int8 codes + (E, N)
+    scales through the weight memo; the scales shard with the expert
+    axis, exactly as the bank does.
     """
+    check_backend(backend)
     G, E, C, K = x.shape
     N_out = w.shape[-1]
+    info = _BACKEND_INFO[backend]
+    w_scale = None
+    if info.quantize and E and K and N_out:
+        w, w_scale = quantize_weight(w)
     plan = plan_gemm(N_out, K, G * C, backend)
     if shard is not None and (not _is_builtin(backend)
                               or E % shard.axis_shards(shard.x_spec[1])):
         shard = None
     if shard is not None:
         _record(site, plan)
+
+        if w_scale is not None:
+            def body_q(xs, ws, ss):
+                return _expert_exec(xs, ws, plan, backend, interpret, ss)
+
+            return shard_map(
+                body_q, mesh=shard.mesh,
+                in_specs=(shard.x_spec, shard.w_spec,
+                          P(shard.w_spec[0], None)),
+                out_specs=shard.out_spec, check_rep=False)(x, w, w_scale)
 
         def body(xs, ws):
             return _expert_exec(xs, ws, plan, backend, interpret)
@@ -596,13 +872,15 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
                          out_specs=shard.out_spec, check_rep=False)(x, w)
     if _is_builtin(backend):
         _record(site, plan)
-        return _expert_exec(x, w, plan, backend, interpret)
+        return _expert_exec(x, w, plan, backend, interpret, w_scale)
     # custom backend: unroll the (static) expert axis through the 2-D
     # entry — E launches, each recorded against the shared per-shape plan
+    # (a quantizing backend's per-expert dequant scales ride along)
     _record(site, plan, launches=E)
     fn = get_backend(backend)
-    call = GemmCall(interpret=interpret)
     outs = [fn(x[:, e].reshape(G * C, K), w[e], plan,
-               call).reshape(G, C, N_out)
+               GemmCall(interpret=interpret,
+                        w_scale=None if w_scale is None else w_scale[e])
+               ).reshape(G, C, N_out)
             for e in range(E)]
     return jnp.stack(outs, axis=1)

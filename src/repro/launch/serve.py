@@ -24,6 +24,7 @@ import time
 import jax
 
 from repro.configs import get_config, reduced
+from repro.kernels import substrate
 from repro.models import lm
 from repro.serving import ServeConfig, ServingEngine
 from repro.serving.engine import Request
@@ -59,7 +60,7 @@ def main(argv=None):
                     choices=("auto", "batched", "token"))
     ap.add_argument("--gemm-backend", default="xla",
                     help="GEMM substrate backend (kernels.substrate): "
-                         "xla | arrayflex | ref")
+                         + " | ".join(substrate.backends()))
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree (mesh 'model' axis); "
                          "GEMMs plan per-shard and run under shard_map")
@@ -79,6 +80,9 @@ def main(argv=None):
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
+    # validate at config-resolve time: a typo'd backend should die here
+    # with the registered list, not deep inside the first traced dispatch
+    substrate.check_backend(args.gemm_backend)
     cfg = dataclasses.replace(cfg, gemm_backend=args.gemm_backend)
     if args.tp > 1 or args.fsdp > 1:
         cfg = dataclasses.replace(cfg, mesh_shape=(args.fsdp, args.tp))

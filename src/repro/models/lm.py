@@ -17,6 +17,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig, SSMConfig
+from repro.kernels import substrate
 from repro.nn import layers, attention as attn_lib, moe as moe_lib, mamba as mamba_lib
 from repro.parallel import sharding
 from repro.parallel.sharding import constrain
@@ -491,6 +492,7 @@ def forward(cfg: ModelConfig, params, batch, *, return_cache=False):
     every substrate dispatch below derives its per-site shard context and
     the planner sees post-partition shapes.
     """
+    substrate.check_backend(cfg.gemm_backend)
     with sharding.gemm_mesh_scope(cfg):
         return _forward(cfg, params, batch, return_cache=return_cache)
 
@@ -539,6 +541,7 @@ def decode_step(cfg: ModelConfig, params, cache, token, pos, ctx=None):
 
     Activates cfg's GEMM-dispatch mesh (``mesh_shape``), like ``forward``.
     """
+    substrate.check_backend(cfg.gemm_backend)
     with sharding.gemm_mesh_scope(cfg):
         return _decode_step(cfg, params, cache, token, pos, ctx)
 
@@ -591,6 +594,7 @@ def prefill_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
 
     Activates cfg's GEMM-dispatch mesh (``mesh_shape``), like ``forward``.
     """
+    substrate.check_backend(cfg.gemm_backend)
     with sharding.gemm_mesh_scope(cfg):
         return _prefill_step(cfg, params, cache, tokens, pos, lengths)
 

@@ -45,6 +45,7 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core import planner
+from repro.kernels import substrate
 from repro.models import lm
 from repro.parallel import sharding
 
@@ -122,6 +123,10 @@ class Slot:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+        # config-resolve-time backend validation: an unknown gemm_backend
+        # fails here with the registered list, not deep inside a traced
+        # dispatch mid-serve
+        substrate.check_backend(cfg.gemm_backend)
         self.cfg = cfg
         self.params = params
         self.sc = serve_cfg
