@@ -6,10 +6,8 @@ headline scalar matched against the paper's claim.
 from __future__ import annotations
 
 import dataclasses
-import time
 
-from repro.core import cnn_shapes, planner, power, timing
-from repro.core.timing import TimingParams
+from repro.core import cnn_shapes, planner, timing
 
 
 def fig5_layer_tradeoff():

@@ -7,7 +7,6 @@ Eq.(6)/(7) isomorphism at pod scale.
 """
 from __future__ import annotations
 
-import numpy as np
 
 from repro.core import cluster_pipeline as cp
 from repro.core import simulator, timing

@@ -4,9 +4,8 @@ plan for the same model.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
-import jax
 
-from repro.configs import ARCHS, SHAPES, reduced
+from repro.configs import ARCHS, SHAPES
 from repro.core import planner
 from repro.launch import serve
 

@@ -1,0 +1,21 @@
+"""Static-analysis subsystem: the substrate contract auditor.
+
+Three passes, one CLI (``python -m repro.analysis.audit``):
+
+* :mod:`repro.analysis.jaxpr_audit` — trace the lm entry points to closed
+  jaxprs and verify every contraction is substrate-attributed, psums on
+  quantized paths are fp32, no rogue in-trace weight re-quantization, and
+  Pallas accumulators are fp32;
+* :mod:`repro.analysis.kernel_check` — statically compare the kernel
+  store's boundary-op count against ``Epilogue.ops`` pricing, and audit
+  the plan-cache key for field completeness;
+* :mod:`repro.analysis.ast_lint` — AST rules over ``src/repro``: no raw
+  GEMMs outside the substrate, ``site=`` labels at dispatch calls,
+  no plan-cache mutation outside ``clear_plan_cache``.
+
+Finding codes live in :mod:`repro.analysis.findings`; the enforced
+invariants are documented in docs/substrate.md ("Contract rules").
+"""
+from repro.analysis.findings import Finding, Report, CODES
+
+__all__ = ["Finding", "Report", "CODES"]

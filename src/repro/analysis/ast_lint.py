@@ -1,0 +1,206 @@
+"""AST lint over ``src/repro``: the substrate contract, statically.
+
+Three rules:
+
+* **AFL01** — no raw GEMM syntax (``@``, ``jnp.dot``/``einsum``/
+  ``matmul``/``tensordot``, ``lax.dot_general``/``conv_general_dilated``)
+  in the model zones (``nn/``, ``models/``, ``serving/``) outside the
+  :data:`repro.analysis.contract.ALLOWLIST` — the same allowlist the
+  jaxpr auditor applies to traceback frames, so the static and traced
+  views of the rule cannot diverge.
+* **AFL02** — every ``substrate.gemm``/``batched_gemm``/``expert_gemm``
+  call in the model zones carries a ``site=`` label; literal labels must
+  be known to ``planner.site_registry()`` (non-literal labels — e.g. a
+  forwarded parameter — are runtime-checked by strict-audit mode
+  instead).
+* **AFL03** — no mutation of the substrate's plan/dispatch state
+  (``SITE_PLANS``, ``DISPATCH_COUNTS``, plan/quant caches) outside
+  ``kernels/substrate.py`` itself: external code resets through
+  ``clear_plan_cache()``/``clear_quant_cache()``, never by poking the
+  dicts, so the cross-check invariants those dicts feed stay trustworthy.
+"""
+from __future__ import annotations
+
+import ast
+import os
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from repro.analysis import contract
+from repro.analysis.findings import Finding
+
+# zones where AFL01/AFL02 apply (model code; kernels/ is the substrate)
+MODEL_ZONES = ("nn/", "models/", "serving/")
+
+RAW_GEMM_ATTRS = frozenset({
+    "dot", "matmul", "einsum", "tensordot", "vdot", "inner", "outer",
+    "dot_general", "conv_general_dilated", "conv",
+})
+
+DISPATCH_FNS = frozenset({"gemm", "batched_gemm", "expert_gemm"})
+
+# substrate-owned mutable state; only kernels/substrate.py may mutate it
+TRACKED_STATE = frozenset({
+    "SITE_PLANS", "DISPATCH_COUNTS", "PLAN_CACHE_STATS",
+    "QUANT_CACHE_STATS", "_QUANT_CACHE", "_plan_gemm_cached",
+    "plan_collapse", "attention_plan", "_BACKENDS", "_BACKEND_INFO",
+})
+MUTATORS = frozenset({"clear", "cache_clear", "pop", "popitem", "update",
+                      "setdefault"})
+STATE_OWNER = os.path.join("kernels", "substrate.py").replace(os.sep, "/")
+
+
+def _name_chain(node) -> List[str]:
+    """['substrate', 'DISPATCH_COUNTS', 'clear'] for the attribute chain."""
+    chain: List[str] = []
+    while isinstance(node, ast.Attribute):
+        chain.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        chain.append(node.id)
+    return list(reversed(chain))
+
+
+def _subscript_base(node) -> List[str]:
+    return _name_chain(node.value) if isinstance(node, ast.Subscript) else []
+
+
+class _Linter(ast.NodeVisitor):
+    def __init__(self, rel: str):
+        self.rel = rel
+        self.in_model_zone = rel.startswith(MODEL_ZONES)
+        self.owns_state = rel == STATE_OWNER
+        self.def_stack: List[str] = []
+        self.findings: List[Finding] = []
+
+    def _where(self, node) -> str:
+        return f"src/repro/{self.rel}:{node.lineno}"
+
+    def _allowlisted(self) -> bool:
+        return any(contract.allowlisted(self.rel, fn)
+                   for fn in self.def_stack)
+
+    def _emit(self, code: str, node, msg: str) -> None:
+        self.findings.append(
+            Finding(code, self._where(node), msg, pass_name="lint"))
+
+    # --- scope tracking ---------------------------------------------------
+    def visit_FunctionDef(self, node):
+        self.def_stack.append(node.name)
+        self.generic_visit(node)
+        self.def_stack.pop()
+
+    visit_AsyncFunctionDef = visit_FunctionDef
+
+    # --- AFL01: raw GEMM syntax ------------------------------------------
+    def visit_BinOp(self, node):
+        if (self.in_model_zone and isinstance(node.op, ast.MatMult)
+                and not self._allowlisted()):
+            self._emit("AFL01", node,
+                       "raw `@` matmul in a model zone — route through "
+                       "kernels.substrate (or add an ALLOWLIST entry with "
+                       "justification)")
+        self.generic_visit(node)
+
+    # --- calls: AFL01 (raw jnp GEMMs), AFL02 (site labels), AFL03 --------
+    def visit_Call(self, node):
+        chain = _name_chain(node.func)
+        if chain:
+            if (self.in_model_zone and chain[-1] in RAW_GEMM_ATTRS
+                    and not self._allowlisted()):
+                self._emit("AFL01", node,
+                           f"raw `{'.'.join(chain)}` contraction in a "
+                           f"model zone — route through kernels.substrate")
+            if self.in_model_zone and chain[-1] in DISPATCH_FNS \
+                    and (len(chain) == 1 or chain[-2] == "substrate"):
+                self._check_site(node, chain)
+            if (not self.owns_state and chain[-1] in MUTATORS
+                    and any(c in TRACKED_STATE for c in chain[:-1])):
+                self._emit("AFL03", node,
+                           f"`{'.'.join(chain)}()` mutates substrate plan/"
+                           f"dispatch state outside kernels/substrate.py — "
+                           f"use substrate.clear_plan_cache()")
+        self.generic_visit(node)
+
+    def _check_site(self, node, chain) -> None:
+        site_kw = next((kw for kw in node.keywords if kw.arg == "site"),
+                       None)
+        if site_kw is None:
+            self._emit("AFL02", node,
+                       f"substrate.{chain[-1]} dispatch without a site= "
+                       f"label — the planner cannot attribute this GEMM")
+            return
+        val = site_kw.value
+        if isinstance(val, ast.Constant) and isinstance(val.value, str):
+            from repro.core import planner    # late: avoids jax at import
+            known = planner.site_registry()
+            bad = [p for p in val.value.split("+") if p not in known]
+            if bad:
+                self._emit("AFL02", node,
+                           f"site={val.value!r} carries label(s) {bad} "
+                           f"unknown to planner.model_gemms")
+
+    # --- AFL03: subscript mutation ---------------------------------------
+    def _check_subscript_targets(self, node, targets) -> None:
+        if self.owns_state:
+            return
+        for tgt in targets:
+            chain = _subscript_base(tgt)
+            if any(c in TRACKED_STATE for c in chain):
+                self._emit("AFL03", node,
+                           f"subscript write to `{'.'.join(chain)}` "
+                           f"outside kernels/substrate.py")
+
+    def visit_Assign(self, node):
+        self._check_subscript_targets(node, node.targets)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node):
+        self._check_subscript_targets(node, [node.target])
+        self.generic_visit(node)
+
+    def visit_Delete(self, node):
+        self._check_subscript_targets(node, node.targets)
+        self.generic_visit(node)
+
+
+def lint_file(path: Path, rel: str) -> List[Finding]:
+    try:
+        tree = ast.parse(path.read_text(), filename=str(path))
+    except SyntaxError as exc:
+        return [Finding("AFL01", f"src/repro/{rel}:{exc.lineno or 0}",
+                        f"file does not parse: {exc.msg}",
+                        pass_name="lint")]
+    linter = _Linter(rel.replace(os.sep, "/"))
+    linter.visit(tree)
+    return linter.findings
+
+
+def _default_root() -> Path:
+    # src/repro/analysis/ast_lint.py -> src/repro
+    return Path(__file__).resolve().parent.parent
+
+
+def lint_paths(paths: Optional[Sequence] = None,
+               root: Optional[Path] = None) -> List[Finding]:
+    """Lint ``paths`` (files or directories; default: all of src/repro).
+    ``root`` anchors the zone-relative paths (default: the repro package
+    directory)."""
+    root = Path(root) if root is not None else _default_root()
+    if paths is None:
+        paths = [root]
+    findings: List[Finding] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            try:
+                rel = str(f.resolve().relative_to(root.resolve()))
+            except ValueError:
+                rel = f.name
+            findings.extend(lint_file(f, rel))
+    return findings
+
+
+def run() -> List[Finding]:
+    return lint_paths()

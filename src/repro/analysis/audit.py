@@ -1,0 +1,128 @@
+"""One-command substrate-contract audit: ``python -m repro.analysis.audit``.
+
+Runs the three analysis passes over the default matrix —
+
+* models:   qwen2-0.5b (dense), qwen3-moe-30b-a3b (MoE), mamba2-370m (SSM)
+* backends: xla, arrayflex, arrayflex_int8
+* meshes:   unsharded and TP2 (mesh ``(1, 2)`` on forced host devices)
+
+— at ``reduced()`` smoke sizes, plus the kernel<->timing consistency
+checks and the AST lint, and writes a machine-readable findings JSON.
+Exit code 0 iff no error-severity finding (AF008 staged-quantize warnings
+do not fail the run).
+
+``--strict`` additionally flips ``REPRO_STRICT_AUDIT`` on for the
+process, so any site-label violation raises at dispatch time while the
+traces run (the runtime twin of the AF007 finding).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+DEFAULT_MODELS = ("qwen2-0.5b", "qwen3-moe-30b-a3b", "mamba2-370m")
+DEFAULT_BACKENDS = ("xla", "arrayflex", "arrayflex_int8")
+
+
+def _force_host_devices(n: int) -> None:
+    """Must run before jax initializes its backends (same pattern as
+    launch/serve.py --host-devices)."""
+    flag = f"--xla_force_host_platform_device_count={n}"
+    cur = os.environ.get("XLA_FLAGS", "")
+    if "xla_force_host_platform_device_count" not in cur:
+        os.environ["XLA_FLAGS"] = (cur + " " + flag).strip()
+
+
+def build_report(models, backends, meshes, run_lint=True, run_kernel=True):
+    """The full audit; importable for tests (jax-touching imports are
+    deferred so the CLI can set XLA_FLAGS first)."""
+    import dataclasses
+
+    from repro.analysis import ast_lint, jaxpr_audit, kernel_check
+    from repro.analysis.findings import Finding, Report
+    from repro.configs import get_config, reduced
+
+    report = Report(meta={
+        "models": list(models), "backends": list(backends),
+        "meshes": [list(m) for m in meshes],
+        "passes": (["jaxpr"] + (["kernel"] if run_kernel else [])
+                   + (["lint"] if run_lint else [])),
+    })
+    cells = []
+    for name in models:
+        for backend in backends:
+            for mesh in meshes:
+                cfg = reduced(get_config(name))
+                cfg = dataclasses.replace(
+                    cfg, gemm_backend=backend, mesh_shape=tuple(mesh))
+                tag = f"{name}/{backend}/" + (
+                    "tp" + str(mesh[-1]) if mesh else "unsharded")
+                try:
+                    found = jaxpr_audit.audit_model(cfg, label=tag)
+                except Exception as exc:   # a trace crash is itself a finding
+                    found = [Finding(
+                        "AF001", tag,
+                        f"entry-point trace failed: {type(exc).__name__}: "
+                        f"{exc}", pass_name="jaxpr")]
+                report.extend(found)
+                cells.append({"cell": tag, "findings": len(found)})
+    report.meta["cells"] = cells
+    if run_kernel:
+        report.extend(kernel_check.run())
+    if run_lint:
+        report.extend(ast_lint.run())
+    return report
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis.audit",
+        description="Audit the substrate contract: jaxpr routing, "
+                    "kernel/timing consistency, AST lint.")
+    ap.add_argument("--models", nargs="*", default=list(DEFAULT_MODELS))
+    ap.add_argument("--backends", nargs="*", default=list(DEFAULT_BACKENDS))
+    ap.add_argument("--no-tp", action="store_true",
+                    help="skip the TP2 sharded column")
+    ap.add_argument("--no-lint", action="store_true")
+    ap.add_argument("--no-kernel", action="store_true")
+    ap.add_argument("--strict", action="store_true",
+                    help="also enable REPRO_STRICT_AUDIT while tracing")
+    ap.add_argument("--out", default=os.path.join("results", "audit",
+                                                  "audit.json"))
+    ap.add_argument("--host-devices", type=int, default=2,
+                    help="forced host device count for the TP column")
+    args = ap.parse_args(argv)
+
+    meshes = [()] if args.no_tp else [(), (1, 2)]
+    if not args.no_tp:
+        _force_host_devices(max(args.host_devices, 2))
+    if args.strict:
+        os.environ["REPRO_STRICT_AUDIT"] = "1"
+
+    report = build_report(args.models, args.backends, meshes,
+                          run_lint=not args.no_lint,
+                          run_kernel=not args.no_kernel)
+
+    os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+    with open(args.out, "w") as fh:
+        json.dump(report.to_dict(), fh, indent=2)
+    for f in report.errors:
+        print(f)
+    # warnings are expected in bulk (AF008 per staged weight); tally per
+    # code here, full list in the JSON report
+    tally: dict = {}
+    for f in report.warnings:
+        tally[f.code] = tally.get(f.code, 0) + 1
+    from repro.analysis.findings import CODES
+    for code in sorted(tally):
+        print(f"[{code}][warning] x{tally[code]}: {CODES[code][1]}")
+    print(f"{'OK' if report.ok else 'FAIL'}: {len(report.errors)} error(s), "
+          f"{len(report.warnings)} warning(s)")
+    print(f"report: {args.out}")
+    return report.exit_code
+
+
+if __name__ == "__main__":
+    sys.exit(main())

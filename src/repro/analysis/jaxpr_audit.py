@@ -1,0 +1,247 @@
+"""Jaxpr auditor: trace the lm entry points and verify GEMM routing.
+
+For each (config, backend, entry-point) cell the auditor traces the jitted
+computation to a closed jaxpr with ``jax.make_jaxpr`` and walks every
+equation (recursing through pjit/scan/shard_map/remat/pallas_call inner
+jaxprs).  Checks:
+
+* **AF001** every ``dot_general``/``conv_general_dilated`` must be
+  attributable — via its traceback frames — to the substrate dispatch
+  layer or an explicit :data:`repro.analysis.contract.ALLOWLIST` entry;
+* **AF002** every ``psum`` on a substrate contraction path (and, under a
+  quantizing backend, every float psum anywhere) must be fp32;
+* **AF003/AF008** ``convert_element_type`` to int8 on a weight-shaped
+  (ndim >= 2) operand inside the trace: through
+  ``substrate.quantize_weight`` it is the *known* staged-quantization of
+  the ROADMAP W8A8 item (warning AF008); anywhere else it is a rogue
+  re-quantization (error AF003);
+* **AF004** every float scratch ref of a ``pallas_call`` (the carry-save
+  accumulators) must be fp32;
+* **AF007** every site label recorded in ``substrate.DISPATCH_COUNTS``
+  during the trace must be known to ``planner.model_gemms``
+  (``planner.site_registry``), and the labels this config's trace records
+  must belong to this config's own GEMM walk.
+"""
+from __future__ import annotations
+
+from typing import Iterator, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis import contract
+from repro.analysis.findings import Finding
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import planner
+from repro.kernels import substrate
+from repro.models import lm
+
+_CONTRACTIONS = ("dot_general", "conv_general_dilated")
+
+
+def _inner_jaxprs(eqn) -> Iterator:
+    """Every jaxpr nested in an equation's params (pjit/scan/shard_map/
+    remat/custom_* carry ClosedJaxpr or Jaxpr values; pallas_call handled
+    separately for scratch analysis)."""
+    for val in eqn.params.values():
+        if hasattr(val, "eqns"):
+            yield val
+        elif hasattr(val, "jaxpr") and hasattr(val.jaxpr, "eqns"):
+            yield val.jaxpr
+        elif isinstance(val, (list, tuple)):
+            for v in val:
+                if hasattr(v, "eqns"):
+                    yield v
+                elif hasattr(v, "jaxpr") and hasattr(v.jaxpr, "eqns"):
+                    yield v.jaxpr
+
+
+def iter_eqns(jaxpr) -> Iterator:
+    """Depth-first walk of every equation, recursing into nested jaxprs."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for inner in _inner_jaxprs(eqn):
+            yield from iter_eqns(inner)
+
+
+def _frames(eqn) -> List[Tuple[str, str]]:
+    tb = getattr(eqn.source_info, "traceback", None)
+    if tb is None:
+        return []
+    return [(fr.file_name, fr.function_name) for fr in tb.frames]
+
+
+def _float_dtypes(eqn):
+    out = []
+    for v in eqn.invars:
+        dt = getattr(getattr(v, "aval", None), "dtype", None)
+        if dt is not None and jnp.issubdtype(dt, jnp.floating):
+            out.append(dt)
+    return out
+
+
+def _check_pallas_scratch(eqn, label: str) -> List[Finding]:
+    """AF004: float scratch refs (the carry-save accumulators) are fp32."""
+    findings = []
+    gm = eqn.params.get("grid_mapping")
+    kj = eqn.params.get("jaxpr")
+    n_scratch = getattr(gm, "num_scratch_operands", 0)
+    if kj is None or not n_scratch:
+        return findings
+    jx = kj.jaxpr if hasattr(kj, "jaxpr") else kj
+    for ref in jx.invars[len(jx.invars) - n_scratch:]:
+        aval = getattr(ref.aval, "inner_aval", ref.aval)
+        dt = getattr(aval, "dtype", None)
+        if (dt is not None and jnp.issubdtype(dt, jnp.floating)
+                and dt != jnp.float32):
+            findings.append(Finding(
+                "AF004", label,
+                f"pallas_call float scratch accumulator is {dt}, must be "
+                f"float32 (carry-save chain of the collapsed schedule)",
+                pass_name="jaxpr"))
+    return findings
+
+
+def audit_closed_jaxpr(closed, *, quantized: bool = False,
+                       label: str = "trace") -> List[Finding]:
+    """Walk one closed jaxpr; returns AF001-AF004/AF008 findings."""
+    findings: List[Finding] = []
+    for eqn in iter_eqns(closed.jaxpr):
+        prim = eqn.primitive.name
+        if prim in _CONTRACTIONS:
+            verdict, where = contract.classify_frames(_frames(eqn))
+            if verdict == "unattributed":
+                findings.append(Finding(
+                    "AF001", f"{label} @ {where}",
+                    f"{prim} not attributable to a substrate dispatch site "
+                    f"or an ALLOWLIST entry (raw GEMM bypasses Eq.(6') "
+                    f"planning)", pass_name="jaxpr"))
+        elif prim.startswith("psum"):
+            floats = _float_dtypes(eqn)
+            bad = [dt for dt in floats if dt != jnp.float32]
+            if not bad:
+                continue
+            verdict, where = contract.classify_frames(_frames(eqn))
+            if quantized or verdict == "substrate":
+                findings.append(Finding(
+                    "AF002", f"{label} @ {where}",
+                    f"psum on {[str(d) for d in bad]} operands — sharded "
+                    f"contraction reductions must accumulate in fp32",
+                    pass_name="jaxpr"))
+        elif prim == "convert_element_type":
+            if eqn.params.get("new_dtype") != jnp.int8:
+                continue
+            shape = getattr(eqn.invars[0].aval, "shape", ())
+            if len(shape) < 2:
+                continue
+            frames = _frames(eqn)
+            staged = any(fn in ("quantize_weight", "_quantize")
+                         and contract.repro_rel(f) is not None
+                         for f, fn in frames)
+            _, where = contract.classify_frames(frames)
+            if staged:
+                findings.append(Finding(
+                    "AF008", f"{label} @ {where}",
+                    f"weight quantization of {shape} staged into the trace "
+                    f"(substrate.quantize_weight on a tracer) — re-executed "
+                    f"per compiled step until params are pre-quantized",
+                    pass_name="jaxpr"))
+            else:
+                findings.append(Finding(
+                    "AF003", f"{label} @ {where}",
+                    f"in-trace convert_element_type to int8 on a "
+                    f"weight-shaped {shape} operand outside "
+                    f"substrate.quantize_weight (rogue re-quantization)",
+                    pass_name="jaxpr"))
+        elif prim == "pallas_call":
+            findings.extend(_check_pallas_scratch(eqn, label))
+    return findings
+
+
+def check_recorded_sites(cfg: Optional[ModelConfig] = None,
+                         label: str = "trace",
+                         counts=None) -> List[Finding]:
+    """AF007 over ``substrate.DISPATCH_COUNTS``: every recorded label must
+    be planner-known; with a ``cfg``, labels must also belong to that
+    config's own ``model_gemms`` walk (plus the extra dispatch sites)."""
+    known = planner.site_registry()
+    if cfg is not None:
+        own = set(planner.EXTRA_DISPATCH_SITES)
+        for shape in (ShapeConfig("audit_train", 64, 2, "train"),
+                      ShapeConfig("audit_decode", 64, 2, "decode")):
+            own.update(g.name for g in planner.model_gemms(cfg, shape))
+    else:
+        own = known
+    findings = []
+    counts = substrate.DISPATCH_COUNTS if counts is None else counts
+    for site in counts:
+        for part in site.split("+"):
+            if part not in known:
+                findings.append(Finding(
+                    "AF007", f"{label} @ site={site!r}",
+                    f"dispatch label {part!r} unknown to "
+                    f"planner.model_gemms", pass_name="jaxpr"))
+            elif part not in own:
+                findings.append(Finding(
+                    "AF007", f"{label} @ site={site!r}",
+                    f"dispatch label {part!r} is not in this config's own "
+                    f"GEMM walk", pass_name="jaxpr"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# entry-point tracing
+
+def _trace_entries(cfg: ModelConfig):
+    """(entry_name, thunk) pairs; each thunk returns a ClosedJaxpr."""
+    B, S = 2, 8
+    key = jax.random.PRNGKey(0)
+    params = lm.init_params(cfg, key)
+    tokens = jnp.zeros((B, S), jnp.int32)
+    batch = {"tokens": tokens}
+
+    def trace_forward():
+        return jax.make_jaxpr(
+            lambda p, b: lm.forward(cfg, p, b))(params, batch)
+
+    cache = lm.init_cache(cfg, B, S)
+    token = jnp.zeros((B,), jnp.int32)
+    pos = jnp.int32(1)
+
+    def trace_decode():
+        return jax.make_jaxpr(
+            lambda p, c, t, q: lm.decode_step(cfg, p, c, t, q))(
+                params, cache, token, pos)
+
+    entries = [("forward", trace_forward), ("decode_step", trace_decode)]
+
+    if lm.supports_batched_prefill(cfg):
+        ptoks = jnp.zeros((B, 4), jnp.int32)
+        ppos = jnp.zeros((B,), jnp.int32)
+        lens = jnp.full((B,), 4, jnp.int32)
+
+        def trace_prefill():
+            return jax.make_jaxpr(
+                lambda p, c, t, q, n: lm.prefill_step(cfg, p, c, t, q, n))(
+                    params, cache, ptoks, ppos, lens)
+
+        entries.append(("prefill_step", trace_prefill))
+    return entries
+
+
+def audit_model(cfg: ModelConfig, label: str = "") -> List[Finding]:
+    """Trace forward/decode_step/prefill_step for ``cfg`` and run every
+    jaxpr check plus the dispatch-site cross-check.  ``cfg`` carries the
+    backend (``gemm_backend``) and mesh (``mesh_shape``) under audit."""
+    label = label or f"{cfg.name}/{cfg.gemm_backend}"
+    quantized = cfg.gemm_backend == "arrayflex_int8"
+    findings: List[Finding] = []
+    for entry, thunk in _trace_entries(cfg):
+        substrate.clear_plan_cache()     # fresh site log per entry
+        closed = thunk()
+        cell = f"{label}/{entry}"
+        findings.extend(audit_closed_jaxpr(closed, quantized=quantized,
+                                           label=cell))
+        findings.extend(check_recorded_sites(cfg, label=cell))
+    substrate.clear_plan_cache()
+    return findings

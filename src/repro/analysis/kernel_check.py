@@ -1,0 +1,267 @@
+"""Kernel <-> timing-model consistency checker.
+
+Two static checks, no kernel execution:
+
+* **AF005, epilogue pricing** — ``arrayflex_gemm.store_phase`` is the
+  single definition of the carry-propagate boundary math (both Pallas
+  kernels call it on their accumulator refs).  For every valid
+  ``Epilogue`` spec x quantization, trace it with ``jax.make_jaxpr`` and
+  *count the boundary vector ops actually staged* (bias adds, gate
+  multiply, dequant multiplies, activation) by tracking operand
+  provenance through the jaxpr.  The count must equal what the Eq.(5')
+  timing term prices: ``Epilogue.ops`` plus ``Epilogue.contractions``
+  dequant multiplies on a quantizing backend (the ``dequant_ops`` term of
+  ``_plan_gemm_cached``).  A fused op added to the kernel store without
+  repricing — or priced without being executed — fails here.
+
+* **AF006, plan-key completeness** — every ``GemmCall``/``BackendInfo``
+  field must be covered by the ``_plan_gemm_cached`` key or declared
+  plan-irrelevant in ``substrate.CALL_FIELD_KEYING`` /
+  ``BACKEND_FIELD_KEYING``; the declarations must reference real
+  ``Epilogue``/``BackendInfo`` attributes; ``Epilogue``/``ShardSig`` key
+  components must compare/hash on all fields; and the cached planner's
+  signature must be exactly ``PLAN_KEY_PARAMS``.  Adding a field that
+  changes execution without deciding its keying story is caught here,
+  before it aliases cached plans.
+"""
+from __future__ import annotations
+
+import dataclasses
+import inspect
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.analysis.findings import Finding
+from repro.kernels import substrate
+from repro.kernels.arrayflex_gemm import store_phase
+
+_NONLINEAR = frozenset({"logistic", "tanh", "erf", "exp", "rsqrt", "cbrt"})
+_CALL_JAXPR_KEYS = ("call_jaxpr", "jaxpr")
+
+
+# ---------------------------------------------------------------------------
+# AF005: provenance-counted boundary ops vs Epilogue.ops pricing
+
+class _OpCount:
+    def __init__(self):
+        self.bias_adds = 0
+        self.bias2_adds = 0
+        self.gate_muls = 0
+        self.dequant_muls = 0
+        self.nonlinear = False
+
+    @property
+    def total(self) -> int:
+        return (self.bias_adds + self.bias2_adds + self.gate_muls
+                + int(self.nonlinear))
+
+
+def _prov_of(prov, atom):
+    """Provenance set of a jaxpr atom (unhashable Literals have none)."""
+    try:
+        return prov.get(atom, frozenset())
+    except TypeError:
+        return frozenset()
+
+
+def _walk_count(jaxpr, prov, count: _OpCount) -> None:
+    for eqn in jaxpr.eqns:
+        sources = [_prov_of(prov, v) for v in eqn.invars]
+        union = frozenset().union(*sources) if sources else frozenset()
+        name = eqn.primitive.name
+        inner = next((eqn.params[k] for k in _CALL_JAXPR_KEYS
+                      if hasattr(eqn.params.get(k), "jaxpr")
+                      or hasattr(eqn.params.get(k), "eqns")), None)
+        if inner is not None:
+            ij = inner.jaxpr if hasattr(inner, "jaxpr") else inner
+            sub = dict(zip(ij.invars, sources))
+            for cv in ij.constvars:
+                sub[cv] = frozenset()
+            _walk_count(ij, sub, count)
+            for ov, iv in zip(eqn.outvars, ij.outvars):
+                prov[ov] = _prov_of(sub, iv)
+            continue
+        if name == "add":
+            # one operand IS the bias vector (exactly-{bias} provenance);
+            # downstream adds merely inherit bias provenance and are the
+            # activation's internal arithmetic, not a boundary op
+            if any(s == {"bias"} for s in sources):
+                count.bias_adds += 1
+            elif any(s == {"bias2"} for s in sources):
+                count.bias2_adds += 1
+        elif name == "mul":
+            if any(s in ({"w_scale"}, {"w2_scale"}) for s in sources):
+                count.dequant_muls += 1
+            elif (any("y2" in s for s in sources)
+                  and any("y2" not in s and "y" in s for s in sources)):
+                count.gate_muls += 1
+        elif name in _NONLINEAR:
+            count.nonlinear = True
+        for ov in eqn.outvars:
+            prov[ov] = union
+
+
+def _count_store_ops(store_fn: Callable, ep: substrate.Epilogue,
+                     quant: bool, n: int = 8) -> _OpCount:
+    """Trace ``store_fn`` on resolved-accumulator avals for ``ep`` and
+    count the boundary ops it stages."""
+    row = jnp.zeros((1, n), jnp.float32)
+    vec = jnp.zeros((n,), jnp.float32)
+    operands = {"y": row}
+    if ep.dual:
+        operands["y2"] = row
+    if quant:
+        operands["w_scale"] = vec
+        if ep.dual:
+            operands["w2_scale"] = vec
+    if ep.bias:
+        operands["bias"] = vec
+    if ep.bias2:
+        operands["bias2"] = vec
+    names = list(operands)
+    closed = jax.make_jaxpr(
+        lambda *args: store_fn(activation=ep.activation,
+                               **dict(zip(names, args))))(*operands.values())
+    prov = {v: frozenset({nm})
+            for v, nm in zip(closed.jaxpr.invars, names)}
+    count = _OpCount()
+    _walk_count(closed.jaxpr, prov, count)
+    return count
+
+
+def _valid_epilogues():
+    for kind in substrate.EPILOGUE_KINDS:
+        dual = kind == "swiglu"
+        for bias in (False, True):
+            for bias2 in ((False, True) if dual else (False,)):
+                yield substrate.Epilogue(kind=kind, bias=bias, bias2=bias2)
+
+
+def check_epilogue_pricing(
+        store_fn: Callable = store_phase,
+        priced_ops: Optional[Callable] = None) -> List[Finding]:
+    """AF005 over every valid Epilogue spec x quantization.
+
+    ``priced_ops(ep, quant)`` is what the timing model charges at the
+    collapsed-block boundary (default: the ``_plan_gemm_cached`` formula
+    minus the shard reduce term, which has no kernel-side op to count).
+    """
+    if priced_ops is None:
+        def priced_ops(ep, quant):
+            return ep.ops + (ep.contractions if quant else 0)
+    findings = []
+    for ep in _valid_epilogues():
+        for quant in (False, True):
+            count = _count_store_ops(store_fn, ep, quant)
+            measured = count.total + count.dequant_muls
+            priced = priced_ops(ep, quant)
+            if measured != priced:
+                findings.append(Finding(
+                    "AF005",
+                    f"store_phase[kind={ep.kind}, bias={ep.bias}, "
+                    f"bias2={ep.bias2}, quant={quant}]",
+                    f"kernel store stages {measured} boundary op(s) "
+                    f"(bias={count.bias_adds}+{count.bias2_adds}, "
+                    f"gate={count.gate_muls}, dequant={count.dequant_muls}, "
+                    f"act={int(count.nonlinear)}) but the Eq.(5') pricing "
+                    f"charges {priced}", pass_name="kernel"))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# AF006: plan-cache key completeness
+
+def _field_names(cls) -> set:
+    return {f.name for f in dataclasses.fields(cls)}
+
+
+def check_plan_key(
+        call_keying=None, backend_keying=None, key_params=None,
+        plan_fn=None, call_cls=None, backend_cls=None,
+        epilogue_cls=None, shard_cls=None) -> List[Finding]:
+    """AF006: the declared keying metadata must exactly cover the
+    dataclasses, reference real attributes, and match the cached
+    planner's actual signature.  All arguments default to the live
+    ``substrate`` objects; tests override them to seed drift.
+    """
+    call_keying = substrate.CALL_FIELD_KEYING if call_keying is None \
+        else call_keying
+    backend_keying = substrate.BACKEND_FIELD_KEYING if backend_keying is None \
+        else backend_keying
+    key_params = substrate.PLAN_KEY_PARAMS if key_params is None \
+        else key_params
+    plan_fn = substrate._plan_gemm_cached if plan_fn is None else plan_fn
+    call_cls = substrate.GemmCall if call_cls is None else call_cls
+    backend_cls = substrate.BackendInfo if backend_cls is None else backend_cls
+    epilogue_cls = substrate.Epilogue if epilogue_cls is None else epilogue_cls
+    shard_cls = substrate.ShardSig if shard_cls is None else shard_cls
+
+    findings = []
+
+    def af006(where, msg):
+        findings.append(Finding("AF006", where, msg, pass_name="kernel"))
+
+    # (1) GemmCall fields <-> CALL_FIELD_KEYING, exactly
+    call_fields = _field_names(call_cls)
+    for f in sorted(call_fields - set(call_keying)):
+        af006(f"GemmCall.{f}",
+              "field has no keying declaration in CALL_FIELD_KEYING — "
+              "decide whether it must enter the plan key or is "
+              "plan-irrelevant per-call data")
+    for f in sorted(set(call_keying) - call_fields):
+        af006(f"CALL_FIELD_KEYING[{f!r}]",
+              "declaration references a field GemmCall no longer has")
+
+    # (2) declarations must point at real key-side attributes
+    for f, decl in call_keying.items():
+        kind = decl.split(":", 1)[0].strip()
+        if kind == "epilogue":
+            attr = decl.split(":", 1)[1].split()[0].strip()
+            if not hasattr(epilogue_cls, attr) \
+                    and attr not in _field_names(epilogue_cls):
+                af006(f"CALL_FIELD_KEYING[{f!r}]",
+                      f"claims coverage via Epilogue.{attr}, which does "
+                      f"not exist")
+        elif kind == "backend":
+            attr = decl.split(":", 1)[1].split()[0].strip()
+            if attr not in _field_names(backend_cls):
+                af006(f"CALL_FIELD_KEYING[{f!r}]",
+                      f"claims coverage via BackendInfo.{attr}, which "
+                      f"does not exist")
+        elif kind != "operand":
+            af006(f"CALL_FIELD_KEYING[{f!r}]",
+                  f"unknown keying kind {kind!r} (want epilogue:/backend:/"
+                  f"operand:)")
+
+    # (3) BackendInfo fields <-> BACKEND_FIELD_KEYING, exactly
+    backend_fields = _field_names(backend_cls)
+    for f in sorted(backend_fields - set(backend_keying)):
+        af006(f"BackendInfo.{f}",
+              "field has no keying declaration in BACKEND_FIELD_KEYING")
+    for f in sorted(set(backend_keying) - backend_fields):
+        af006(f"BACKEND_FIELD_KEYING[{f!r}]",
+              "declaration references a field BackendInfo no longer has")
+
+    # (4) cached planner signature == the declared key, in order
+    target = inspect.unwrap(plan_fn)
+    params = tuple(inspect.signature(target).parameters)
+    if params != tuple(key_params):
+        af006("_plan_gemm_cached",
+              f"cache-key signature {params} != declared PLAN_KEY_PARAMS "
+              f"{tuple(key_params)}")
+
+    # (5) hashable key components must compare on every field
+    for cls in (epilogue_cls, shard_cls):
+        for f in dataclasses.fields(cls):
+            if not f.compare:
+                af006(f"{cls.__name__}.{f.name}",
+                      "field is excluded from __eq__/__hash__ but the "
+                      "class is a plan-cache key component — two specs "
+                      "differing only here would alias one plan")
+    return findings
+
+
+def run() -> List[Finding]:
+    return check_epilogue_pricing() + check_plan_key()

@@ -7,8 +7,7 @@ dataclasses so they hash, print, and round-trip through the launcher CLI.
 from __future__ import annotations
 
 import dataclasses
-import math
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Tuple
 
 

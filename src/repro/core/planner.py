@@ -19,8 +19,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from dataclasses import dataclass, field
-from typing import List, Optional
+from dataclasses import dataclass
+from typing import List
 
 from repro.configs.base import ModelConfig, ShapeConfig, SSMConfig
 from repro.core import timing
@@ -263,6 +263,38 @@ def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
 def plan_model(cfg: ModelConfig, shape: ShapeConfig, R: int = 128,
                C: int = 128, tp: TimingParams = DEFAULT_TIMING) -> dict:
     return plan_network(model_gemms(cfg, shape), R, C, tp)
+
+
+# ---------------------------------------------------------------------------
+# dispatch-site registry (the substrate <-> planner naming contract)
+
+# Dispatch sites the runtime labels but ``model_gemms`` does not walk:
+#   frontend.img / frontend.audio — the VLM/audio frontend projections run
+#     once per request, outside the per-step GEMM walk the analytic table
+#     models (they are not part of any shape cell's steady-state cost);
+#   mlp.wi — the biased gelu MLP variant nn.layers.gelu_mlp offers; no
+#     registered arch uses it, but its dispatch label is contracted here so
+#     the layer stays auditable.
+EXTRA_DISPATCH_SITES = frozenset({"frontend.img", "frontend.audio",
+                                  "mlp.wi"})
+
+
+@functools.lru_cache(maxsize=None)
+def site_registry() -> frozenset:
+    """Every site label a substrate dispatch may legally carry: the union
+    of ``model_gemms`` names over all registered archs (train + decode
+    shapes, so every family branch is walked) plus
+    :data:`EXTRA_DISPATCH_SITES`.  This is the single source of truth the
+    strict-audit runtime check (``substrate._record``) and the jaxpr
+    auditor validate dispatch labels against."""
+    from repro.configs import ARCHS        # late: configs -> planner cycle
+    names = set(EXTRA_DISPATCH_SITES)
+    shapes = (ShapeConfig("audit_train", 64, 2, "train"),
+              ShapeConfig("audit_decode", 64, 2, "decode"))
+    for cfg in ARCHS.values():
+        for shape in shapes:
+            names.update(g.name for g in model_gemms(cfg, shape))
+    return frozenset(names)
 
 
 # ---------------------------------------------------------------------------

@@ -20,7 +20,7 @@ from __future__ import annotations
 from dataclasses import dataclass
 
 from repro.core.timing import TimingParams, DEFAULT_TIMING, \
-    total_cycles, total_cycles_conventional, t_abs_ps, t_abs_conventional_ps
+    t_abs_ps, t_abs_conventional_ps
 
 
 @dataclass(frozen=True)

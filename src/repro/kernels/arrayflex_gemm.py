@@ -82,6 +82,28 @@ def apply_epilogue(y, y2=None, bias=None, bias2=None, activation="none"):
     return out
 
 
+def store_phase(y, y2=None, w_scale=None, w2_scale=None, bias=None,
+                bias2=None, activation="none"):
+    """The carry-propagate boundary math, in execution order: dequant the
+    resolved fp32 accumulator(s), then the fused epilogue.
+
+    This is the SINGLE definition of what the kernel store applies —
+    ``_kernel``/``_expert_kernel`` call it on their accumulator refs, and
+    ``analysis.kernel_check`` traces it to count the boundary ops actually
+    executed against the ``Epilogue.ops`` pricing (Eq. 5' ``e``), so the
+    timing model and the datapath cannot drift apart silently.
+    """
+    if w_scale is not None:
+        y = y * w_scale.astype(jnp.float32)
+    if y2 is not None and w2_scale is not None:
+        y2 = y2 * w2_scale.astype(jnp.float32)
+    return apply_epilogue(
+        y, y2,
+        None if bias is None else bias.astype(jnp.float32),
+        None if bias2 is None else bias2.astype(jnp.float32),
+        activation)
+
+
 # ---------------------------------------------------------------------------
 # single-GEMM kernel (optionally dual-contraction) with fused epilogue
 
@@ -144,16 +166,13 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
 
     @pl.when(pl.program_id(2) == n_steps - 1)
     def _store():                      # carry-propagate: resolve the fp32
-        y = acc_ref[...]               # accumulator(s), dequant, fuse the
-        y2 = acc2_ref[...] if dual else None   # epilogue, cast/store ONCE
-        if quant:
-            y = y * s_ref[...].astype(jnp.float32)
-            if dual:
-                y2 = y2 * s2_ref[...].astype(jnp.float32)
-        out = apply_epilogue(
-            y, y2,
-            b_ref[...].astype(jnp.float32) if has_b else None,
-            b2_ref[...].astype(jnp.float32) if has_b2 else None,
+        out = store_phase(             # accumulator(s), dequant, fuse the
+            acc_ref[...],              # epilogue, cast/store ONCE
+            acc2_ref[...] if dual else None,
+            s_ref[...] if quant else None,
+            s2_ref[...] if (quant and dual) else None,
+            b_ref[...] if has_b else None,
+            b2_ref[...] if has_b2 else None,
             activation)
         o_ref[...] = out.astype(o_ref.dtype)
 
@@ -305,9 +324,8 @@ def _expert_kernel(*refs, k_collapse: int, n_steps: int, quant: bool):
 
     @pl.when(pl.program_id(3) == n_steps - 1)
     def _store():                      # carry-propagate: resolve, dequant,
-        y = acc_ref[...]               # cast once
-        if quant:
-            y = y * s_ref[0].astype(jnp.float32)
+        y = store_phase(acc_ref[...],  # cast once
+                        w_scale=s_ref[0] if quant else None)
         o_ref[0] = y.astype(o_ref.dtype)
 
 

@@ -8,7 +8,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config, get_shape, cell_is_runnable
 from repro.launch.mesh import make_production_mesh
@@ -109,6 +108,8 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         t_compile = time.time() - t0
     mem = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):      # jax >= 0.4.3x: one dict per program
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     if save_hlo:
         with open(save_hlo, "w") as f:

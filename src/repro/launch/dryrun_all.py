@@ -17,7 +17,7 @@ import subprocess
 import sys
 import time
 
-from repro.configs import ARCHS, SHAPES, cell_is_runnable
+from repro.configs import ARCHS, SHAPES
 
 RESULTS_DIR = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
 

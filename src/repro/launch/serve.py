@@ -70,12 +70,21 @@ def main(argv=None):
                     help="fan the host out to N devices before the backend "
                          "initializes (XLA_FLAGS "
                          "--xla_force_host_platform_device_count; CPU only)")
+    ap.add_argument("--strict-audit", action="store_true",
+                    help="routing violations (unknown/missing site= labels) "
+                         "raise [AF007] RuntimeErrors at dispatch time, and "
+                         "run_to_completion cross-checks every recorded "
+                         "site against planner.model_gemms (see "
+                         "docs/analysis.md)")
     args = ap.parse_args(argv)
 
     if args.host_devices:
         os.environ["XLA_FLAGS"] = (
             os.environ.get("XLA_FLAGS", "")
             + f" --xla_force_host_platform_device_count={args.host_devices}")
+
+    if args.strict_audit:
+        os.environ["REPRO_STRICT_AUDIT"] = "1"
 
     cfg = get_config(args.arch)
     if args.reduced:

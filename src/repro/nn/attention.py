@@ -16,7 +16,6 @@ products of a step in ONE expert-batched kernel launch.
 """
 from __future__ import annotations
 
-import functools
 import math
 
 import jax

@@ -174,9 +174,9 @@ def gelu_mlp(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
         wi = wi.astype(compute_dtype)
         x = x.astype(compute_dtype)
     h = substrate.gemm(x, wi, bias=p["wi"].get("b"), epilogue="gelu",
-                       backend=backend, interpret=interpret)
-    return linear(p["wo"], h, compute_dtype, backend=backend,
-                  interpret=interpret)
+                       site="mlp.wi", backend=backend, interpret=interpret)
+    return linear(p["wo"], h, compute_dtype, site="mlp.wo",
+                  backend=backend, interpret=interpret)
 
 
 # ---------------------------------------------------------------- loss

@@ -11,7 +11,6 @@ parameters are sharded over `axis_name` (stage i's params live on shard i).
 """
 from __future__ import annotations
 
-from functools import partial
 
 import jax
 import jax.numpy as jnp

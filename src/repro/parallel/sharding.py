@@ -14,7 +14,6 @@ from __future__ import annotations
 
 import contextvars
 import functools
-from typing import Optional
 
 import jax
 import numpy as np

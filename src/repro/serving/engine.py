@@ -296,4 +296,10 @@ class ServingEngine:
                 and ticks < max_ticks:
             self.step()
             ticks += 1
+        if substrate.strict_audit_enabled():
+            # post-run routing cross-check: every site label the jit'd
+            # steps recorded must be known to planner.model_gemms ([AF007]
+            # RuntimeError otherwise) — the runtime twin of the
+            # analysis.jaxpr_audit pass
+            substrate.check_dispatch_sites()
         return ticks

@@ -1,6 +1,5 @@
 """nn.attention: chunked==dense, GQA, windows, decode-vs-prefill parity."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

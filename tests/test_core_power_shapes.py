@@ -1,7 +1,7 @@
 """Power/EDP calibration envelope + CNN GEMM-shape extraction anchors."""
 import pytest
 
-from repro.core import cnn_shapes, planner, power, timing
+from repro.core import cnn_shapes, planner, power
 
 
 def test_resnet34_paper_anchors():

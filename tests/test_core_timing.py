@@ -1,5 +1,4 @@
 """Eq.(1)-(7) latency/clock model properties."""
-import math
 
 import pytest
 from hypothesis import given, settings, strategies as st

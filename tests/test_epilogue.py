@@ -9,7 +9,6 @@ the einsum and ``moe_apply`` stays equal to ``moe_apply_reference``.
 Dispatch counts prove the fusion/batching is structural: one launch per
 MoE expert-GEMM site, one launch for the dense swiglu pair.
 """
-import os
 
 import numpy as np
 import jax

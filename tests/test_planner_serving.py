@@ -1,7 +1,6 @@
 """GEMM planner over model configs; cluster pipeline; serving engine."""
 import numpy as np
 import jax
-import pytest
 
 from repro.configs import ARCHS, SHAPES, reduced
 from repro.core import cluster_pipeline as cp

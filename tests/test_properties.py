@@ -1,6 +1,5 @@
 """Hypothesis property tests on framework invariants."""
 import numpy as np
-import jax
 import jax.numpy as jnp
 from hypothesis import given, settings, strategies as st
 

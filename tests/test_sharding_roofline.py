@@ -6,13 +6,11 @@ import textwrap
 
 import numpy as np
 import jax
-import jax.numpy as jnp
 import pytest
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.configs import ARCHS
 from repro.models import api
-from repro.parallel import sharding
 from repro.roofline import hlo as hlo_lib
 from repro.roofline import model as roof
 

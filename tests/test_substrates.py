@@ -1,12 +1,11 @@
 """Data pipeline, checkpointing, optimizer, compression, fault tolerance."""
-import os
 
 import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.checkpoint import CheckpointManager, save_pytree, load_pytree
+from repro.checkpoint import CheckpointManager
 from repro.data import DataConfig, SyntheticLM, make_pipeline
 from repro.optim import OptConfig, adamw_init, adamw_update, lr_schedule
 from repro.parallel import compression
