@@ -28,6 +28,15 @@ What is gated (and why these fields):
   interpreter pays the dequant as extra interpreted ops; the Eq.(6')
   columns carry the calibrated win).
 
+* ``paged`` section — the serving layer's paged-KV workload (five
+  requests sharing a system prompt, staggered) is deterministic
+  structure end to end: streams must stay identical across the
+  dense/paged-cold/paged-warm engines, the cold/warm prefill GEMM launch
+  counts, prefix-hit tokens, page peaks and K/V byte totals must match
+  the baseline exactly, and warm must launch strictly fewer prefill
+  GEMMs than cold (the prefix-reuse win itself).  The TTFT numbers are
+  reported but NOT gated (CPU wall time).
+
 The expert-batching wall-time ratio is reported but NOT gated: the CPU
 grid interpreter serializes the batched launch (see substrate_bench), so
 its timing is structural; its launch counts are gated instead.
@@ -141,6 +150,29 @@ def check(current: dict, baseline: dict, tolerance: float):
                     f"int8 sharded dispatch_counts changed: "
                     f"{c_sh['dispatch_counts']} != baseline "
                     f"{b_sh['dispatch_counts']}")
+
+    # --- paged: stream identity, launch/byte structure, reuse win --------
+    pgb = baseline.get("paged")
+    pgc = current.get("paged")
+    if pgb:
+        if not pgc:
+            errors.append("paged section missing from current report")
+        else:
+            if not pgc["streams_identical"]:
+                errors.append("paged/dense greedy streams diverged")
+            gd = pgc["prefill_gemm_dispatches"]
+            if gd["warm"] >= gd["cold"]:
+                errors.append(
+                    f"prefix reuse stopped cutting prefill GEMM launches: "
+                    f"warm {gd['warm']} >= cold {gd['cold']}")
+            for field in ("prefill_gemm_dispatches", "prefill_tokens",
+                          "prefix_hit_tokens", "pages_used_peak",
+                          "dense_kv_bytes", "paged_pool_bytes",
+                          "paged_used_peak_bytes", "concurrency_peak"):
+                if pgc[field] != pgb[field]:
+                    errors.append(
+                        f"paged {field} changed: {pgc[field]} != "
+                        f"baseline {pgb[field]}")
     return errors
 
 
@@ -165,6 +197,11 @@ def main(argv=None):
                f"{i8['quantize_cache']['hit_rate_after_warmup']:.0%}, "
                f"{i8['k_shift_sites']} k-shift sites"
                if i8 else "")
+    pg = current.get("paged") or {}
+    if pg:
+        gd = pg["prefill_gemm_dispatches"]
+        i8_note += (f", paged prefill GEMMs {gd['cold']}->{gd['warm']} "
+                    f"with prefix reuse")
     print(f"substrate baseline check OK: "
           f"moe launches {current['moe_expert_launches']['per_moe_layer_unrolled']}"
           f"->{current['moe_expert_launches']['per_moe_layer_now']}/layer, "

@@ -91,6 +91,115 @@ def serving_smoke():
     return serving_prefill_modes(smoke=True)
 
 
+# ---------------------------------------------------------------------------
+# paged K/V + radix prefix reuse
+
+_PAGED_MEMO = {}
+
+
+def _staggered(engine, reqs):
+    """Reuse-sensitive schedule: the first request finishes prefill (and
+    publishes its prompt pages when the prefix cache is on) before the
+    followers sharing its system prompt arrive."""
+    engine.submit(reqs[0])
+    while not reqs[0].out_tokens:
+        engine.step()
+    for r in reqs[1:]:
+        engine.submit(r)
+    engine.run_to_completion()
+
+
+def paged_section():
+    """Paged-KV measurements: the ``paged`` block of BENCH_substrate.json
+    (gated by check_substrate_baseline) plus per-run CSV rows.
+
+    Workload: five requests sharing a 32-token system prompt, submitted
+    staggered, on the reduced qwen2-0.5b.  Three engines run the same
+    schedule — dense, paged cold (no prefix cache), paged warm (radix
+    reuse) — and must emit identical greedy streams.  Launch counts,
+    page peaks and prefix-hit tokens are deterministic structure; TTFT
+    is reported but not gated (CPU wall time).  The workload is fixed
+    (no smoke variant) so the gated numbers match one baseline.
+    """
+    if "report" in _PAGED_MEMO:
+        return _PAGED_MEMO["report"]
+    cfg = reduced(get_config("qwen2-0.5b"))
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    S, page, max_new, max_batch = 64, 8, 4, 2
+    system = [2 + (j * 3) % 89 for j in range(32)]
+    prompts = [system + [40 + i, 41 + i] for i in range(5)]
+
+    def run(label, kv_pages=0, prefix=False):
+        engine = ServingEngine(cfg, params, ServeConfig(
+            max_batch=max_batch, max_seq=S, prefill_mode="batched",
+            prefill_chunk=8, kv_pages=kv_pages,
+            page_size=page if kv_pages else 0, prefix_cache=prefix))
+        reqs = [Request(prompt=p, max_new_tokens=max_new, rid=i)
+                for i, p in enumerate(prompts)]
+        _staggered(engine, reqs)
+        assert all(r.done for r in reqs)
+        st = engine.stats
+        ttfts = [r.ttft_s for r in reqs if r.ttft_s is not None]
+        row = {
+            "engine": label,
+            "kv_bytes": engine.kv_cache_bytes(),
+            "prefill_dispatches": st["prefill_dispatches"],
+            "prefill_gemm_dispatches": st["prefill_gemm_dispatches"],
+            "prefill_tokens": st["prefill_tokens"],
+            "prefix_hit_tokens": st["prefix_hit_tokens"],
+            "pages_used_peak": st["pages_used_peak"],
+            "concurrency_peak": (st["concurrency_peak"] if kv_pages
+                                 else max_batch),
+            "mean_ttft_ms": round(1e3 * sum(ttfts) / max(len(ttfts), 1), 1),
+        }
+        return row, [r.out_tokens for r in reqs]
+
+    dense_row, dense_out = run("dense")
+    cold_row, cold_out = run("paged_cold", kv_pages=32)
+    warm_row, warm_out = run("paged_warm", kv_pages=32, prefix=True)
+    page_bytes = cold_row["kv_bytes"] // 32
+    section = {
+        "config": {"page_size": page, "kv_pages": 32, "max_batch": max_batch,
+                   "max_seq": S, "requests": len(prompts),
+                   "system_prompt_tokens": len(system)},
+        "streams_identical": (cold_out == dense_out
+                              and warm_out == dense_out),
+        "dense_kv_bytes": dense_row["kv_bytes"],
+        "paged_pool_bytes": cold_row["kv_bytes"],
+        "paged_used_peak_bytes": {
+            "cold": cold_row["pages_used_peak"] * page_bytes,
+            "warm": warm_row["pages_used_peak"] * page_bytes},
+        "prefill_gemm_dispatches": {
+            "cold": cold_row["prefill_gemm_dispatches"],
+            "warm": warm_row["prefill_gemm_dispatches"]},
+        "prefill_tokens": {"cold": cold_row["prefill_tokens"],
+                           "warm": warm_row["prefill_tokens"]},
+        "prefix_hit_tokens": warm_row["prefix_hit_tokens"],
+        "pages_used_peak": {"cold": cold_row["pages_used_peak"],
+                            "warm": warm_row["pages_used_peak"]},
+        "concurrency_peak": cold_row["concurrency_peak"],
+        "mean_ttft_ms": {"dense": dense_row["mean_ttft_ms"],
+                         "cold": cold_row["mean_ttft_ms"],
+                         "warm": warm_row["mean_ttft_ms"]},
+    }
+    rows = [dense_row, cold_row, warm_row]
+    _PAGED_MEMO["report"] = (rows, section)
+    return rows, section
+
+
+def serving_paged_kv():
+    """Benchmark entry (rows, derived) — wired into benchmarks/run.py."""
+    rows, sec = paged_section()
+    gd = sec["prefill_gemm_dispatches"]
+    derived = (f"streams identical={sec['streams_identical']}; "
+               f"prefix reuse cuts prefill GEMM launches "
+               f"{gd['cold']} -> {gd['warm']} "
+               f"({sec['prefix_hit_tokens']} prefix tokens reused); "
+               f"concurrency {sec['concurrency_peak']} > "
+               f"max_batch {sec['config']['max_batch']}")
+    return rows, derived
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",

@@ -491,6 +491,11 @@ def substrate_report(smoke: bool = False):
     plan_cache = dict(substrate.plan_cache_info()._asdict())
     sharded = _sharded_section(iters)
     int8 = _int8_section(params, toks, iters, fused_iters)
+    # serving-layer section: paged K/V + radix prefix reuse (memoized in
+    # serving_bench so the run.py CSV entry and this JSON share one run);
+    # fixed workload, so the gated numbers match one committed baseline
+    from benchmarks import serving_bench
+    _, paged = serving_bench.paged_section()
 
     report = {
         "config": {"arch": "qwen2-0.5b (reduced)", "batch": B, "seq": S,
@@ -502,6 +507,7 @@ def substrate_report(smoke: bool = False):
         "moe_expert_launches": moe_launches,
         "sharded": sharded,
         "int8": int8,
+        "paged": paged,
         "equivalence": {"logits_max_abs_diff": max_diff,
                         "reference_fallbacks": 0},
         "plan_cache": plan_cache,

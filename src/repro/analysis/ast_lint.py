@@ -13,11 +13,16 @@ Three rules:
   be known to ``planner.site_registry()`` (non-literal labels — e.g. a
   forwarded parameter — are runtime-checked by strict-audit mode
   instead).
-* **AFL03** — no mutation of the substrate's plan/dispatch state
-  (``SITE_PLANS``, ``DISPATCH_COUNTS``, plan/quant caches) outside
-  ``kernels/substrate.py`` itself: external code resets through
+* **AFL03** — no mutation of owned mutable state outside its owner
+  module(s).  Two ownership groups: the substrate's plan/dispatch state
+  (``SITE_PLANS``, ``DISPATCH_COUNTS``, plan/quant caches) belongs to
+  ``kernels/substrate.py`` — external code resets through
   ``clear_plan_cache()``/``clear_quant_cache()``, never by poking the
-  dicts, so the cross-check invariants those dicts feed stay trustworthy.
+  dicts; and the paged-KV page-table/pool state (``free_pages``,
+  ``refcounts``, ``block_table``, radix node ``children``) belongs to
+  ``serving/engine.py`` + ``serving/paged.py`` — everything else reads
+  block tables but may not rewire them, so the refcount/COW invariants
+  the prefix cache depends on cannot be broken from a distance.
 """
 from __future__ import annotations
 
@@ -46,8 +51,31 @@ TRACKED_STATE = frozenset({
     "plan_collapse", "attention_plan", "_BACKENDS", "_BACKEND_INFO",
 })
 MUTATORS = frozenset({"clear", "cache_clear", "pop", "popitem", "update",
-                      "setdefault"})
+                      "setdefault", "append", "extend", "insert", "remove",
+                      "sort", "reverse"})
 STATE_OWNER = os.path.join("kernels", "substrate.py").replace(os.sep, "/")
+
+# paged-KV page-table/pool state; only the serving engine and the paged
+# data structures themselves may rewire it (PagePool refcounts, per-seq
+# block tables, radix-node children) — a stray append/subscript write
+# elsewhere breaks the refcount/COW invariants silently
+PAGED_STATE = frozenset({
+    "free_pages", "refcounts", "block_table", "children",
+})
+PAGED_OWNERS = frozenset({
+    os.path.join("serving", "engine.py").replace(os.sep, "/"),
+    os.path.join("serving", "paged.py").replace(os.sep, "/"),
+})
+
+# ownership groups: (tracked names, owner predicate key, remedy for the msg)
+STATE_GROUPS = (
+    (TRACKED_STATE, "substrate",
+     "substrate plan/dispatch state outside kernels/substrate.py — "
+     "use substrate.clear_plan_cache()"),
+    (PAGED_STATE, "paged",
+     "paged-KV page-table/pool state outside serving/engine.py + "
+     "serving/paged.py — go through PagePool/RadixCache methods"),
+)
 
 
 def _name_chain(node) -> List[str]:
@@ -70,6 +98,8 @@ class _Linter(ast.NodeVisitor):
         self.rel = rel
         self.in_model_zone = rel.startswith(MODEL_ZONES)
         self.owns_state = rel == STATE_OWNER
+        self.owned = {"substrate": self.owns_state,
+                      "paged": rel in PAGED_OWNERS}
         self.def_stack: List[str] = []
         self.findings: List[Finding] = []
 
@@ -114,12 +144,13 @@ class _Linter(ast.NodeVisitor):
             if self.in_model_zone and chain[-1] in DISPATCH_FNS \
                     and (len(chain) == 1 or chain[-2] == "substrate"):
                 self._check_site(node, chain)
-            if (not self.owns_state and chain[-1] in MUTATORS
-                    and any(c in TRACKED_STATE for c in chain[:-1])):
-                self._emit("AFL03", node,
-                           f"`{'.'.join(chain)}()` mutates substrate plan/"
-                           f"dispatch state outside kernels/substrate.py — "
-                           f"use substrate.clear_plan_cache()")
+            if chain[-1] in MUTATORS:
+                for names, owner, remedy in STATE_GROUPS:
+                    if (not self.owned[owner]
+                            and any(c in names for c in chain[:-1])):
+                        self._emit("AFL03", node,
+                                   f"`{'.'.join(chain)}()` mutates {remedy}")
+                        break
         self.generic_visit(node)
 
     def _check_site(self, node, chain) -> None:
@@ -142,14 +173,15 @@ class _Linter(ast.NodeVisitor):
 
     # --- AFL03: subscript mutation ---------------------------------------
     def _check_subscript_targets(self, node, targets) -> None:
-        if self.owns_state:
-            return
         for tgt in targets:
             chain = _subscript_base(tgt)
-            if any(c in TRACKED_STATE for c in chain):
-                self._emit("AFL03", node,
-                           f"subscript write to `{'.'.join(chain)}` "
-                           f"outside kernels/substrate.py")
+            for names, owner, remedy in STATE_GROUPS:
+                if (not self.owned[owner]
+                        and any(c in names for c in chain)):
+                    self._emit("AFL03", node,
+                               f"subscript write to `{'.'.join(chain)}` "
+                               f"mutates {remedy}")
+                    break
 
     def visit_Assign(self, node):
         self._check_subscript_targets(node, node.targets)

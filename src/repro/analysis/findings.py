@@ -37,8 +37,10 @@ CODES: Dict[str, tuple] = {
                        "serving/ outside the explicit allowlist"),
     "AFL02": ("error", "substrate dispatch without a site= label, or with "
                        "a label unknown to the planner registry"),
-    "AFL03": ("error", "plan-cache mutation outside clear_plan_cache/"
-                       "clear_quant_cache/register_backend"),
+    "AFL03": ("error", "owned mutable state touched outside its owner "
+                       "module: substrate plan/dispatch caches outside "
+                       "kernels/substrate.py, or paged-KV page-table/pool "
+                       "state outside serving/engine.py+paged.py"),
 }
 
 

@@ -192,11 +192,13 @@ def check_recorded_sites(cfg: Optional[ModelConfig] = None,
 # ---------------------------------------------------------------------------
 # entry-point tracing
 
-def _trace_entries(cfg: ModelConfig):
+def _trace_entries(cfg: ModelConfig, *, prequantize: bool = False):
     """(entry_name, thunk) pairs; each thunk returns a ClosedJaxpr."""
     B, S = 2, 8
     key = jax.random.PRNGKey(0)
     params = lm.init_params(cfg, key)
+    if prequantize:
+        params = lm.prequantize_params(cfg, params)
     tokens = jnp.zeros((B, S), jnp.int32)
     batch = {"tokens": tokens}
 
@@ -229,14 +231,22 @@ def _trace_entries(cfg: ModelConfig):
     return entries
 
 
-def audit_model(cfg: ModelConfig, label: str = "") -> List[Finding]:
+def audit_model(cfg: ModelConfig, label: str = "", *,
+                prequantize: bool = False) -> List[Finding]:
     """Trace forward/decode_step/prefill_step for ``cfg`` and run every
     jaxpr check plus the dispatch-site cross-check.  ``cfg`` carries the
-    backend (``gemm_backend``) and mesh (``mesh_shape``) under audit."""
+    backend (``gemm_backend``) and mesh (``mesh_shape``) under audit.
+
+    ``prequantize`` audits the serving configuration: the param tree is
+    pre-quantized via ``lm.prequantize_params`` so int8 codes enter the
+    trace as constants — a quantizing backend should then emit zero
+    AF008 staged-quantization warnings (the serving engine dispatches
+    this tree; the default ``False`` audits the raw-tree path, which is
+    expected to carry AF008)."""
     label = label or f"{cfg.name}/{cfg.gemm_backend}"
     quantized = cfg.gemm_backend == "arrayflex_int8"
     findings: List[Finding] = []
-    for entry, thunk in _trace_entries(cfg):
+    for entry, thunk in _trace_entries(cfg, prequantize=prequantize):
         substrate.clear_plan_cache()     # fresh site log per entry
         closed = thunk()
         cell = f"{label}/{entry}"

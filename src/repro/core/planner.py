@@ -302,7 +302,8 @@ def site_registry() -> frozenset:
 
 def attention_plan(seq_len: int, kv_len: int,
                    choices=(256, 512, 1024, 2048, 4096),
-                   step_overhead: float = 1.0, per_elem: float = 1.0 / 1024):
+                   step_overhead: float = 1.0, per_elem: float = 1.0 / 1024,
+                   waste: float = 0.0):
     """Pick the KV chunk size: minimize steps * (overhead + work-per-step),
     the Eq.(6) structure with kc as the collapse factor.  Costs are in
     arbitrary units; overhead models the per-step fixed latency (dispatch,
@@ -314,14 +315,20 @@ def attention_plan(seq_len: int, kv_len: int,
     Ragged ``kv_len`` is costed exactly: ``floor(kv_len/kc)`` full chunks
     plus one remainder chunk that only pays for the elements it covers, so
     every choice competes on its true ceil-step cost (no candidate is
-    skipped, no uncosted fallback)."""
+    skipped, no uncosted fallback).
+
+    ``waste`` prices the allocation granularity of the choice: the trailing
+    ``ceil(kv_len/kc)*kc - kv_len`` elements are reserved but never touched.
+    At 0 (chunk planning) the term vanishes — a scan chunk costs nothing
+    when skipped; for K/V *page* planning (:func:`page_plan`) those elements
+    are resident pool memory and compete against per-step overhead."""
     return _attention_plan_cached(seq_len, kv_len, tuple(choices),
-                                  step_overhead, per_elem)
+                                  step_overhead, per_elem, waste)
 
 
 @functools.lru_cache(maxsize=None)
 def _attention_plan_cached(seq_len, kv_len, choices, step_overhead,
-                           per_elem):
+                           per_elem, waste=0.0):
     if not choices:
         raise ValueError("attention_plan needs at least one chunk choice")
     best, best_cost = None, float("inf")
@@ -331,6 +338,9 @@ def _attention_plan_cached(seq_len, kv_len, choices, step_overhead,
         cost = full * (step_overhead + per_elem * kc_eff * seq_len)
         if rem:
             cost += step_overhead + per_elem * rem * seq_len
+        if waste:
+            alloc = (full + (1 if rem else 0)) * kc_eff
+            cost += waste * per_elem * (alloc - kv_len)
         if cost < best_cost:
             best, best_cost = kc_eff, cost
     return best
@@ -338,3 +348,38 @@ def _attention_plan_cached(seq_len, kv_len, choices, step_overhead,
 
 attention_plan.cache_info = _attention_plan_cached.cache_info
 attention_plan.cache_clear = _attention_plan_cached.cache_clear
+
+
+# Candidate K/V page sizes for the paged serving engine (tokens per page).
+# Powers of two so that any power-of-two max_seq is exactly tiled — the
+# engine requires page | max_seq to keep the gathered logical cache view the
+# same length as the dense cache (the bit-exactness contract).
+PAGE_SIZE_CHOICES = (8, 16, 32, 64, 128, 256)
+
+
+def page_plan(max_seq: int, expected_len: int = 0,
+              choices=PAGE_SIZE_CHOICES, step_overhead: float = 1.0,
+              per_elem: float = 1.0 / 1024, waste: float = 0.5):
+    """Pick the K/V page size with the same Eq.(6) machinery that picks the
+    attention chunk: steps = pages walked per sequence (each pays the fixed
+    block-table/gather overhead, the d_base analogue) against per-page work
+    plus the ``waste`` term — the trailing page fraction a sequence of
+    ``expected_len`` tokens reserves but never fills.  Small pages waste no
+    memory but multiply per-step overhead; one giant page is the dense
+    layout.  Shares :func:`attention_plan`'s memo, so the serving zero-miss
+    guarantee covers page planning too.
+
+    Only divisors of ``max_seq`` compete (the paged/dense bit-exactness
+    contract needs ``page * n_pages_per_seq == max_seq``); the argmin is
+    rounded up to the next divisor when ``expected_len`` clips it."""
+    expected_len = expected_len or max(1, max_seq // 2)
+    divs = tuple(c for c in choices if c <= max_seq and max_seq % c == 0)
+    if not divs:
+        return max_seq
+    kc = attention_plan(1, expected_len, choices=divs,
+                        step_overhead=step_overhead, per_elem=per_elem,
+                        waste=waste)
+    for d in divs:
+        if d >= kc:
+            return d
+    return divs[-1]

@@ -324,6 +324,68 @@ def quantize_weight(w):
     return q, s
 
 
+@jax.tree_util.register_pytree_node_class
+class QuantizedTensor:
+    """A weight pre-quantized at load time: int8 ``codes`` + fp32
+    per-output-channel ``scale`` (the :func:`_quantize` pair), packaged
+    as one pytree leaf-pair so it rides param trees through jit/scan —
+    the scan over stacked super-blocks slices codes and scale together.
+
+    ``lm.prequantize_params`` builds these once from the compute-dtype
+    cast of each weight; the dispatch (:func:`gemm` / :func:`expert_gemm`)
+    unpacks them directly instead of staging an in-trace requantize (the
+    AF008 finding).  ``astype`` is a no-op: layers cast weights to the
+    compute dtype *before* dispatch, and that cast is already baked into
+    the codes."""
+
+    __slots__ = ("codes", "scale")
+
+    def __init__(self, codes, scale):
+        self.codes = codes
+        self.scale = scale
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def shape(self):
+        return self.codes.shape
+
+    @property
+    def ndim(self):
+        return self.codes.ndim
+
+    def astype(self, dtype):
+        return self
+
+    def __repr__(self):
+        return (f"QuantizedTensor(codes={getattr(self.codes, 'shape', ())},"
+                f" scale={getattr(self.scale, 'shape', ())})")
+
+
+def prequantize(w) -> QuantizedTensor:
+    """Eagerly quantize a weight into a :class:`QuantizedTensor`.
+
+    Runs the same :func:`_quantize` the in-trace path stages (elementwise
+    round/clip plus an exact max reduction), so eager codes are bitwise
+    identical to what a compiled step would have recomputed — the
+    pre-quantized tree changes *where* quantization runs, never its
+    values."""
+    q, s = _quantize(w)
+    return QuantizedTensor(q, s)
+
+
+def backend_quantizes(name: str) -> bool:
+    """Whether the registered backend consumes int8 weights (and so a
+    pre-quantized param tree applies to it)."""
+    check_backend(name)
+    return _BACKEND_INFO[name].quantize
+
+
 def quantize_cache_info() -> Dict[str, int]:
     """hits / misses / traced counters plus the memo's current size."""
     return dict(QUANT_CACHE_STATS, size=len(_QUANT_CACHE))
@@ -497,13 +559,16 @@ def plan_gemm(M: int, N: int, T: int, backend: str = "arrayflex",
 
 @dataclass(frozen=True)
 class PlanCacheInfo:
-    """Aggregate lru stats plus the per-backend hit/miss tallies."""
+    """Aggregate lru stats plus the per-backend hit/miss tallies and the
+    ``planner.attention_plan`` memo counters (chunk/page geometry picks —
+    the serving zero-miss guarantee covers them too)."""
 
     hits: int
     misses: int
     maxsize: Optional[int]
     currsize: int
     per_backend: Dict[str, Dict[str, int]] = field(default_factory=dict)
+    attention_plan: Dict[str, int] = field(default_factory=dict)
 
     def _asdict(self):
         return dataclasses.asdict(self)
@@ -511,10 +576,13 @@ class PlanCacheInfo:
 
 def plan_cache_info() -> PlanCacheInfo:
     info = _plan_gemm_cached.cache_info()
+    ap = planner.attention_plan.cache_info()
     return PlanCacheInfo(
         hits=info.hits, misses=info.misses, maxsize=info.maxsize,
         currsize=info.currsize,
-        per_backend={b: dict(st) for b, st in PLAN_CACHE_STATS.items()})
+        per_backend={b: dict(st) for b, st in PLAN_CACHE_STATS.items()},
+        attention_plan={"hits": ap.hits, "misses": ap.misses,
+                        "currsize": ap.currsize})
 
 
 def clear_plan_cache():
@@ -813,7 +881,21 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     ep = _epilogue_spec(epilogue, w2, bias, bias2)
     w_scale = w2_scale = None
     plan_backend = backend
-    if info.quantize and site in QUANT_EXEMPT_SITES:
+    if isinstance(w, QuantizedTensor):
+        # load-time pre-quantized weight (lm.prequantize_params): unpack
+        # codes + scales directly — no in-trace requantize to stage
+        if not info.quantize:
+            raise ValueError(
+                f"site {site!r}: pre-quantized weight dispatched on "
+                f"non-quantizing backend {backend!r}")
+        if site in QUANT_EXEMPT_SITES:
+            raise ValueError(
+                f"site {site!r} is quantization-exempt but received a "
+                f"pre-quantized weight")
+        w, w_scale = w.codes, w.scale
+        if isinstance(w2, QuantizedTensor):
+            w2, w2_scale = w2.codes, w2.scale
+    elif info.quantize and site in QUANT_EXEMPT_SITES:
         # an exempt site runs fp32 weights with no dequant: price (and
         # record) it as the fp32 base so its Eq.(6') prediction matches
         # the datapath it actually executes, not the quantized one
@@ -960,7 +1042,13 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
     N_out = w.shape[-1]
     info = _BACKEND_INFO[backend]
     w_scale = None
-    if info.quantize and E and K and N_out:
+    if isinstance(w, QuantizedTensor):
+        if not info.quantize:
+            raise ValueError(
+                f"site {site!r}: pre-quantized expert bank dispatched on "
+                f"non-quantizing backend {backend!r}")
+        w, w_scale = w.codes, w.scale
+    elif info.quantize and E and K and N_out:
         w, w_scale = quantize_weight(w)
     plan = plan_gemm(N_out, K, G * C, backend)
     if shard is not None and (not _is_builtin(backend)

@@ -36,14 +36,20 @@ def phase_report(engine: ServingEngine, reqs) -> str:
     de_tps = st["decode_tokens"] / max(st["decode_time_s"], 1e-9)
     ttfts = [r.ttft_s for r in reqs if r.ttft_s is not None]
     ttft_ms = 1e3 * sum(ttfts) / max(len(ttfts), 1)
-    return (f"prefill[{engine.prefill_mode}]: {st['prefill_tokens']} tok "
-            f"in {st['prefill_time_s']:.3f}s ({pf_tps:.1f} tok/s, "
-            f"{st['prefill_dispatches']} dispatches, "
-            f"chunk={engine.prefill_chunk})\n"
-            f"decode: {st['decode_tokens']} tok in "
-            f"{st['decode_time_s']:.3f}s ({de_tps:.1f} tok/s, "
-            f"{st['decode_dispatches']} dispatches)\n"
-            f"mean TTFT: {ttft_ms:.1f} ms")
+    out = (f"prefill[{engine.prefill_mode}]: {st['prefill_tokens']} tok "
+           f"in {st['prefill_time_s']:.3f}s ({pf_tps:.1f} tok/s, "
+           f"{st['prefill_dispatches']} dispatches, "
+           f"chunk={engine.prefill_chunk})\n"
+           f"decode: {st['decode_tokens']} tok in "
+           f"{st['decode_time_s']:.3f}s ({de_tps:.1f} tok/s, "
+           f"{st['decode_dispatches']} dispatches)\n"
+           f"mean TTFT: {ttft_ms:.1f} ms")
+    if engine.paged:
+        out += (f"\npaged: peak {st['pages_used_peak']} pages, "
+                f"peak concurrency {st['concurrency_peak']}, "
+                f"prefix hits {st['prefix_hit_tokens']} tok, "
+                f"{st['prefill_gemm_dispatches']} prefill GEMM launches")
+    return out
 
 
 def main(argv=None):
@@ -58,6 +64,21 @@ def main(argv=None):
                     help="prefill chunk size (0 -> planner-chosen)")
     ap.add_argument("--prefill-mode", default="auto",
                     choices=("auto", "batched", "token"))
+    ap.add_argument("--kv-pages", type=int, default=0,
+                    help="paged K/V: physical pages in the global pool "
+                         "(incl. the scratch page); 0 keeps the dense "
+                         "(max_batch, max_seq) slot cache.  Admission then "
+                         "reserves pages, so concurrency is memory-bounded "
+                         "rather than capped at --max-batch")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="tokens per K/V page (must divide max_seq); "
+                         "0 -> planner.page_plan picks it with the Eq.(6) "
+                         "cost model")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="radix shared-prefix reuse: requests sharing a "
+                         "prompt prefix map their leading block-table "
+                         "entries to the same physical pages (paged mode "
+                         "only)")
     ap.add_argument("--gemm-backend", default="xla",
                     help="GEMM substrate backend (kernels.substrate): "
                          + " | ".join(substrate.backends()))
@@ -98,11 +119,20 @@ def main(argv=None):
         print(f"mesh: data={args.fsdp} x model={args.tp} over "
               f"{len(jax.devices())} host devices")
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if args.prefix_cache and not args.kv_pages:
+        ap.error("--prefix-cache requires --kv-pages (paged mode)")
     engine = ServingEngine(cfg, params,
                            ServeConfig(max_batch=args.max_batch,
                                        max_seq=128,
                                        prefill_mode=args.prefill_mode,
-                                       prefill_chunk=args.prefill_chunk))
+                                       prefill_chunk=args.prefill_chunk,
+                                       kv_pages=args.kv_pages,
+                                       page_size=args.page_size,
+                                       prefix_cache=args.prefix_cache))
+    if args.kv_pages:
+        print(f"paged KV: {args.kv_pages} pages x {engine.page_size} tok "
+              f"({engine.kv_cache_bytes()/1024:.0f} KiB resident K/V), "
+              f"prefix_cache={'on' if args.prefix_cache else 'off'}")
     prompts = [[2 + (i * 7 + j) % 97 for j in range(5 + i % 3)]
                for i in range(args.requests)]
     reqs = [Request(prompt=p, max_new_tokens=args.max_new,

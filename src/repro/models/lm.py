@@ -226,6 +226,113 @@ def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths):
     return out, {"k": k_cache, "v": v_cache}
 
 
+def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, block_tables):
+    """Single-token attention against the paged K/V pool.
+
+    cache: {'kp','vp'} physical pools (n_pages, page, KV, hd);
+    block_tables: (B, n_pg) int32 physical page ids per sequence.  The
+    pool is gathered into the (B, L = n_pg*page, KV, hd) logical view —
+    L equals the dense cache length by the engine's page|max_seq
+    contract — then the write, mask, softmax and QK/PV dispatches are
+    *identical* to the dense ``attn_decode`` vector-pos path, which is
+    what keeps paged and dense greedy streams bit-identical.  Only the
+    written page scatters back: the engine's sharing invariant puts every
+    write position in a uniquely-owned page (aliased scratch rows collide
+    on page 0, which live rows never attend).
+    """
+    cd = _cdtype(cfg)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    B = x.shape[0]
+    pos = jnp.asarray(pos, jnp.int32)
+    positions = jnp.broadcast_to(pos, (B,))[:, None]
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k_new = layers.apply_rope(k_new, positions, cfg.rope_theta)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    n_pg, page = bt.shape[1], cache["kp"].shape[1]
+    k_view = attn_lib.gather_pages(cache["kp"], bt)
+    v_view = attn_lib.gather_pages(cache["vp"], bt)
+    L = n_pg * page
+    slot = jnp.minimum(jnp.broadcast_to(pos, (B,)), L - 1)
+    hit = (jnp.arange(L)[None, :] == slot[:, None])[:, :, None, None]
+    k_view = jnp.where(hit, k_new.astype(cache["kp"].dtype), k_view)
+    v_view = jnp.where(hit, v_new.astype(cache["vp"].dtype), v_view)
+    out = attn_lib.decode_attention(q, k_view, v_view, pos, window=0,
+                                    backend=cfg.gemm_backend,
+                                    interpret=cfg.pallas_interpret)
+    pg_idx = slot // page
+    phys = jnp.take_along_axis(bt, pg_idx[:, None], axis=1)[:, 0]
+    KV, hd = k_view.shape[2], k_view.shape[3]
+    sel = jnp.broadcast_to(pg_idx[:, None, None, None, None],
+                           (B, 1, page, KV, hd))
+    kpage = jnp.take_along_axis(
+        k_view.reshape(B, n_pg, page, KV, hd), sel, axis=1)[:, 0]
+    vpage = jnp.take_along_axis(
+        v_view.reshape(B, n_pg, page, KV, hd), sel, axis=1)[:, 0]
+    kp = cache["kp"].at[phys].set(kpage)
+    vp = cache["vp"].at[phys].set(vpage)
+    out = layers.linear(p["wo"], out.reshape(B, 1, -1), cd, site="attn.wo",
+                        backend=cfg.gemm_backend,
+                        interpret=cfg.pallas_interpret)
+    return out, {"kp": kp, "vp": vp}
+
+
+def attn_prefill_paged(p, x, cfg: ModelConfig, cache, pos, lengths,
+                       block_tables):
+    """Chunked-prefill attention against the paged K/V pool.
+
+    The logical view is gathered exactly as in :func:`attn_decode_paged`;
+    the masked chunk scatter, causal mask and QK/PV dispatches then
+    mirror the dense ``attn_prefill`` step for step.  The whole view
+    scatters back (a chunk may span pages): rows alias only pages whose
+    gathered bytes they did not modify — shared prefix pages (writes
+    start at the page-aligned divergence point) and the scratch page —
+    so every duplicate scatter carries identical values.
+    """
+    cd = _cdtype(cfg)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    B, C = x.shape[0], x.shape[1]
+    pos = jnp.asarray(pos, jnp.int32)
+    lengths = jnp.asarray(lengths, jnp.int32)
+    positions = pos[:, None] + jnp.arange(C)[None, :]          # (B,C)
+    q = layers.apply_rope(q, positions, cfg.rope_theta)
+    k_new = layers.apply_rope(k_new, positions, cfg.rope_theta)
+    bt = jnp.asarray(block_tables, jnp.int32)
+    n_pg, page = bt.shape[1], cache["kp"].shape[1]
+    k_view = attn_lib.gather_pages(cache["kp"], bt)
+    v_view = attn_lib.gather_pages(cache["vp"], bt)
+    L = n_pg * page
+    j = jnp.arange(L)[None, :]                                 # (1,L)
+    src = j - pos[:, None]                                     # (B,L)
+    ok = (src >= 0) & (src < lengths[:, None])
+    idx = jnp.clip(src, 0, C - 1)[:, :, None, None]
+    k_view = jnp.where(
+        ok[:, :, None, None],
+        jnp.take_along_axis(k_new.astype(cache["kp"].dtype), idx, axis=1),
+        k_view)
+    v_view = jnp.where(
+        ok[:, :, None, None],
+        jnp.take_along_axis(v_new.astype(cache["vp"].dtype), idx, axis=1),
+        v_view)
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    g = H // KV
+    qg = q.reshape(B, C, KV, g, hd)
+    scale = 1.0 / math.sqrt(hd)
+    s = attn_lib.qk_scores(qg, k_view, backend=cfg.gemm_backend,
+                           interpret=cfg.pallas_interpret) * scale
+    valid = j[:, None, :] <= positions[:, :, None]             # (B,C,L)
+    s = jnp.where(valid[:, None, None], s, attn_lib.NEG_INF)
+    w = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(v_view.dtype)
+    out = attn_lib.pv_mix(w, v_view, backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret)
+    out = out.reshape(B, C, H, hd).astype(q.dtype)
+    kp = attn_lib.scatter_pages(cache["kp"], bt, k_view)
+    vp = attn_lib.scatter_pages(cache["vp"], bt, v_view)
+    out = layers.linear(p["wo"], out.reshape(B, C, -1), cd, site="attn.wo",
+                        backend=cfg.gemm_backend,
+                        interpret=cfg.pallas_interpret)
+    return out, {"kp": kp, "vp": vp}
+
+
 def cross_attn_decode(p, x, cfg: ModelConfig, cache):
     """Cross-attention against precomputed (xk, xv)."""
     cd = _cdtype(cfg)
@@ -623,6 +730,157 @@ def _prefill_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
     return constrain(logits, "logits")[:, 0], new_cache
 
 
+def supports_paged_kv(cfg: ModelConfig) -> bool:
+    """True when the paged serving path reproduces dense decoding bit for
+    bit: same gate as :func:`supports_batched_prefill` (pure causal attn +
+    dense MLP, linear cache) — mamba state, MoE routing, cross-attention
+    and sliding-window rings have no page-gather equivalence."""
+    return supports_batched_prefill(cfg)
+
+
+def _sublayer_decode_paged(p, cfg, pos_idx, x, cache, pos, bt):
+    kind = sublayer_kind(cfg, pos_idx)
+    assert kind["mixer"] == "attn" and not kind["cross"] \
+        and kind["mlp"] != "moe", "use supports_paged_kv() to gate"
+    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    out, new_cache = attn_decode_paged(p["attn"], h, cfg, cache, pos, bt)
+    x = x + out
+    if kind["mlp"] == "dense":
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                              backend=cfg.gemm_backend,
+                              interpret=cfg.pallas_interpret)
+    return x, new_cache
+
+
+def _sublayer_prefill_paged(p, cfg, pos_idx, x, cache, pos, lengths, bt):
+    kind = sublayer_kind(cfg, pos_idx)
+    assert kind["mixer"] == "attn" and not kind["cross"] \
+        and kind["mlp"] != "moe", "use supports_paged_kv() to gate"
+    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    out, new_cache = attn_prefill_paged(p["attn"], h, cfg, cache, pos,
+                                        lengths, bt)
+    x = x + out
+    if kind["mlp"] == "dense":
+        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                              backend=cfg.gemm_backend,
+                              interpret=cfg.pallas_interpret)
+    return x, new_cache
+
+
+def decode_step_paged(cfg: ModelConfig, params, cache, token, pos,
+                      block_tables):
+    """Paged twin of :func:`decode_step`: token (B,), pos (B,),
+    block_tables (B, n_pg) int32.  cache is :func:`init_paged_cache`'s
+    pytree.  Returns (logits (B,V), new_cache)."""
+    substrate.check_backend(cfg.gemm_backend)
+    with sharding.gemm_mesh_scope(cfg):
+        return _paged_step(cfg, params, cache, token[:, None], pos,
+                           None, block_tables)
+
+
+def prefill_step_paged(cfg: ModelConfig, params, cache, tokens, pos,
+                       lengths, block_tables):
+    """Paged twin of :func:`prefill_step`: tokens (B,C) right-padded,
+    pos/lengths (B,), block_tables (B, n_pg).  Returns (logits at each
+    row's last valid chunk token, new_cache)."""
+    substrate.check_backend(cfg.gemm_backend)
+    with sharding.gemm_mesh_scope(cfg):
+        return _paged_step(cfg, params, cache, tokens, pos, lengths,
+                           block_tables)
+
+
+def _paged_step(cfg, params, cache, tokens, pos, lengths, bt):
+    P = period(cfg)
+    cd = _cdtype(cfg)
+    tokens = jnp.asarray(tokens, jnp.int32)
+    C = tokens.shape[1]
+    x = layers.embed(params["embed"], tokens, cd)
+
+    def body(x, xs):
+        p_block, cache_block = xs
+        new_caches = []
+        for i in range(P):
+            if lengths is None:
+                x, nc = _sublayer_decode_paged(p_block[i], cfg, i, x,
+                                               cache_block[i], pos, bt)
+            else:
+                x, nc = _sublayer_prefill_paged(p_block[i], cfg, i, x,
+                                                cache_block[i], pos,
+                                                lengths, bt)
+            new_caches.append(nc)
+        return x, tuple(new_caches)
+
+    x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+    x = layers.rmsnorm(params["final_norm"], x, cfg.rms_eps)
+    if lengths is not None:
+        last = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, C - 1)
+        x = jnp.take_along_axis(x, last[:, None, None], axis=1)  # (B,1,d)
+    logits = _logits(cfg, params, x, cd)
+    return constrain(logits, "logits")[:, 0], new_cache
+
+
+# ---------------------------------------------------------------------------
+# pre-quantized parameter trees (load-time weight quantization)
+
+def prequantize_params(cfg: ModelConfig, params):
+    """Quantize every GEMM weight leaf once, eagerly, at load time.
+
+    Returns a param tree where each weight the quantizing backend would
+    quantize in-trace is replaced by a :class:`substrate.QuantizedTensor`
+    (int8 codes + fp32 per-output-channel scales).  The dispatch then
+    consumes the codes directly — the AF008 in-trace requantize (XLA
+    re-running abs/max/round per compiled step) disappears from the
+    jaxpr, and the hot path never touches the fp32 master weights.
+
+    Bitwise contract: quantization is applied to the *compute-dtype cast*
+    of each weight — exactly the value ``layers.linear`` hands the
+    dispatch — and ``_quantize`` is elementwise + an exact (max) reduction,
+    so eager codes equal in-trace codes bit for bit and pre-quantized
+    streams match in-trace-quantized streams exactly.
+
+    Skipped leaves mirror the dispatch rules: ``moe.router`` weights
+    (:data:`substrate.QUANT_EXEMPT_SITES` — routing must stay fp32),
+    biases, norms, mamba conv/state tensors, and the embedding lookup
+    table (tied embeddings get an extra pre-transposed ``table_q`` leaf
+    that ``layers.unembed`` prefers).  No-op (returns ``params``
+    unchanged) when ``cfg.gemm_backend`` does not quantize.
+    """
+    if not substrate.backend_quantizes(cfg.gemm_backend):
+        return params
+    cd = _cdtype(cfg)
+
+    def q(w):
+        return substrate.prequantize(w.astype(cd))
+
+    def walk(node):
+        if isinstance(node, dict):
+            out = {}
+            for k, v in node.items():
+                if isinstance(v, (dict, tuple, list)):
+                    out[k] = walk(v)
+                elif k == "w" and getattr(v, "ndim", 0) >= 2:
+                    out[k] = q(v)                      # linear weights
+                elif (k in ("wi_gate", "wi_up", "wo")
+                      and getattr(v, "ndim", 0) >= 3):
+                    out[k] = q(v)                      # MoE expert banks
+                else:
+                    out[k] = v                         # router/bias/norm/...
+            return out
+        if isinstance(node, (tuple, list)):
+            return type(node)(walk(v) for v in node)
+        return node
+
+    out = walk(params)
+    if cfg.tie_embeddings:
+        # unembed runs table.T as a GEMM weight: pre-transpose + quantize
+        t = params["embed"]["table"].astype(cd)
+        out["embed"] = dict(out["embed"],
+                            table_q=substrate.prequantize(t.T))
+    return out
+
+
 # ---------------------------------------------------------------------------
 # cache construction
 
@@ -656,3 +914,23 @@ def init_cache(cfg: ModelConfig, batch_size: int, max_seq: int,
             c["xv"] = jnp.zeros((NS, batch_size, xl, KV, hd), dtype)
         out.append(c)
     return tuple(out)
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.bfloat16):
+    """Zero-initialized paged K/V pools for ``decode_step_paged`` /
+    ``prefill_step_paged``: per layer ``{'kp','vp'}`` of shape
+    ``(NS, n_pages, page_size, KV, hd)``.  Unlike :func:`init_cache`
+    there is no batch dimension — residency is the engine's block tables,
+    so K/V memory scales with the page budget, not ``max_batch * max_seq``
+    (page 0 is the engine's scratch page)."""
+    if not supports_paged_kv(cfg):
+        raise ValueError(f"{cfg.name}: family does not support the paged "
+                         f"KV path (see supports_paged_kv)")
+    P = period(cfg)
+    NS = n_super(cfg)
+    hd, KV = cfg.resolved_head_dim, cfg.n_kv_heads
+    return tuple(
+        {"kp": jnp.zeros((NS, n_pages, page_size, KV, hd), dtype),
+         "vp": jnp.zeros((NS, n_pages, page_size, KV, hd), dtype)}
+        for _ in range(P))

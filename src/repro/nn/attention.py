@@ -210,6 +210,31 @@ def attention(q, k, v, *, causal=True, window=0, q_offset=0,
                              kv_chunk=kv_chunk)
 
 
+def gather_pages(pool, block_tables):
+    """Assemble per-sequence logical K/V views from a physical page pool.
+
+    pool: (n_pages, page, KV, D); block_tables: (B, n_pg) int32 physical
+    page ids.  Returns (B, n_pg*page, KV, D) — the contiguous cache view
+    the existing ``attn.qk``/``attn.pv`` substrate dispatches consume, so
+    a paged cache feeds the *same* GEMM plans as the dense one (the view
+    length equals the dense cache length by the engine's page|max_seq
+    contract, which is what keeps paged decoding bit-identical)."""
+    B, n_pg = block_tables.shape
+    page = pool.shape[1]
+    return pool[block_tables].reshape((B, n_pg * page) + pool.shape[2:])
+
+
+def scatter_pages(pool, block_tables, view):
+    """Inverse of :func:`gather_pages`: write logical views back into the
+    pool.  Rows may alias pages (shared prefixes, the scratch page); every
+    aliased write carries the unchanged gathered bytes, so the scatter's
+    pick-one-duplicate resolution is value-deterministic."""
+    B, n_pg = block_tables.shape
+    page = pool.shape[1]
+    blocks = view.reshape((B, n_pg, page) + pool.shape[2:])
+    return pool.at[block_tables].set(blocks)
+
+
 def decode_attention(q, k_cache, v_cache, pos, *, window=0, backend="xla",
                      interpret=None):
     """Single-token attention against a (possibly ring-buffered) KV cache.

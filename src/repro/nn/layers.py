@@ -100,8 +100,14 @@ def embed(p, ids, compute_dtype=jnp.bfloat16):
 
 
 def unembed(p, x, *, backend="xla", interpret=None):
-    """Logits against the embedding table (tied) — fp32 accumulation."""
-    w = p["table"].astype(x.dtype).T
+    """Logits against the embedding table (tied) — fp32 accumulation.
+
+    A pre-quantized tree (lm.prequantize_params) carries ``table_q``, the
+    already-transposed QuantizedTensor of the table; the lookup path keeps
+    the fp ``table``."""
+    w = p.get("table_q")
+    if w is None:
+        w = p["table"].astype(x.dtype).T
     shard = sharding.gemm_shard_ctx("unembed", math.prod(x.shape[:-1]),
                                     w.shape[0], w.shape[-1])
     return substrate.gemm(x, w, site="unembed",

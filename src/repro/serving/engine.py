@@ -29,6 +29,25 @@ kernel.
     the bit-exact baseline for equivalence tests and benchmarks.
   * ``"auto"``    — batched when the model supports it, else token.
 
+**Paged mode** (``ServeConfig.kv_pages > 0``): the dense per-slot K/V
+region is replaced by a global page pool + per-sequence block tables
+(``serving/paged.py``) and admission reserves *pages*, not slots —
+concurrency is bounded by the memory budget (``kv_pages``) instead of
+``max_batch``, which only caps how many sequences share one dispatch (the
+engine round-robins resident sequences over the ``max_batch`` rows).  The
+page size comes from ``planner.page_plan`` — the same Eq.(6) cost model
+that picks the prefill chunk — and must divide ``max_seq`` so the gathered
+logical view has the dense cache length: paged greedy streams are
+bit-identical to the dense path's.  ``prefix_cache=True`` adds the radix
+prefix cache: requests sharing a prompt prefix map their leading block
+-table entries to the same physical pages and skip the shared pages'
+prefill work entirely.
+
+A quantizing ``cfg.gemm_backend`` is served from a **pre-quantized param
+tree** (``lm.prequantize_params``): weights are quantized once at engine
+construction, so the jit'd steps consume int8 codes directly instead of
+re-running the in-trace quantize (the AF008 path) every step.
+
 Sampling: greedy or temperature; logits come back fp32 from the model.
 Greedy token streams are bit-identical across prefill modes and across
 batch compositions (per-row cache evolution is independent).
@@ -48,6 +67,7 @@ from repro.core import planner
 from repro.kernels import substrate
 from repro.models import lm
 from repro.parallel import sharding
+from repro.serving.paged import PagePool, PagedSeq, RadixCache
 
 PREFILL_CHUNK_CHOICES = (16, 32, 64, 128, 256, 512, 1024, 2048)
 
@@ -71,6 +91,10 @@ class ServeConfig:
     seed: int = 0
     prefill_mode: str = "auto"  # auto | batched | token
     prefill_chunk: int = 0      # 0 -> planner-chosen (attention_plan)
+    # --- paged K/V (0 = dense slot mode) ---------------------------------
+    kv_pages: int = 0           # physical pages in the pool (incl. scratch)
+    page_size: int = 0          # tokens per page; 0 -> planner.page_plan
+    prefix_cache: bool = False  # radix shared-prefix page reuse
 
 
 class Slot:
@@ -128,7 +152,13 @@ class ServingEngine:
         # dispatch mid-serve
         substrate.check_backend(cfg.gemm_backend)
         self.cfg = cfg
-        self.params = params
+        # Quantizing backends serve from a pre-quantized tree: weights
+        # quantize ONCE here, never inside the compiled steps (no AF008
+        # in-trace requantize; bitwise-identical streams — see
+        # lm.prequantize_params).  Non-quantizing backends pass through.
+        self.params = (lm.prequantize_params(cfg, params)
+                       if substrate.backend_quantizes(cfg.gemm_backend)
+                       else params)
         self.sc = serve_cfg
         # SPMD serving: cfg.mesh_shape activates sharded GEMM dispatch
         # inside the jit'd lm steps (the lm entry points scope the mesh
@@ -137,8 +167,6 @@ class ServingEngine:
         # with the XLA_FLAGS hint, not mid-serve.
         self.mesh = sharding.mesh_from_config(cfg)
         B, S = serve_cfg.max_batch, serve_cfg.max_seq
-        self.cache = lm.init_cache(cfg, B, S)
-        self.slots = [Slot(i) for i in range(B)]
         self.queue: List[Request] = []
         self.key = jax.random.PRNGKey(serve_cfg.seed)
         self._decode = jax.jit(
@@ -164,9 +192,63 @@ class ServingEngine:
             self._prefill = jax.jit(
                 lambda p, c, t, pos, lens: lm.prefill_step(
                     cfg, p, c, t, pos, lens))
+
+        self.paged = serve_cfg.kv_pages > 0
+        if self.paged:
+            if not lm.supports_paged_kv(cfg):
+                raise ValueError(
+                    f"{cfg.name}: model family does not support the paged "
+                    f"KV path (see lm.supports_paged_kv); use kv_pages=0")
+            if mode != "batched":
+                raise ValueError("paged serving requires the batched "
+                                 "prefill path (prefill_mode='batched' or "
+                                 "'auto' on a supporting family)")
+            # Eq.(6) again, applied to page geometry: block-table walk
+            # overhead vs trailing-page waste (planner.page_plan).
+            page = serve_cfg.page_size or planner.page_plan(S)
+            if page <= 0 or S % page:
+                raise ValueError(
+                    f"page_size={page} must divide max_seq={S}: the "
+                    f"gathered view must have the dense cache length "
+                    f"(the paged/dense bit-exactness contract)")
+            self.page_size = page
+            self.pages_per_seq = S // page
+            if serve_cfg.kv_pages < self.pages_per_seq + 1:
+                raise ValueError(
+                    f"kv_pages={serve_cfg.kv_pages}: need at least "
+                    f"{self.pages_per_seq + 1} (max_seq/page_size pages "
+                    f"for one worst-case sequence + the scratch page)")
+            self.pool = PagePool(serve_cfg.kv_pages, page)
+            self.radix = (RadixCache(page) if serve_cfg.prefix_cache
+                          else None)
+            self.cache = lm.init_paged_cache(cfg, serve_cfg.kv_pages, page)
+            self.active: List[PagedSeq] = []
+            self.slots: List[Slot] = []
+            self._rr = 0                  # decode round-robin cursor
+            self._decode_paged = jax.jit(
+                lambda p, c, t, pos, bt: lm.decode_step_paged(
+                    cfg, p, c, t, pos, bt))
+            self._prefill_paged = jax.jit(
+                lambda p, c, t, pos, lens, bt: lm.prefill_step_paged(
+                    cfg, p, c, t, pos, lens, bt))
+        else:
+            self.cache = lm.init_cache(cfg, B, S)
+            self.slots = [Slot(i) for i in range(B)]
+            self.active = []
+
+        self._prefill_launches = 0   # per-trace GEMM launches of one chunk
         self.stats = dict(prefill_dispatches=0, decode_dispatches=0,
                           prefill_tokens=0, decode_tokens=0,
-                          prefill_time_s=0.0, decode_time_s=0.0)
+                          prefill_time_s=0.0, decode_time_s=0.0,
+                          prefill_gemm_dispatches=0,
+                          pages_used_peak=0, concurrency_peak=0,
+                          prefix_hit_tokens=0)
+
+    def kv_cache_bytes(self) -> int:
+        """Resident K/V bytes (pool pages in paged mode, the dense
+        (max_batch, max_seq) region otherwise)."""
+        return int(sum(leaf.nbytes
+                       for leaf in jax.tree_util.tree_leaves(self.cache)))
 
     # ------------------------------------------------------------- intake
     def submit(self, req: Request):
@@ -180,16 +262,95 @@ class ServingEngine:
         self.queue.append(req)
 
     def _admit(self):
+        if self.paged:
+            self._admit_paged()
+            return
         now = time.perf_counter()
         for slot in self.slots:
             if slot.state == Slot.FREE and self.queue:
                 slot.assign(self.queue.pop(0), now)
+
+    def _admit_paged(self):
+        """Memory-bounded admission: FIFO-pop the queue while the pool can
+        reserve each request's worst-case page span (prompt + max_new,
+        clipped to max_seq) — minus whatever the radix prefix cache
+        already holds.  Concurrency is whatever the page budget sustains,
+        not ``max_batch``."""
+        now = time.perf_counter()
+        while self.queue:
+            req = self.queue[0]
+            target = min(len(req.prompt) + req.max_new_tokens,
+                         self.sc.max_seq)
+            need = -(-target // self.page_size)
+            shared: List[int] = []
+            if self.radix is not None and len(req.prompt) > 1:
+                # only K/V of prompt[:-1] may be borrowed: the final
+                # prompt token must run through this request's own decode
+                # to produce its first logits
+                shared = self.radix.match(req.prompt[:len(req.prompt) - 1])
+                shared = shared[:need]
+                for pg in shared:
+                    self.pool.incref(pg)   # pin before any eviction below
+            fresh = need - len(shared)
+            if fresh > self.pool.n_free and self.radix is not None:
+                self.radix.evict(fresh - self.pool.n_free, self.pool)
+            pages = self.pool.alloc(fresh)
+            if pages is None:
+                for pg in shared:          # head-of-line: retry next tick
+                    self.pool.decref(pg)
+                break
+            self.queue.pop(0)
+            seq = PagedSeq(req, self.pages_per_seq)
+            m = len(shared)
+            seq.block_table[:m] = shared
+            seq.block_table[m:m + len(pages)] = pages
+            seq.n_shared = m
+            seq.t_admit = now
+            seq.prefill_done = m * self.page_size
+            self.stats["prefix_hit_tokens"] += m * self.page_size
+            if seq.prefill_done >= seq.prefill_len:
+                seq.to_decode()
+            self.active.append(seq)
+            self.stats["concurrency_peak"] = max(
+                self.stats["concurrency_peak"], len(self.active))
+            self.stats["pages_used_peak"] = max(
+                self.stats["pages_used_peak"], self.pool.n_used)
+
+    def _publish_prefix(self, seq: PagedSeq):
+        """Hand the sequence's full prompt pages to the radix tree once
+        its prefill completes (K/V of prompt[:-1] is then resident)."""
+        if self.radix is None or seq.published:
+            return
+        seq.published = True
+        m = (len(seq.req.prompt) - 1) // self.page_size
+        if m:
+            self.radix.insert(seq.req.prompt[:m * self.page_size],
+                              seq.block_table[:m], self.pool)
+
+    def _release_paged(self, seq: PagedSeq):
+        for pg in seq.block_table:
+            if pg != PagePool.SCRATCH:
+                self.pool.decref(pg)
+        self.active.remove(seq)
+
+    def _count_prefill_launches(self, before: int):
+        """Per-execution GEMM launch tally: substrate.DISPATCH_COUNTS is
+        populated at jit-trace time, so the first dispatch's delta IS the
+        launch count one compiled prefill step replays per execution
+        (read-only access — the counters stay substrate-owned)."""
+        delta = sum(substrate.DISPATCH_COUNTS.values()) - before
+        if delta > 0:
+            self._prefill_launches = delta
+        self.stats["prefill_gemm_dispatches"] += self._prefill_launches
 
     def _pos_vector(self) -> np.ndarray:
         return np.asarray([s.write_pos for s in self.slots], np.int32)
 
     # ------------------------------------------------------------ prefill
     def _prefill_tick(self):
+        if self.paged:
+            self._prefill_tick_paged()
+            return
         pre = [s for s in self.slots if s.state == Slot.PREFILL]
         if not pre:
             return
@@ -207,6 +368,7 @@ class ServingEngine:
                                              s.prefill_done + c]
             lens[s.index] = c
         t0 = time.perf_counter()
+        d0 = sum(substrate.DISPATCH_COUNTS.values())
         _, self.cache = self._prefill(self.params, self.cache,
                                       jnp.asarray(toks), jnp.asarray(pos),
                                       jnp.asarray(lens))
@@ -214,8 +376,41 @@ class ServingEngine:
         self.stats["prefill_time_s"] += time.perf_counter() - t0
         self.stats["prefill_dispatches"] += 1
         self.stats["prefill_tokens"] += int(lens.sum())
+        self._count_prefill_launches(d0)
         for s in pre:
             s.finish_chunk(int(lens[s.index]))
+
+    def _prefill_tick_paged(self):
+        pre = [s for s in self.active if s.state == PagedSeq.PREFILL]
+        if not pre:
+            return
+        sel = pre[:self.sc.max_batch]
+        B, C = self.sc.max_batch, self.prefill_chunk
+        toks = np.zeros((B, C), np.int32)
+        pos = np.zeros(B, np.int32)
+        lens = np.zeros(B, np.int32)
+        bt = np.zeros((B, self.pages_per_seq), np.int32)
+        for r, s in enumerate(sel):
+            c = min(C, s.prefill_len - s.prefill_done)
+            toks[r, :c] = s.req.prompt[s.prefill_done:s.prefill_done + c]
+            pos[r] = s.prefill_done
+            lens[r] = c
+            bt[r] = s.block_table
+        t0 = time.perf_counter()
+        d0 = sum(substrate.DISPATCH_COUNTS.values())
+        _, self.cache = self._prefill_paged(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(lens), jnp.asarray(bt))
+        jax.block_until_ready(self.cache)
+        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        self.stats["prefill_dispatches"] += 1
+        self.stats["prefill_tokens"] += int(lens.sum())
+        self._count_prefill_launches(d0)
+        for r, s in enumerate(sel):
+            s.prefill_done += int(lens[r])
+            if s.prefill_done >= s.prefill_len:
+                s.to_decode()
+                self._publish_prefix(s)
 
     def _prefill_token_by_token(self, slot: Slot):
         """Seed path: one full-batch decode dispatch per prompt token.
@@ -246,7 +441,52 @@ class ServingEngine:
             sub, logits / jnp.maximum(temps[:, None], 1e-6))
         return np.asarray(jnp.where(temps > 0, sampled, greedy))
 
+    def _decode_tick_paged(self):
+        dec = [s for s in self.active if s.state == PagedSeq.DECODE]
+        if not dec:
+            return
+        B = self.sc.max_batch
+        # round-robin: when more sequences are resident than dispatch rows,
+        # rotate so every sequence makes progress (no starvation)
+        start = self._rr % len(dec)
+        sel = (dec[start:] + dec[:start])[:B]
+        self._rr += len(sel)
+        toks = np.zeros(B, np.int32)
+        temps = np.zeros(B, np.float32)
+        pos = np.zeros(B, np.int32)
+        bt = np.zeros((B, self.pages_per_seq), np.int32)
+        for r, s in enumerate(sel):
+            toks[r] = s.next_token
+            temps[r] = s.req.temperature
+            pos[r] = s.pos
+            bt[r] = s.block_table
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode_paged(
+            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(bt))
+        nxt = self._sample(logits, jnp.asarray(temps))
+        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_dispatches"] += 1
+        self.stats["decode_tokens"] += len(sel)
+        now = time.perf_counter()
+        for r, s in enumerate(sel):
+            req = s.req
+            tok = int(nxt[r])
+            if not req.out_tokens:
+                req.ttft_s = now - s.t_admit
+            req.out_tokens.append(tok)
+            s.next_token = tok
+            s.pos += 1
+            if (tok == self.sc.eos_id
+                    or len(req.out_tokens) >= req.max_new_tokens
+                    or s.pos >= self.sc.max_seq - 1):
+                req.done = True
+                self._release_paged(s)
+
     def _decode_tick(self):
+        if self.paged:
+            self._decode_tick_paged()
+            return
         dec = [s for s in self.slots if s.state == Slot.DECODE]
         if not dec:
             return
@@ -279,11 +519,16 @@ class ServingEngine:
                 s.release()
 
     # --------------------------------------------------------------- run
+    def _resident(self) -> bool:
+        if self.paged:
+            return bool(self.active)
+        return any(s.state != Slot.FREE for s in self.slots)
+
     def step(self):
         """One engine tick: admit, at most one prefill chunk dispatch,
         one fused decode dispatch."""
         self._admit()
-        if all(s.state == Slot.FREE for s in self.slots):
+        if not self._resident():
             return False
         self._prefill_tick()
         self._decode_tick()
@@ -291,9 +536,7 @@ class ServingEngine:
 
     def run_to_completion(self, max_ticks: int = 10000):
         ticks = 0
-        while (self.queue
-               or any(s.state != Slot.FREE for s in self.slots)) \
-                and ticks < max_ticks:
+        while (self.queue or self._resident()) and ticks < max_ticks:
             self.step()
             ticks += 1
         if substrate.strict_audit_enabled():

@@ -94,6 +94,16 @@ def test_jaxpr_audit_int8_warns_af008_only():
         == ["AF008"]
 
 
+def test_jaxpr_audit_int8_prequantized_clean():
+    """With lm.prequantize_params hoisting quantization out of the trace
+    (the serving-engine path), the int8 audit goes fully clean: the AF008
+    staged-requantize warnings of the raw-tree path disappear."""
+    cfg = dataclasses.replace(reduced(get_config("qwen2-0.5b")),
+                              gemm_backend="arrayflex_int8")
+    findings = jaxpr_audit.audit_model(cfg, prequantize=True)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
 # ---------------------------------------------------------------------------
 # jaxpr auditor: seeded violations (one per code)
 
@@ -255,6 +265,29 @@ def test_lint_seeded_violations(tmp_path):
     assert len(by_code["AFL02"]) == 2       # missing site=, bogus label
     assert len(by_code["AFL03"]) == 2       # .clear() and subscript write
     assert all(":" in f.where for f in found)   # file:line locations
+
+
+def test_lint_seeded_paged_state_mutation(tmp_path):
+    """AFL03's second ownership group: page-table/pool state may only be
+    rewired inside serving/engine.py + serving/paged.py."""
+    zone = tmp_path / "serving"
+    zone.mkdir()
+    (zone / "rogue.py").write_text(textwrap.dedent("""\
+        def hijack(pool, seq, node):
+            pool.free_pages.append(3)
+            pool.refcounts[4] += 1
+            seq.block_table[0] = 7
+            node.children.pop(("a",))
+            return seq
+    """))
+    found = ast_lint.lint_paths([tmp_path], root=tmp_path)
+    assert codes(found) == ["AFL03"] and len(found) == 4
+    assert all("serving/engine.py + serving/paged.py" in f.message
+               for f in found)
+    # the same file under an owner path is clean
+    (zone / "engine.py").write_text((zone / "rogue.py").read_text())
+    owned = ast_lint.lint_paths([zone / "engine.py"], root=tmp_path)
+    assert owned == []
 
 
 def test_lint_allowlist_and_forwarded_site(tmp_path):

@@ -1,0 +1,252 @@
+"""Paged K/V state: page pool, radix prefix tree, memory-bounded engine.
+
+Property tests (hypothesis, or tests/_hypothesis_stub.py when absent)
+check the pool/tree invariants the serving engine leans on: refcounts
+partition pages exactly, ``match`` returns the longest fully-paged
+published prefix (against a reference model), splits preserve lookups,
+and eviction only reclaims tree-only (refcount-1) leaves.  Engine tests
+check the admission contract: resident concurrency is bounded by the
+page budget, not ``max_batch``.
+"""
+import random
+
+import jax
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import ARCHS, reduced
+from repro.core import planner
+from repro.models import lm
+from repro.serving import ServeConfig, ServingEngine
+from repro.serving.engine import Request
+from repro.serving.paged import PagePool, RadixCache
+
+
+# ---------------------------------------------------------------- PagePool
+def test_pool_alloc_is_deterministic_lowest_first():
+    pool = PagePool(8, 4)
+    assert pool.alloc(3) == [1, 2, 3]
+    pool.decref(2)
+    pool.decref(1)
+    # freed pages return to the tail and are reused first (LIFO), then
+    # the untouched descending tail resumes lowest-first
+    assert pool.alloc(5) == [1, 2, 4, 5, 6]
+    assert pool.alloc(2) is None            # only page 7 is free
+    assert pool.alloc(1) == [7]
+    assert pool.n_free == 0
+
+
+def test_pool_guards_scratch_and_free_pages():
+    pool = PagePool(4, 2)
+    with pytest.raises(ValueError):
+        pool.incref(PagePool.SCRATCH)
+    with pytest.raises(ValueError):
+        pool.decref(PagePool.SCRATCH)
+    with pytest.raises(ValueError):
+        pool.incref(1)                      # free: nothing to share
+    (pg,) = pool.alloc(1)
+    pool.incref(pg)
+    pool.decref(pg)
+    pool.decref(pg)                         # back to free
+    with pytest.raises(ValueError):
+        pool.decref(pg)
+    with pytest.raises(ValueError):
+        PagePool(1, 2)                      # no room for scratch + data
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), n_pages=st.integers(2, 12))
+def test_pool_refcounts_partition_pages(seed, n_pages):
+    """Under random alloc/incref/decref traffic, {free} and {refcount>0}
+    exactly partition the allocatable pages, and n_free/n_used agree."""
+    rng = random.Random(seed)
+    pool = PagePool(n_pages, 4)
+    held = []                               # (page, model_refcount)
+    for _ in range(60):
+        op = rng.randrange(3)
+        if op == 0:
+            got = pool.alloc(rng.randrange(0, n_pages))
+            if got is not None:
+                held.extend((pg, 1) for pg in got)
+        elif op == 1 and held:
+            i = rng.randrange(len(held))
+            pg, rc = held[i]
+            pool.incref(pg)
+            held[i] = (pg, rc + 1)
+        elif op == 2 and held:
+            i = rng.randrange(len(held))
+            pg, rc = held[i]
+            pool.decref(pg)
+            held[i] = (pg, rc - 1)
+            if rc == 1:
+                held.pop(i)
+        model = {}
+        for pg, rc in held:
+            model[pg] = model.get(pg, 0) + rc
+        assert {pg for pg in range(pool.n_pages)
+                if pool.refcounts[pg] > 0} == set(model)
+        assert all(pool.refcounts[pg] == rc for pg, rc in model.items())
+        assert set(pool.free_pages) == (
+            set(range(1, n_pages)) - set(model))
+        assert pool.n_free + pool.n_used == n_pages - 1
+
+
+# --------------------------------------------------------------- RadixCache
+def test_radix_split_on_mid_node_divergence():
+    """A second prompt diverging inside a path-compressed node splits it;
+    both full paths and the shared stem keep matching."""
+    pool = PagePool(32, 2)
+    tree = RadixCache(2)
+    a = [1, 1, 2, 2, 3, 3, 4, 4]
+    pa = pool.alloc(4)
+    tree.insert(a, pa, pool)
+    assert tree.n_nodes() == 1 and tree.n_pages() == 4
+    b = [1, 1, 2, 2, 9, 9]
+    shared = tree.match(b)
+    assert shared == pa[:2]
+    pb = shared + pool.alloc(1)
+    tree.insert(b, pb, pool)
+    assert tree.n_nodes() == 3               # stem + two tails
+    assert tree.n_pages() == 5               # shared stem stored once
+    assert tree.match(a) == pa
+    assert tree.match(b) == pb
+    assert tree.match([1, 1, 2, 2]) == pa[:2]
+    assert tree.match([7, 7]) == []
+    # partial pages never match: 5 tokens -> only 2 full pages of prefix
+    assert tree.match([1, 1, 2, 2, 3]) == pa[:2]
+
+
+def test_radix_evict_respects_refcounts_and_lru():
+    pool = PagePool(32, 2)
+    tree = RadixCache(2)
+    pa = pool.alloc(2)
+    tree.insert([1, 1, 2, 2], pa, pool)      # refcounts 2 (seq + tree)
+    pb = pool.alloc(2)
+    tree.insert([5, 5, 6, 6], pb, pool)
+    for pg in pa + pb:
+        pool.decref(pg)                      # sequences released: tree-only
+    tree.match([1, 1, 2, 2])                 # bump A -> B is now LRU
+    assert tree.evict(1, pool) == 2          # whole leaf B goes at once
+    assert tree.match([5, 5, 6, 6]) == []
+    assert tree.match([1, 1, 2, 2]) == pa
+    pool.incref(pa[0])                       # a borrower pins A
+    assert tree.evict(4, pool) == 0          # nothing evictable left
+    pool.decref(pa[0])
+    assert tree.evict(4, pool) == 2
+    assert tree.n_pages() == 0 and tree.n_nodes() == 0
+    assert pool.n_free == pool.n_pages - 1   # every page returned
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 16), page=st.integers(1, 3))
+def test_radix_match_equals_reference_model(seed, page):
+    """Random publish/lookup traffic against a flat reference model: the
+    trie's match must return exactly the pages of the longest prefix
+    whose every full page was published, and the tree must hold exactly
+    one pool reference per published page."""
+    rng = random.Random(seed)
+    pool = PagePool(256, page)
+    tree = RadixCache(page)
+    published = {}                  # key-path tuple -> physical page
+    releasable = []
+    for _ in range(10):
+        toks = [rng.randrange(3) for _ in range(rng.randrange(0, 9 * page))]
+        keys = [tuple(toks[i * page:(i + 1) * page])
+                for i in range(len(toks) // page)]
+        expect = []
+        for i in range(len(keys)):
+            pg = published.get(tuple(keys[:i + 1]))
+            if pg is None:
+                break
+            expect.append(pg)
+        assert tree.match(toks) == expect
+        # admit like the engine: borrow the match, alloc the rest, publish
+        for pg in expect:
+            pool.incref(pg)
+        fresh = pool.alloc(len(keys) - len(expect))
+        pages = expect + fresh
+        tree.insert(toks[:len(keys) * page], pages, pool)
+        for i in range(len(keys)):
+            published.setdefault(tuple(keys[:i + 1]), pages[i])
+        releasable.extend(pages)
+    for pg in releasable:           # every sequence releases its refs
+        pool.decref(pg)
+    # tree-only now: exactly one reference per published physical page
+    assert tree.n_pages() == len(set(published.values()))
+    for pg in set(published.values()):
+        assert pool.refcounts[pg] == 1
+    tree.evict(len(published) + 1, pool)
+    assert pool.n_free == pool.n_pages - 1
+
+
+# ------------------------------------------------------- engine admission
+@pytest.fixture(scope="module")
+def model():
+    cfg = reduced(ARCHS["qwen2-0.5b"])
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def test_engine_concurrency_exceeds_max_batch(model):
+    """Admission is page-budget-bounded: with short requests the engine
+    keeps more sequences resident than dispatch rows, round-robining the
+    decode ticks — the dense path would cap residency at max_batch."""
+    cfg, params = model
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=2, max_seq=32,
+                                       kv_pages=40, page_size=8))
+    reqs = [Request(prompt=[3 + i, 4 + i, 5 + i], max_new_tokens=4, rid=i)
+            for i in range(8)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion()
+    assert all(r.done and len(r.out_tokens) == 4 for r in reqs)
+    assert engine.stats["concurrency_peak"] > engine.sc.max_batch
+    assert engine.stats["concurrency_peak"] == 8
+    assert engine.pool.n_used == 0          # all reservations released
+
+
+def test_engine_admission_blocks_on_page_budget(model):
+    """When the pool cannot hold everyone, admission is head-of-line FIFO:
+    later requests wait for pages, everyone still completes, and peak page
+    usage never exceeds the pool."""
+    cfg, params = model
+    # 4 data pages; each request reserves ceil((3+4)/8)=1 page -> at most
+    # 4 resident, the rest queue head-of-line
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=2, max_seq=32,
+                                       kv_pages=5, page_size=8))
+    reqs = [Request(prompt=[3 + i, 4 + i, 5 + i], max_new_tokens=4, rid=i)
+            for i in range(8)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion()
+    assert all(r.done and len(r.out_tokens) == 4 for r in reqs)
+    assert engine.stats["concurrency_peak"] <= 4    # 4 data pages
+    assert engine.stats["pages_used_peak"] <= 4
+    assert engine.pool.n_used == 0
+
+
+def test_engine_validates_page_geometry(model):
+    cfg, params = model
+    with pytest.raises(ValueError, match="divide max_seq"):
+        ServingEngine(cfg, params,
+                      ServeConfig(max_batch=2, max_seq=32,
+                                  kv_pages=10, page_size=7))
+    with pytest.raises(ValueError, match="need at least"):
+        ServingEngine(cfg, params,
+                      ServeConfig(max_batch=2, max_seq=32,
+                                  kv_pages=2, page_size=8))
+    with pytest.raises(ValueError, match="batched"):
+        ServingEngine(cfg, params,
+                      ServeConfig(max_batch=2, max_seq=32, kv_pages=10,
+                                  page_size=8, prefill_mode="token"))
+
+
+def test_planner_page_plan_divides_max_seq():
+    for S in (16, 32, 64, 128, 256):
+        page = planner.page_plan(S)
+        assert page > 0 and S % page == 0
+    # waste pressure: short expected lengths pull the page size down
+    assert planner.page_plan(128, expected_len=8) <= \
+        planner.page_plan(128, expected_len=128)

@@ -4,14 +4,22 @@ The engine's batched prefill path must be a pure performance refactor:
 identical greedy token streams for mixed-length prompts (including slot
 reuse after EOS and prompts spanning several chunks), with O(P/chunk)
 prefill dispatches instead of P.
+
+The paged K/V path extends the same contract: block-table paged
+attention (with or without radix prefix reuse) must emit bit-identical
+greedy streams to the dense path, while admission becomes page-budget
+bounded and shared prefixes stop being recomputed.
 """
+import dataclasses
 import math
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.configs import ARCHS, reduced
+from repro.kernels import substrate
 from repro.models import lm
 from repro.serving import ServeConfig, ServingEngine
 from repro.serving.engine import Request
@@ -117,3 +125,151 @@ def test_single_token_prompt_skips_prefill(model):
     out, engine = _run(cfg, params, "batched", [[9]], max_batch=1)
     assert engine.stats["prefill_dispatches"] == 0
     assert len(out[0]) == 5
+
+
+# ---------------------------------------------------------------------------
+# paged K/V path
+
+
+def _run_paged(cfg, params, prompts, *, kv_pages, page_size=0,
+               prefix_cache=False, max_batch=2, max_new=5, eos=-1):
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=max_batch, max_seq=64,
+                                       eos_id=eos, prefill_mode="batched",
+                                       kv_pages=kv_pages,
+                                       page_size=page_size,
+                                       prefix_cache=prefix_cache))
+    reqs = [Request(prompt=p, max_new_tokens=max_new, rid=i)
+            for i, p in enumerate(prompts)]
+    for r in reqs:
+        engine.submit(r)
+    engine.run_to_completion()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], engine
+
+
+def test_paged_matches_dense_streams(model):
+    """The tentpole contract: paged attention (block-table gather over the
+    global page pool) is a pure memory-layout refactor — greedy streams
+    are bit-identical to the dense (max_batch, max_seq) cache, for every
+    page geometry and with the prefix cache on or off."""
+    cfg, params = model
+    dense_out, _ = _run(cfg, params, "batched", PROMPTS)
+    for page, prefix in ((16, False), (16, True), (8, True), (0, False)):
+        paged_out, engine = _run_paged(cfg, params, PROMPTS, kv_pages=40,
+                                       page_size=page, prefix_cache=prefix)
+        assert paged_out == dense_out, \
+            f"page_size={page} prefix_cache={prefix}"
+        # every sequence released its reservations; only tree-owned
+        # published prefix pages (refcount 1) may remain resident
+        held = engine.radix.n_pages() if engine.radix else 0
+        assert engine.pool.n_used == held
+
+
+def test_paged_matches_dense_with_eos(model):
+    cfg, params = model
+    first, _ = _run(cfg, params, "batched", PROMPTS)
+    eos = first[0][1]
+    dense_out, _ = _run(cfg, params, "batched", PROMPTS, eos=eos)
+    paged_out, _ = _run_paged(cfg, params, PROMPTS, kv_pages=40,
+                              page_size=8, prefix_cache=True, eos=eos)
+    assert paged_out == dense_out
+    assert any(len(t) < 5 for t in paged_out), "EOS never fired"
+
+
+def _staggered_shared_prefix_run(cfg, params, *, prefix_cache):
+    """One request completes prefill first (publishing its prompt pages
+    when the cache is on), then followers sharing its 32-token system
+    prompt arrive — the reuse-sensitive schedule."""
+    system = list(range(3, 35))                       # 32 = 4 pages of 8
+    prompts = [system + [40 + i, 41 + i] for i in range(4)]
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=2, max_seq=64,
+                                       prefill_mode="batched",
+                                       prefill_chunk=8, kv_pages=60,
+                                       page_size=8,
+                                       prefix_cache=prefix_cache))
+    reqs = [Request(prompt=p, max_new_tokens=4, rid=i)
+            for i, p in enumerate(prompts)]
+    engine.submit(reqs[0])
+    while not reqs[0].out_tokens:                     # prefix now published
+        engine.step()
+    for r in reqs[1:]:
+        engine.submit(r)
+    engine.run_to_completion()
+    assert all(r.done for r in reqs)
+    return [r.out_tokens for r in reqs], engine
+
+
+def test_prefix_reuse_cuts_prefill_gemm_dispatches(model):
+    """Followers sharing a published system prompt skip its pages: whole
+    prefill chunks disappear, so substrate-counted GEMM launches drop —
+    with streams unchanged (shared pages are bit-identical to recomputed
+    ones)."""
+    cfg, params = model
+    cold_out, cold = _staggered_shared_prefix_run(cfg, params,
+                                                  prefix_cache=False)
+    warm_out, warm = _staggered_shared_prefix_run(cfg, params,
+                                                  prefix_cache=True)
+    assert warm_out == cold_out
+    assert warm.stats["prefix_hit_tokens"] > 0
+    assert warm.stats["prefill_tokens"] < cold.stats["prefill_tokens"]
+    assert (warm.stats["prefill_gemm_dispatches"]
+            < cold.stats["prefill_gemm_dispatches"])
+
+
+def test_attention_plan_cache_settles_after_first_decode(model):
+    """Serving steady state plans nothing: every attention_plan lookup
+    after the first decode tick hits the planner's cache (the geometry
+    is fixed per engine, so a steady-state miss would mean the plan key
+    is unstable)."""
+    cfg, params = model
+    engine = ServingEngine(cfg, params,
+                           ServeConfig(max_batch=2, max_seq=64,
+                                       prefill_mode="batched", kv_pages=40,
+                                       page_size=16, prefix_cache=True))
+    for r in [Request(prompt=p, max_new_tokens=6, rid=i)
+              for i, p in enumerate(PROMPTS)]:
+        engine.submit(r)
+    while engine.stats["decode_dispatches"] < 1:
+        engine.step()
+    misses0 = substrate.plan_cache_info().attention_plan["misses"]
+    engine.run_to_completion()
+    info = substrate.plan_cache_info().attention_plan
+    assert info["misses"] == misses0, \
+        f"attention_plan missed in steady state: {info}"
+
+
+def test_int8_engine_serves_prequantized_without_in_trace_requantize(model):
+    """The quantizing backend serves from the pre-quantized tree: zero
+    in-trace quantize_weight stagings (the AF008 hoist), with streams
+    bitwise equal to the in-trace-quantizing reference decode loop."""
+    cfg, params = model
+    cfg8 = dataclasses.replace(cfg, gemm_backend="arrayflex_int8")
+    prompts = PROMPTS[:3]
+    traced0 = substrate.QUANT_CACHE_STATS["traced"]
+    paged_out, engine = _run_paged(cfg8, params, prompts, kv_pages=40,
+                                   page_size=16, max_new=4)
+    assert substrate.QUANT_CACHE_STATS["traced"] == traced0, \
+        "engine staged quantize_weight inside a compiled step"
+    quant_leaves = jax.tree_util.tree_leaves(
+        engine.params,
+        is_leaf=lambda x: isinstance(x, substrate.QuantizedTensor))
+    assert any(isinstance(leaf, substrate.QuantizedTensor)
+               for leaf in quant_leaves), "tree was not pre-quantized"
+    # reference: raw-tree decode loop, quantization staged in-trace
+    step = jax.jit(lambda p, c, t, q: lm.decode_step(cfg8, p, c, t, q))
+    for rid, prompt in enumerate(prompts):
+        cache = lm.init_cache(cfg8, 1, 64)
+        out = []
+        for i, t in enumerate(prompt[:-1]):
+            _, cache = step(params, cache,
+                            jnp.asarray([t], jnp.int32), jnp.int32(i))
+        tok = prompt[-1]
+        for i in range(4):
+            logits, cache = step(params, cache,
+                                 jnp.asarray([tok], jnp.int32),
+                                 jnp.int32(len(prompt) - 1 + i))
+            tok = int(jnp.argmax(logits[0]))
+            out.append(tok)
+        assert out == paged_out[rid], f"req {rid} diverged"
