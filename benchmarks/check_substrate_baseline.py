@@ -37,6 +37,14 @@ What is gated (and why these fields):
   GEMMs than cold (the prefix-reuse win itself).  The TTFT numbers are
   reported but NOT gated (CPU wall time).
 
+* ``resilience`` section — the seeded chaos matrix is deterministic by
+  construction (injection decisions are pure functions of (seed, point,
+  draw index)), so the whole subtree is gated exactly: zero-chaos
+  hardened streams identical to the unhardened baseline with zero fired
+  events, preempted streams identical with at least one forced
+  preemption, crash-restored streams identical, and the typed outcome
+  histograms of every scenario unchanged.
+
 The expert-batching wall-time ratio is reported but NOT gated: the CPU
 grid interpreter serializes the batched launch (see substrate_bench), so
 its timing is structural; its launch counts are gated instead.
@@ -173,6 +181,32 @@ def check(current: dict, baseline: dict, tolerance: float):
                     errors.append(
                         f"paged {field} changed: {pgc[field]} != "
                         f"baseline {pgb[field]}")
+
+    # --- resilience: chaos matrix outcomes + stream identity -------------
+    rsb = baseline.get("resilience")
+    rsc = current.get("resilience")
+    if rsb:
+        if not rsc:
+            errors.append("resilience section missing from current report")
+        else:
+            zc = rsc["zero_chaos"]
+            if not zc["streams_identical"]:
+                errors.append("zero-chaos hardened streams diverged from "
+                              "the unhardened baseline")
+            if zc["chaos_fired"] != 0:
+                errors.append(f"zero-probability chaos fired "
+                              f"{zc['chaos_fired']} event(s)")
+            if not rsc["preemption"]["streams_identical"]:
+                errors.append("preempted streams diverged from the "
+                              "un-preempted baseline")
+            if rsc["preemption"]["preemptions"] < 1:
+                errors.append("tight-pool workload no longer forces a "
+                              "preemption (the scenario tests nothing)")
+            for field in ("zero_chaos", "preemption", "chaos_matrix"):
+                if rsc[field] != rsb[field]:
+                    errors.append(
+                        f"resilience {field} changed: {rsc[field]} != "
+                        f"baseline {rsb[field]}")
     return errors
 
 

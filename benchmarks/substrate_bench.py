@@ -494,8 +494,19 @@ def substrate_report(smoke: bool = False):
     # serving-layer section: paged K/V + radix prefix reuse (memoized in
     # serving_bench so the run.py CSV entry and this JSON share one run);
     # fixed workload, so the gated numbers match one committed baseline
-    from benchmarks import serving_bench
+    try:
+        from benchmarks import serving_bench
+    except ImportError:
+        # script-style invocation (python benchmarks/substrate_bench.py)
+        # puts benchmarks/ itself on sys.path, not the repo root
+        import sys
+        sys.path.insert(0, os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))))
+        from benchmarks import serving_bench
     _, paged = serving_bench.paged_section()
+    # resilience: seeded chaos matrix + zero-chaos stream identity (also
+    # memoized; every gated field is deterministic structure, no wall time)
+    _, resilience = serving_bench.resilience_section()
 
     report = {
         "config": {"arch": "qwen2-0.5b (reduced)", "batch": B, "seq": S,
@@ -508,6 +519,7 @@ def substrate_report(smoke: bool = False):
         "sharded": sharded,
         "int8": int8,
         "paged": paged,
+        "resilience": resilience,
         "equivalence": {"logits_max_abs_diff": max_diff,
                         "reference_fallbacks": 0},
         "plan_cache": plan_cache,

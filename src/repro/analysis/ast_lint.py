@@ -14,15 +14,21 @@ Three rules:
   forwarded parameter — are runtime-checked by strict-audit mode
   instead).
 * **AFL03** — no mutation of owned mutable state outside its owner
-  module(s).  Two ownership groups: the substrate's plan/dispatch state
+  module(s).  Four ownership groups: the substrate's plan/dispatch state
   (``SITE_PLANS``, ``DISPATCH_COUNTS``, plan/quant caches) belongs to
   ``kernels/substrate.py`` — external code resets through
   ``clear_plan_cache()``/``clear_quant_cache()``, never by poking the
-  dicts; and the paged-KV page-table/pool state (``free_pages``,
+  dicts; the paged-KV page-table/pool state (``free_pages``,
   ``refcounts``, ``block_table``, radix node ``children``) belongs to
   ``serving/engine.py`` + ``serving/paged.py`` — everything else reads
   block tables but may not rewire them, so the refcount/COW invariants
-  the prefix cache depends on cannot be broken from a distance.
+  the prefix cache depends on cannot be broken from a distance; the
+  chaos-injection draw state (``chaos_draws``, ``chaos_log``) belongs to
+  ``runtime/chaos.py`` — replayability is a pure function of (seed,
+  point, draw index) only while the counters advance through
+  ``ChaosEngine.fire``; and the engine snapshot ring (``_snapshots``)
+  belongs to ``serving/engine.py`` — crash-recovery bit-identity assumes
+  a snapshot is immutable once taken.
 """
 from __future__ import annotations
 
@@ -67,6 +73,17 @@ PAGED_OWNERS = frozenset({
     os.path.join("serving", "paged.py").replace(os.sep, "/"),
 })
 
+# chaos-injection draw state; only runtime/chaos.py may mutate it.  The
+# replay guarantee (decision = f(seed, point, draw index)) dies the moment
+# any other module advances a counter or rewrites the fired log
+CHAOS_STATE = frozenset({"chaos_draws", "chaos_log"})
+CHAOS_OWNER = os.path.join("runtime", "chaos.py").replace(os.sep, "/")
+
+# engine crash-recovery snapshot ring; only serving/engine.py may mutate
+# it — restore-time bit-identity assumes snapshots are immutable once taken
+SNAPSHOT_STATE = frozenset({"_snapshots"})
+SNAPSHOT_OWNER = os.path.join("serving", "engine.py").replace(os.sep, "/")
+
 # ownership groups: (tracked names, owner predicate key, remedy for the msg)
 STATE_GROUPS = (
     (TRACKED_STATE, "substrate",
@@ -75,6 +92,12 @@ STATE_GROUPS = (
     (PAGED_STATE, "paged",
      "paged-KV page-table/pool state outside serving/engine.py + "
      "serving/paged.py — go through PagePool/RadixCache methods"),
+    (CHAOS_STATE, "chaos",
+     "chaos draw-state outside runtime/chaos.py — fire through "
+     "ChaosEngine.fire()/load_state(), never by poking counters"),
+    (SNAPSHOT_STATE, "snapshot",
+     "engine snapshot state outside serving/engine.py — snapshots are "
+     "taken/restored only by the engine itself"),
 )
 
 
@@ -99,7 +122,9 @@ class _Linter(ast.NodeVisitor):
         self.in_model_zone = rel.startswith(MODEL_ZONES)
         self.owns_state = rel == STATE_OWNER
         self.owned = {"substrate": self.owns_state,
-                      "paged": rel in PAGED_OWNERS}
+                      "paged": rel in PAGED_OWNERS,
+                      "chaos": rel == CHAOS_OWNER,
+                      "snapshot": rel == SNAPSHOT_OWNER}
         self.def_stack: List[str] = []
         self.findings: List[Finding] = []
 

@@ -748,6 +748,22 @@ SITE_PLANS: Dict[str, GemmPlan] = {}
 DISPATCH_COUNTS: Dict[str, int] = {}
 
 
+def _maybe_chaos_fault(site: str) -> None:
+    """Chaos injection point ``substrate.dispatch``: fail this GEMM launch
+    when the ambient :mod:`repro.runtime.chaos` engine says so (no-op —
+    one contextvar read — when chaos is inactive).  Dispatch runs at
+    jit-trace time, so a fault fires at the launch/trace boundary of a
+    compiled step; failed traces are not cached, so a retry re-dispatches
+    and draws again.  Imports are lazy: substrate must not import serving
+    at module load (serving imports substrate)."""
+    from repro.runtime import chaos
+    if chaos.fire("substrate.dispatch", site):
+        from repro.serving.errors import KernelFault
+        raise KernelFault(
+            f"[chaos] injected GEMM launch fault at site {site!r} "
+            f"(replayable: seed + draw index in the chaos log)")
+
+
 def _record(site: str, plan: GemmPlan, launches: int = 1) -> None:
     if not site:
         if strict_audit_enabled():
@@ -877,6 +893,7 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     unless the site is quantization-exempt (:data:`QUANT_EXEMPT_SITES`).
     """
     fn = get_backend(backend)
+    _maybe_chaos_fault(site)
     info = _BACKEND_INFO[backend]
     ep = _epilogue_spec(epilogue, w2, bias, bias2)
     w_scale = w2_scale = None
@@ -967,6 +984,7 @@ def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
     with ``call.w_scale=None`` (fp32 operands, the registry contract).
     """
     check_backend(backend)
+    _maybe_chaos_fault(site)
     if backend == "arrayflex_int8":
         backend = "arrayflex"
     B, T, K = x.shape
@@ -1038,6 +1056,7 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
     axis, exactly as the bank does.
     """
     check_backend(backend)
+    _maybe_chaos_fault(site)
     G, E, C, K = x.shape
     N_out = w.shape[-1]
     info = _BACKEND_INFO[backend]

@@ -26,7 +26,9 @@ import jax
 from repro.configs import get_config, reduced
 from repro.kernels import substrate
 from repro.models import lm
-from repro.serving import ServeConfig, ServingEngine
+from repro.runtime import chaos
+from repro.serving import (AdmissionError, EngineCrash, ServeConfig,
+                           ServingEngine)
 from repro.serving.engine import Request
 
 
@@ -49,6 +51,18 @@ def phase_report(engine: ServingEngine, reqs) -> str:
                 f"peak concurrency {st['concurrency_peak']}, "
                 f"prefix hits {st['prefix_hit_tokens']} tok, "
                 f"{st['prefill_gemm_dispatches']} prefill GEMM launches")
+    counts = {r.outcome or "pending": 0 for r in reqs}
+    for r in reqs:
+        counts[r.outcome or "pending"] += 1
+    out += ("\noutcomes: "
+            + ", ".join(f"{k}={v}" for k, v in sorted(counts.items())))
+    resil = (f"\nresilience: {st['sample_retries']} sample retries, "
+             f"{st['kernel_fault_retries']} kernel-fault retries, "
+             f"{st['preemptions']} preemptions, "
+             f"{st['watchdog_fired']} watchdog fires")
+    if st["snapshots_taken"]:
+        resil += f", {st['snapshots_taken']} snapshots"
+    out += resil
     return out
 
 
@@ -91,6 +105,35 @@ def main(argv=None):
                     help="fan the host out to N devices before the backend "
                          "initializes (XLA_FLAGS "
                          "--xla_force_host_platform_device_count; CPU only)")
+    ap.add_argument("--deadline-ms", type=float, default=0.0,
+                    help="per-request total deadline in ms (0 = none); "
+                         "expired requests terminate with outcome "
+                         "deadline_expired")
+    ap.add_argument("--ttft-deadline-ms", type=float, default=0.0,
+                    help="per-request time-to-first-token deadline in ms "
+                         "(0 = none)")
+    ap.add_argument("--max-queue", type=int, default=0,
+                    help="bounded admission queue (0 = unbounded); overflow "
+                         "is rejected typed with outcome rejected_overload")
+    ap.add_argument("--chaos", default="",
+                    help="seeded fault injection spec, e.g. "
+                         "'seed=3,gemm=0.05,nan_at=2,crash_at=10' "
+                         "(keys: seed, gemm, nan, pages, crash, + _at "
+                         "variants; see docs/resilience.md)")
+    ap.add_argument("--preempt-policy", default="none",
+                    choices=("none", "youngest"),
+                    help="on page-pool exhaustion mid-decode: 'youngest' "
+                         "preempts the youngest resident sequence (release "
+                         "pages, re-queue, recompute via the prefix cache) "
+                         "instead of failing; also switches paged admission "
+                         "to lazy page reservation")
+    ap.add_argument("--snapshot-every", type=int, default=0,
+                    help="engine snapshot cadence in ticks for crash "
+                         "recovery (0 = off; forced to 1 when --chaos "
+                         "configures a crash)")
+    ap.add_argument("--max-restarts", type=int, default=3,
+                    help="restore-from-snapshot attempts after injected "
+                         "engine crashes before giving up")
     ap.add_argument("--strict-audit", action="store_true",
                     help="routing violations (unknown/missing site= labels) "
                          "raise [AF007] RuntimeErrors at dispatch time, and "
@@ -121,14 +164,28 @@ def main(argv=None):
     params = lm.init_params(cfg, jax.random.PRNGKey(0))
     if args.prefix_cache and not args.kv_pages:
         ap.error("--prefix-cache requires --kv-pages (paged mode)")
-    engine = ServingEngine(cfg, params,
-                           ServeConfig(max_batch=args.max_batch,
-                                       max_seq=128,
-                                       prefill_mode=args.prefill_mode,
-                                       prefill_chunk=args.prefill_chunk,
-                                       kv_pages=args.kv_pages,
-                                       page_size=args.page_size,
-                                       prefix_cache=args.prefix_cache))
+    chaos_cfg = chaos.parse_spec(args.chaos) if args.chaos else None
+    snapshot_every = args.snapshot_every
+    if (chaos_cfg is not None and not snapshot_every
+            and (chaos_cfg.crash > 0.0 or chaos_cfg.crash_at >= 0)):
+        snapshot_every = 1      # crash chaos without snapshots cannot recover
+    sc = ServeConfig(max_batch=args.max_batch,
+                     max_seq=128,
+                     prefill_mode=args.prefill_mode,
+                     prefill_chunk=args.prefill_chunk,
+                     kv_pages=args.kv_pages,
+                     page_size=args.page_size,
+                     prefix_cache=args.prefix_cache,
+                     max_queue=args.max_queue,
+                     deadline_ms=args.deadline_ms,
+                     ttft_deadline_ms=args.ttft_deadline_ms,
+                     preempt_policy=args.preempt_policy,
+                     snapshot_every_ticks=snapshot_every,
+                     chaos=chaos_cfg)
+    engine = ServingEngine(cfg, params, sc)
+    if chaos_cfg is not None:
+        print(f"chaos: {args.chaos} (snapshot every "
+              f"{snapshot_every or 'never'} ticks)")
     if args.kv_pages:
         print(f"paged KV: {args.kv_pages} pages x {engine.page_size} tok "
               f"({engine.kv_cache_bytes()/1024:.0f} KiB resident K/V), "
@@ -139,15 +196,39 @@ def main(argv=None):
                     temperature=args.temperature, rid=i)
             for i, p in enumerate(prompts)]
     for r in reqs:
-        engine.submit(r)
+        try:
+            engine.submit(r)
+        except AdmissionError as e:
+            print(f"req {r.rid}: rejected ({e})")
     t0 = time.time()
-    ticks = engine.run_to_completion()
+    ticks, restarts = 0, 0
+    while True:
+        try:
+            ticks += engine.run_to_completion()
+            break
+        except EngineCrash as e:
+            restarts += 1
+            snap = engine.latest_snapshot()
+            if snap is None or restarts > args.max_restarts:
+                raise
+            print(f"engine crashed ({e}); restoring from snapshot "
+                  f"[restart {restarts}/{args.max_restarts}]")
+            engine = ServingEngine.restore(cfg, params, sc, snap)
     dt = time.time() - t0
+    # a restored engine rebuilt its Request objects from the snapshot:
+    # merge by rid so reporting reflects the final state of every stream
+    final = {r.rid: r for r in reqs}
+    for r in engine.restored_requests:
+        final[r.rid] = r
+    reqs = [final[r.rid] for r in reqs]
     total = sum(len(r.out_tokens) for r in reqs)
     for r in reqs:
-        print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens}")
+        print(f"req {r.rid}: prompt={r.prompt} -> {r.out_tokens} "
+              f"[{r.outcome or 'pending'}]")
     print(f"{total} tokens in {dt:.2f}s ({total/max(dt,1e-9):.1f} tok/s, "
           f"{ticks} ticks)")
+    if restarts:
+        print(f"recovered from {restarts} injected crash(es)")
     print(phase_report(engine, reqs))
     return reqs
 

@@ -1,2 +1,3 @@
 from repro.runtime.fault import FaultToleranceManager, HeartbeatMonitor  # noqa: F401
 from repro.runtime.elastic import ElasticState, replan_mesh  # noqa: F401
+from repro.runtime.chaos import ChaosConfig, ChaosEngine, parse_spec  # noqa: F401

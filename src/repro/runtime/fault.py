@@ -61,6 +61,13 @@ class HeartbeatMonitor:
                 if hb.step_time_s > self.straggler_factor * med]
 
 
+# exceptions the restart loop treats as recoverable node failures by
+# default: hardware/runtime crashes and I/O errors.  Programming errors
+# (TypeError, ValueError, ...) propagate — restarting cannot fix them and
+# retrying silently would loop max_restarts times before surfacing.
+RECOVERABLE = (RuntimeError, OSError)
+
+
 @dataclass
 class FaultToleranceManager:
     """Drives the checkpoint-restart loop around a train step."""
@@ -69,7 +76,9 @@ class FaultToleranceManager:
     monitor: HeartbeatMonitor
     ckpt_every: int = 100
     max_restarts: int = 100
+    host_index: int = 0                   # this process's host id for beats
     restarts: int = field(default=0)
+    cold_restarts: int = field(default=0)
 
     def should_checkpoint(self, step: int) -> bool:
         return step > 0 and step % self.ckpt_every == 0
@@ -83,12 +92,28 @@ class FaultToleranceManager:
         return "ok"
 
     def run(self, state, step_fn: Callable, data_source, n_steps: int,
-            inject_failure: Optional[Callable] = None):
+            inject_failure: Optional[Callable] = None,
+            recoverable: tuple = RECOVERABLE,
+            cold_restart: str = "raise"):
         """Resumable loop: state must be a pytree the ckpt manager can save.
 
         `step_fn(state, batch) -> state`; `inject_failure(step)` raises to
         simulate a crash (tests).  Returns (state, steps_run, restarts).
+
+        Only exceptions in `recoverable` trigger checkpoint-restart
+        (default: :data:`RECOVERABLE` — runtime/hardware and I/O errors);
+        everything else propagates immediately.  A failure with *no*
+        durable checkpoint is a **cold restart**: `cold_restart="raise"`
+        (default) re-raises the original exception — replaying from step 0
+        silently is almost never what a production job wants — while
+        `"restart"` opts in to the replay, counted in `cold_restarts`
+        (training state must be rebuilt by the caller's step-0 semantics:
+        the initial `state` object is reused as passed).
         """
+        if cold_restart not in ("raise", "restart"):
+            raise ValueError(f"cold_restart={cold_restart!r}: "
+                             f"expected 'raise' or 'restart'")
+        init_state = state
         start = self.ckpt_manager.latest_step()
         if start is not None:
             state, start = self.ckpt_manager.restore(state)
@@ -100,11 +125,12 @@ class FaultToleranceManager:
                 t0 = time.monotonic()
                 batch = data_source.batch_at(step)
                 state = step_fn(state, batch)
-                self.monitor.beat(0, step, time.monotonic() - t0)
+                self.monitor.beat(self.host_index, step,
+                                  time.monotonic() - t0)
                 step += 1
                 if self.should_checkpoint(step):
                     self.ckpt_manager.save_async(step, state)
-            except RuntimeError:
+            except recoverable:
                 self.restarts += 1
                 if self.restarts > self.max_restarts:
                     raise
@@ -112,7 +138,10 @@ class FaultToleranceManager:
                 restored, rstep = self.ckpt_manager.restore(state)
                 if restored is not None:
                     state, step = restored, rstep
+                elif cold_restart == "restart":
+                    self.cold_restarts += 1
+                    state, step = init_state, 0
                 else:
-                    step = 0
+                    raise
         self.ckpt_manager.wait()
         return state, step, self.restarts

@@ -51,9 +51,42 @@ re-running the in-trace quantize (the AF008 path) every step.
 Sampling: greedy or temperature; logits come back fp32 from the model.
 Greedy token streams are bit-identical across prefill modes and across
 batch compositions (per-row cache evolution is independent).
+
+**Resilience** (PR 8 — see docs/resilience.md): every request terminates
+with a typed :class:`~repro.serving.errors.Outcome`, counted in
+``stats["outcome_*"]``.  The hardened lifecycle adds
+
+* a bounded queue (``max_queue``) with typed overload rejection at
+  ``submit`` (:class:`~repro.serving.errors.AdmissionError`),
+* per-request TTFT/total deadlines (``ttft_deadline_ms``/``deadline_ms``)
+  expired at tick boundaries,
+* non-finite-logit detection at sample time with one bounded retry
+  (``max_retries``) — a persistent NaN/Inf fails the affected requests
+  instead of streaming garbage tokens,
+* :class:`~repro.serving.errors.KernelFault` retry at the trace/launch
+  boundary (the substrate's ``substrate.dispatch`` chaos point),
+* a per-tick heartbeat into :class:`~repro.runtime.fault.HeartbeatMonitor`
+  plus a stuck-tick watchdog (``watchdog_ticks``) that deterministically
+  fails the head-of-line request instead of spinning forever,
+* graceful degradation under ``preempt_policy="youngest"``: pages are
+  reserved lazily and on mid-decode pool exhaustion the youngest resident
+  sequence is preempted (pages released, request re-queued at the front,
+  K/V recomputed on re-admission — through the radix prefix cache when
+  warm) rather than deadlocking; preempted streams are bit-identical to
+  un-preempted runs by the prefill == decode equivalence contract,
+* crash recovery: ``snapshot()``/``ServingEngine.restore`` round-trip the
+  full scheduling state (queue, slot/sequence metadata, block tables,
+  pool refcounts, radix tree, PRNG key, chaos draw counters, K/V cache)
+  so an :class:`~repro.serving.errors.EngineCrash` mid-stream resumes
+  with bit-identical continuations.
+
+Fault injection is driven by :mod:`repro.runtime.chaos` (seeded,
+deterministic, replayable); ``ServeConfig.chaos`` activates it and the
+engine scopes the chaos engine around each tick.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from dataclasses import dataclass, field
 from typing import List, Optional
@@ -67,6 +100,11 @@ from repro.core import planner
 from repro.kernels import substrate
 from repro.models import lm
 from repro.parallel import sharding
+from repro.runtime import chaos as chaos_mod
+from repro.runtime.fault import HeartbeatMonitor
+from repro.serving.errors import (AdmissionError, DeadlineExceeded,
+                                  EngineCrash, KernelFault, Outcome,
+                                  PagePoolExhausted)
 from repro.serving.paged import PagePool, PagedSeq, RadixCache
 
 PREFILL_CHUNK_CHOICES = (16, 32, 64, 128, 256, 512, 1024, 2048)
@@ -81,6 +119,12 @@ class Request:
     out_tokens: list = field(default_factory=list)
     done: bool = False
     ttft_s: Optional[float] = None     # admission -> first generated token
+    # --- resilience (PR 8) ----------------------------------------------
+    outcome: Optional[str] = None      # Outcome.value once done
+    error: str = ""                    # human-readable failure detail
+    preemptions: int = 0               # times preempted + re-queued
+    t_submit: float = 0.0              # engine clock at submit
+    resume_prompt: Optional[list] = None  # prompt + generated, for re-admit
 
 
 @dataclass(frozen=True)
@@ -95,6 +139,16 @@ class ServeConfig:
     kv_pages: int = 0           # physical pages in the pool (incl. scratch)
     page_size: int = 0          # tokens per page; 0 -> planner.page_plan
     prefix_cache: bool = False  # radix shared-prefix page reuse
+    # --- resilience (PR 8) -----------------------------------------------
+    max_queue: int = 0          # bounded queue; 0 = unbounded (no shedding)
+    deadline_ms: float = 0.0    # total per-request deadline; 0 = off
+    ttft_deadline_ms: float = 0.0  # submit -> first token deadline; 0 = off
+    max_retries: int = 1        # bounded retry of a faulted/NaN dispatch
+    watchdog_ticks: int = 64    # consecutive no-progress ticks before the
+    #                             stuck-tick watchdog fires; 0 = off
+    snapshot_every_ticks: int = 0  # crash-recovery snapshot cadence; 0 = off
+    preempt_policy: str = "none"   # none | youngest (paged lazy reservation)
+    chaos: Optional[chaos_mod.ChaosConfig] = None  # fault injection
 
 
 class Slot:
@@ -145,12 +199,45 @@ class Slot:
         return self.prefill_done if self.state == Slot.PREFILL else self.pos
 
 
+def _req_state(req: Request) -> dict:
+    """Pure-python deep copy of a request for crash-recovery snapshots."""
+    return {"prompt": list(req.prompt),
+            "max_new_tokens": req.max_new_tokens,
+            "temperature": req.temperature, "rid": req.rid,
+            "out_tokens": list(req.out_tokens), "done": req.done,
+            "ttft_s": req.ttft_s, "outcome": req.outcome,
+            "error": req.error, "preemptions": req.preemptions,
+            "t_submit": req.t_submit,
+            "resume_prompt": (None if req.resume_prompt is None
+                              else list(req.resume_prompt))}
+
+
+def _req_from_state(d: dict) -> Request:
+    req = Request(prompt=list(d["prompt"]),
+                  max_new_tokens=d["max_new_tokens"],
+                  temperature=d["temperature"], rid=d["rid"],
+                  out_tokens=list(d["out_tokens"]), done=d["done"],
+                  ttft_s=d["ttft_s"])
+    req.outcome = d["outcome"]
+    req.error = d["error"]
+    req.preemptions = d["preemptions"]
+    req.t_submit = d["t_submit"]
+    req.resume_prompt = (None if d["resume_prompt"] is None
+                         else list(d["resume_prompt"]))
+    return req
+
+
 class ServingEngine:
-    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig):
+    def __init__(self, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                 *, clock=time.perf_counter):
         # config-resolve-time backend validation: an unknown gemm_backend
         # fails here with the registered list, not deep inside a traced
         # dispatch mid-serve
         substrate.check_backend(cfg.gemm_backend)
+        if serve_cfg.preempt_policy not in ("none", "youngest"):
+            raise ValueError(
+                f"unknown preempt_policy {serve_cfg.preempt_policy!r} "
+                f"(known: none, youngest)")
         self.cfg = cfg
         # Quantizing backends serve from a pre-quantized tree: weights
         # quantize ONCE here, never inside the compiled steps (no AF008
@@ -160,6 +247,7 @@ class ServingEngine:
                        if substrate.backend_quantizes(cfg.gemm_backend)
                        else params)
         self.sc = serve_cfg
+        self.clock = clock
         # SPMD serving: cfg.mesh_shape activates sharded GEMM dispatch
         # inside the jit'd lm steps (the lm entry points scope the mesh
         # themselves).  Resolve the mesh eagerly so a config that needs
@@ -213,11 +301,17 @@ class ServingEngine:
                     f"(the paged/dense bit-exactness contract)")
             self.page_size = page
             self.pages_per_seq = S // page
-            if serve_cfg.kv_pages < self.pages_per_seq + 1:
+            if (serve_cfg.preempt_policy == "none"
+                    and serve_cfg.kv_pages < self.pages_per_seq + 1):
+                # worst-case reservation needs a full sequence's pages up
+                # front; lazy reservation (preempt_policy="youngest") can
+                # run a tighter pool and degrade by preempting instead
                 raise ValueError(
                     f"kv_pages={serve_cfg.kv_pages}: need at least "
                     f"{self.pages_per_seq + 1} (max_seq/page_size pages "
-                    f"for one worst-case sequence + the scratch page)")
+                    f"for one worst-case sequence + the scratch page), "
+                    f"or set preempt_policy='youngest' for lazy "
+                    f"reservation over a smaller pool")
             self.pool = PagePool(serve_cfg.kv_pages, page)
             self.radix = (RadixCache(page) if serve_cfg.prefix_cache
                           else None)
@@ -235,6 +329,21 @@ class ServingEngine:
             self.cache = lm.init_cache(cfg, B, S)
             self.slots = [Slot(i) for i in range(B)]
             self.active = []
+            self._rr = 0
+
+        # --- resilience state (PR 8) ------------------------------------
+        self._chaos = (chaos_mod.ChaosEngine(serve_cfg.chaos)
+                       if serve_cfg.chaos is not None else None)
+        # single-host serving: the engine heartbeats host 0 once per tick;
+        # an external supervisor (or test) reads dead_hosts()/stragglers()
+        self.monitor = HeartbeatMonitor(1, dead_after_s=60.0)
+        self._tick = 0
+        self._no_progress = 0
+        self._admit_seq = 0        # monotonic admission number (preemption)
+        self._admitted = 0
+        self._terminated = 0
+        self._snapshots: List[dict] = []   # latest crash-recovery snapshot
+        self.restored_requests: List[Request] = []  # set by restore()
 
         self._prefill_launches = 0   # per-trace GEMM launches of one chunk
         self.stats = dict(prefill_dispatches=0, decode_dispatches=0,
@@ -242,7 +351,13 @@ class ServingEngine:
                           prefill_time_s=0.0, decode_time_s=0.0,
                           prefill_gemm_dispatches=0,
                           pages_used_peak=0, concurrency_peak=0,
-                          prefix_hit_tokens=0)
+                          prefix_hit_tokens=0,
+                          # resilience counters (flat ints: benches reset
+                          # stats wholesale by scalar type)
+                          sample_retries=0, kernel_fault_retries=0,
+                          preemptions=0, watchdog_fired=0,
+                          snapshots_taken=0,
+                          **{f"outcome_{o.value}": 0 for o in Outcome})
 
     def kv_cache_bytes(self) -> int:
         """Resident K/V bytes (pool pages in paged mode, the dense
@@ -251,43 +366,79 @@ class ServingEngine:
                        for leaf in jax.tree_util.tree_leaves(self.cache)))
 
     # ------------------------------------------------------------- intake
+    def _finish(self, req: Request, outcome: Outcome, error: str = ""):
+        """Terminate ``req`` with its typed outcome (idempotent)."""
+        if req.done and req.outcome is not None:
+            return
+        req.done = True
+        req.outcome = outcome.value
+        req.error = error
+        self._terminated += 1
+        self.stats[f"outcome_{outcome.value}"] += 1
+
     def submit(self, req: Request):
         if not req.prompt:
-            raise ValueError(f"request {req.rid}: empty prompt")
+            msg = f"request {req.rid}: empty prompt"
+            self._finish(req, Outcome.FAILED, msg)
+            raise AdmissionError(msg)
         if len(req.prompt) > self.sc.max_seq:
-            raise ValueError(
-                f"request {req.rid}: prompt of {len(req.prompt)} tokens "
-                f"exceeds max_seq={self.sc.max_seq} (positions past the "
-                f"cache would be silently dropped)")
+            msg = (f"request {req.rid}: prompt of {len(req.prompt)} tokens "
+                   f"exceeds max_seq={self.sc.max_seq} (positions past the "
+                   f"cache would be silently dropped)")
+            self._finish(req, Outcome.FAILED, msg)
+            raise AdmissionError(msg)
+        if self.sc.max_queue and len(self.queue) >= self.sc.max_queue:
+            # bounded queue: shed load with a typed rejection instead of
+            # growing without bound (backpressure the caller can act on)
+            msg = (f"request {req.rid}: queue full "
+                   f"({len(self.queue)}/{self.sc.max_queue}) — overload, "
+                   f"retry later")
+            self._finish(req, Outcome.REJECTED_OVERLOAD, msg)
+            raise AdmissionError(msg, Outcome.REJECTED_OVERLOAD)
+        req.t_submit = self.clock()
         self.queue.append(req)
 
     def _admit(self):
         if self.paged:
             self._admit_paged()
             return
-        now = time.perf_counter()
+        now = self.clock()
         for slot in self.slots:
             if slot.state == Slot.FREE and self.queue:
                 slot.assign(self.queue.pop(0), now)
+                self._admitted += 1
+
+    def _effective_prompt(self, req: Request) -> list:
+        """The token sequence this admission must make resident: a
+        preempted request re-admits with prompt + already-generated tokens
+        (recompute-on-re-admission; prefix-cache hits make it cheap)."""
+        return req.resume_prompt if req.resume_prompt else req.prompt
 
     def _admit_paged(self):
         """Memory-bounded admission: FIFO-pop the queue while the pool can
-        reserve each request's worst-case page span (prompt + max_new,
-        clipped to max_seq) — minus whatever the radix prefix cache
-        already holds.  Concurrency is whatever the page budget sustains,
-        not ``max_batch``."""
-        now = time.perf_counter()
+        reserve each request's page span — worst-case (prompt + max_new,
+        clipped to max_seq) under ``preempt_policy="none"``, lazy (prompt
+        only, grown page-by-page in decode) under ``"youngest"`` — minus
+        whatever the radix prefix cache already holds.  Concurrency is
+        whatever the page budget sustains, not ``max_batch``."""
+        now = self.clock()
         while self.queue:
             req = self.queue[0]
-            target = min(len(req.prompt) + req.max_new_tokens,
-                         self.sc.max_seq)
-            need = -(-target // self.page_size)
+            eff = self._effective_prompt(req)
+            if self.sc.preempt_policy == "youngest":
+                # lazy: cover the prompt (prefill writes 0..len-2, first
+                # decode write at len-1); decode growth allocates the rest
+                need = -(-len(eff) // self.page_size)
+            else:
+                target = min(len(eff) + req.max_new_tokens
+                             - len(req.out_tokens), self.sc.max_seq)
+                need = -(-target // self.page_size)
             shared: List[int] = []
-            if self.radix is not None and len(req.prompt) > 1:
+            if self.radix is not None and len(eff) > 1:
                 # only K/V of prompt[:-1] may be borrowed: the final
                 # prompt token must run through this request's own decode
                 # to produce its first logits
-                shared = self.radix.match(req.prompt[:len(req.prompt) - 1])
+                shared = self.radix.match(eff[:len(eff) - 1])
                 shared = shared[:need]
                 for pg in shared:
                     self.pool.incref(pg)   # pin before any eviction below
@@ -300,12 +451,15 @@ class ServingEngine:
                     self.pool.decref(pg)
                 break
             self.queue.pop(0)
-            seq = PagedSeq(req, self.pages_per_seq)
+            seq = PagedSeq(req, self.pages_per_seq, prompt=eff)
             m = len(shared)
             seq.block_table[:m] = shared
             seq.block_table[m:m + len(pages)] = pages
             seq.n_shared = m
             seq.t_admit = now
+            seq.admit_idx = self._admit_seq
+            self._admit_seq += 1
+            self._admitted += 1
             seq.prefill_done = m * self.page_size
             self.stats["prefix_hit_tokens"] += m * self.page_size
             if seq.prefill_done >= seq.prefill_len:
@@ -322,9 +476,9 @@ class ServingEngine:
         if self.radix is None or seq.published:
             return
         seq.published = True
-        m = (len(seq.req.prompt) - 1) // self.page_size
+        m = (len(seq.prompt) - 1) // self.page_size
         if m:
-            self.radix.insert(seq.req.prompt[:m * self.page_size],
+            self.radix.insert(seq.prompt[:m * self.page_size],
                               seq.block_table[:m], self.pool)
 
     def _release_paged(self, seq: PagedSeq):
@@ -345,6 +499,46 @@ class ServingEngine:
 
     def _pos_vector(self) -> np.ndarray:
         return np.asarray([s.write_pos for s in self.slots], np.int32)
+
+    # -------------------------------------------------- guarded dispatch
+    def _guarded_dispatch(self, dispatch, rows):
+        """Run one jit'd step under the fault guards: retry (at most
+        ``max_retries`` times) on a :class:`KernelFault` at the
+        trace/launch boundary, and on non-finite logits in the active
+        ``rows`` (the ``engine.sample`` corruption point — also catches a
+        *real* kernel producing NaN/Inf).  Returns ``(logits, new_cache,
+        bad_rows)``; ``bad_rows`` non-empty means the retry budget is
+        spent and the caller must fail those rows' requests instead of
+        sampling garbage.  A persistent KernelFault re-raises.
+
+        ``self.cache`` is only assigned by the caller after this returns:
+        the retry re-dispatches from the same pre-tick cache, so a
+        recovered tick is bit-identical to a clean one (and the PRNG key
+        is untouched — sampling happens after validation)."""
+        retries = max(0, self.sc.max_retries)
+        for attempt in range(retries + 1):
+            try:
+                logits, new_cache = dispatch()
+            except KernelFault:
+                if attempt < retries:
+                    self.stats["kernel_fault_retries"] += 1
+                    continue
+                raise
+            if logits is None:           # prefill: nothing to sample
+                return None, new_cache, ()
+            if self._chaos is not None and self._chaos.fire("engine.sample"):
+                # corrupt to NaN on even draws, +Inf on odd (both must be
+                # caught by the same finiteness check)
+                n = self._chaos.chaos_draws["engine.sample"] - 1
+                logits = jnp.full_like(logits,
+                                       jnp.nan if n % 2 == 0 else jnp.inf)
+            finite = np.asarray(jnp.all(jnp.isfinite(logits), axis=-1))
+            bad = tuple(r for r in rows if not bool(finite[r]))
+            if bad and attempt < retries:
+                self.stats["sample_retries"] += 1
+                continue
+            return logits, new_cache, bad
+        raise AssertionError("unreachable")
 
     # ------------------------------------------------------------ prefill
     def _prefill_tick(self):
@@ -367,13 +561,22 @@ class ServingEngine:
             toks[s.index, :c] = s.req.prompt[s.prefill_done:
                                              s.prefill_done + c]
             lens[s.index] = c
-        t0 = time.perf_counter()
+        t0 = self.clock()
         d0 = sum(substrate.DISPATCH_COUNTS.values())
-        _, self.cache = self._prefill(self.params, self.cache,
-                                      jnp.asarray(toks), jnp.asarray(pos),
-                                      jnp.asarray(lens))
+        try:
+            _, self.cache, _ = self._guarded_dispatch(
+                lambda: (None, self._prefill(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(lens))[1]),
+                rows=())
+        except KernelFault as exc:
+            for s in pre:
+                self._finish(s.req, Outcome.FAILED,
+                             f"KernelFault during prefill: {exc}")
+                s.release()
+            return
         jax.block_until_ready(self.cache)
-        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        self.stats["prefill_time_s"] += self.clock() - t0
         self.stats["prefill_dispatches"] += 1
         self.stats["prefill_tokens"] += int(lens.sum())
         self._count_prefill_launches(d0)
@@ -392,17 +595,27 @@ class ServingEngine:
         bt = np.zeros((B, self.pages_per_seq), np.int32)
         for r, s in enumerate(sel):
             c = min(C, s.prefill_len - s.prefill_done)
-            toks[r, :c] = s.req.prompt[s.prefill_done:s.prefill_done + c]
+            toks[r, :c] = s.prompt[s.prefill_done:s.prefill_done + c]
             pos[r] = s.prefill_done
             lens[r] = c
             bt[r] = s.block_table
-        t0 = time.perf_counter()
+        t0 = self.clock()
         d0 = sum(substrate.DISPATCH_COUNTS.values())
-        _, self.cache = self._prefill_paged(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(lens), jnp.asarray(bt))
+        try:
+            _, self.cache, _ = self._guarded_dispatch(
+                lambda: (None, self._prefill_paged(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(lens),
+                    jnp.asarray(bt))[1]),
+                rows=())
+        except KernelFault as exc:
+            for s in sel:
+                self._finish(s.req, Outcome.FAILED,
+                             f"KernelFault during prefill: {exc}")
+                self._release_paged(s)
+            return
         jax.block_until_ready(self.cache)
-        self.stats["prefill_time_s"] += time.perf_counter() - t0
+        self.stats["prefill_time_s"] += self.clock() - t0
         self.stats["prefill_dispatches"] += 1
         self.stats["prefill_tokens"] += int(lens.sum())
         self._count_prefill_launches(d0)
@@ -422,16 +635,76 @@ class ServingEngine:
             toks[slot.index] = t
             pos_v = self._pos_vector()
             pos_v[slot.index] = i
-            t0 = time.perf_counter()
-            _, self.cache = self._decode(self.params, self.cache,
-                                         jnp.asarray(toks),
-                                         jnp.asarray(pos_v))
+            t0 = self.clock()
+            try:
+                _, self.cache, _ = self._guarded_dispatch(
+                    lambda tk=toks, pv=pos_v: (None, self._decode(
+                        self.params, self.cache, jnp.asarray(tk),
+                        jnp.asarray(pv))[1]),
+                    rows=())
+            except KernelFault as exc:
+                self._finish(req, Outcome.FAILED,
+                             f"KernelFault during prefill: {exc}")
+                slot.release()
+                return
             jax.block_until_ready(self.cache)
-            self.stats["prefill_time_s"] += time.perf_counter() - t0
+            self.stats["prefill_time_s"] += self.clock() - t0
             self.stats["prefill_dispatches"] += 1
             self.stats["prefill_tokens"] += 1
             slot.prefill_done = i + 1
         slot._to_decode()
+
+    # ------------------------------------------------- preemption (paged)
+    def _youngest_other(self, s: PagedSeq) -> Optional[PagedSeq]:
+        if self.sc.preempt_policy != "youngest":
+            return None
+        cands = [q for q in self.active if q is not s]
+        return max(cands, key=lambda q: q.admit_idx) if cands else None
+
+    def _preempt(self, victim: PagedSeq):
+        """Release the victim's pages and re-queue it at the front; on
+        re-admission the effective prompt (original + generated so far)
+        is recomputed — through the radix prefix cache when warm — which
+        reproduces the K/V state exactly (prefill == decode equivalence),
+        so the continued stream is bit-identical."""
+        req = victim.req
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        req.resume_prompt = list(req.prompt) + list(req.out_tokens)
+        self._release_paged(victim)
+        self.queue.insert(0, req)
+
+    def _ensure_write_page(self, s: PagedSeq) -> bool:
+        """Make sure the page backing ``s.pos`` exists before this tick's
+        decode write (lazy reservation under ``preempt_policy="youngest"``).
+        Escalation on exhaustion: radix eviction -> preempt the youngest
+        *other* resident -> fail ``s`` itself (PagePoolExhausted).  Under
+        ``"none"`` the worst-case reservation made this a no-op."""
+        idx = s.pos // self.page_size
+        if s.block_table[idx] != PagePool.SCRATCH:
+            return True
+        pages = self.pool.alloc(1)
+        if pages is None and self.radix is not None:
+            self.radix.evict(1, self.pool)
+            pages = self.pool.alloc(1)
+        while pages is None:
+            victim = self._youngest_other(s)
+            if victim is None:
+                break
+            self._preempt(victim)
+            pages = self.pool.alloc(1)
+        if pages is None:
+            err = PagePoolExhausted(
+                f"request {s.req.rid}: no page for decode growth at pos "
+                f"{s.pos} after eviction and preemption")
+            self._finish(s.req, Outcome.FAILED,
+                         f"{type(err).__name__}: {err}")
+            self._release_paged(s)
+            return False
+        s.block_table[idx] = pages[0]
+        self.stats["pages_used_peak"] = max(
+            self.stats["pages_used_peak"], self.pool.n_used)
+        return True
 
     # ------------------------------------------------------------- decode
     def _sample(self, logits, temps):
@@ -441,6 +714,12 @@ class ServingEngine:
             sub, logits / jnp.maximum(temps[:, None], 1e-6))
         return np.asarray(jnp.where(temps > 0, sampled, greedy))
 
+    def _finish_stream(self, req: Request):
+        """Normal terminal: OK, or PREEMPTED_RETRIED if the stream was
+        ever preempted and recomputed on the way."""
+        self._finish(req, Outcome.PREEMPTED_RETRIED if req.preemptions
+                     else Outcome.OK)
+
     def _decode_tick_paged(self):
         dec = [s for s in self.active if s.state == PagedSeq.DECODE]
         if not dec:
@@ -449,7 +728,19 @@ class ServingEngine:
         # round-robin: when more sequences are resident than dispatch rows,
         # rotate so every sequence makes progress (no starvation)
         start = self._rr % len(dec)
-        sel = (dec[start:] + dec[:start])[:B]
+        order = dec[start:] + dec[:start]
+        sel: List[PagedSeq] = []
+        for s in order:
+            if len(sel) >= B:
+                break
+            if s not in self.active:   # preempted/failed by earlier growth
+                continue
+            if self._ensure_write_page(s):
+                sel.append(s)
+        # growth may have preempted a sequence selected earlier this loop
+        sel = [s for s in sel if s in self.active]
+        if not sel:
+            return
         self._rr += len(sel)
         toks = np.zeros(B, np.int32)
         temps = np.zeros(B, np.float32)
@@ -460,17 +751,32 @@ class ServingEngine:
             temps[r] = s.req.temperature
             pos[r] = s.pos
             bt[r] = s.block_table
-        t0 = time.perf_counter()
-        logits, self.cache = self._decode_paged(
-            self.params, self.cache, jnp.asarray(toks), jnp.asarray(pos),
-            jnp.asarray(bt))
+        t0 = self.clock()
+        try:
+            logits, new_cache, bad = self._guarded_dispatch(
+                lambda: self._decode_paged(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(pos), jnp.asarray(bt)),
+                rows=range(len(sel)))
+        except KernelFault as exc:
+            for s in sel:
+                self._finish(s.req, Outcome.FAILED, f"KernelFault: {exc}")
+                self._release_paged(s)
+            return
+        self.cache = new_cache
         nxt = self._sample(logits, jnp.asarray(temps))
-        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_time_s"] += self.clock() - t0
         self.stats["decode_dispatches"] += 1
         self.stats["decode_tokens"] += len(sel)
-        now = time.perf_counter()
+        now = self.clock()
         for r, s in enumerate(sel):
             req = s.req
+            if r in bad:
+                self._finish(req, Outcome.FAILED,
+                             "non-finite logits at sample time "
+                             "(retry budget spent)")
+                self._release_paged(s)
+                continue
             tok = int(nxt[r])
             if not req.out_tokens:
                 req.ttft_s = now - s.t_admit
@@ -480,7 +786,7 @@ class ServingEngine:
             if (tok == self.sc.eos_id
                     or len(req.out_tokens) >= req.max_new_tokens
                     or s.pos >= self.sc.max_seq - 1):
-                req.done = True
+                self._finish_stream(req)
                 self._release_paged(s)
 
     def _decode_tick(self):
@@ -495,17 +801,32 @@ class ServingEngine:
         for s in dec:
             toks[s.index] = s.next_token
             temps[s.index] = s.req.temperature
-        t0 = time.perf_counter()
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks),
-                                          jnp.asarray(self._pos_vector()))
+        t0 = self.clock()
+        try:
+            logits, new_cache, bad = self._guarded_dispatch(
+                lambda: self._decode(
+                    self.params, self.cache, jnp.asarray(toks),
+                    jnp.asarray(self._pos_vector())),
+                rows=[s.index for s in dec])
+        except KernelFault as exc:
+            for s in dec:
+                self._finish(s.req, Outcome.FAILED, f"KernelFault: {exc}")
+                s.release()
+            return
+        self.cache = new_cache
         nxt = self._sample(logits, jnp.asarray(temps))
-        self.stats["decode_time_s"] += time.perf_counter() - t0
+        self.stats["decode_time_s"] += self.clock() - t0
         self.stats["decode_dispatches"] += 1
         self.stats["decode_tokens"] += len(dec)
-        now = time.perf_counter()
+        now = self.clock()
         for s in dec:
             req = s.req
+            if s.index in bad:
+                self._finish(req, Outcome.FAILED,
+                             "non-finite logits at sample time "
+                             "(retry budget spent)")
+                s.release()
+                continue
             tok = int(nxt[s.index])
             if not req.out_tokens:
                 req.ttft_s = now - s.t_admit
@@ -515,7 +836,72 @@ class ServingEngine:
             if (tok == self.sc.eos_id
                     or len(req.out_tokens) >= req.max_new_tokens
                     or s.pos >= self.sc.max_seq - 1):
-                req.done = True
+                self._finish_stream(req)
+                s.release()
+
+    # ---------------------------------------------------------- deadlines
+    def _deadline_reason(self, req: Request, now: float) -> str:
+        waited_ms = (now - req.t_submit) * 1e3
+        if self.sc.deadline_ms and waited_ms > self.sc.deadline_ms:
+            return (f"total deadline {self.sc.deadline_ms:g}ms passed "
+                    f"({waited_ms:.1f}ms since submit)")
+        if (self.sc.ttft_deadline_ms and not req.out_tokens
+                and waited_ms > self.sc.ttft_deadline_ms):
+            return (f"TTFT deadline {self.sc.ttft_deadline_ms:g}ms passed "
+                    f"({waited_ms:.1f}ms since submit, no token yet)")
+        return ""
+
+    def _expire_deadlines(self):
+        if not (self.sc.deadline_ms or self.sc.ttft_deadline_ms):
+            return
+        now = self.clock()
+        for req in list(self.queue):
+            why = self._deadline_reason(req, now)
+            if why:
+                self.queue.remove(req)
+                self._finish(req, Outcome.DEADLINE_EXPIRED,
+                             f"{DeadlineExceeded.__name__}: {why}")
+        if self.paged:
+            for s in list(self.active):
+                why = self._deadline_reason(s.req, now)
+                if why:
+                    self._finish(s.req, Outcome.DEADLINE_EXPIRED,
+                                 f"{DeadlineExceeded.__name__}: {why}")
+                    self._release_paged(s)
+        else:
+            for slot in self.slots:
+                if slot.state == Slot.FREE:
+                    continue
+                why = self._deadline_reason(slot.req, now)
+                if why:
+                    self._finish(slot.req, Outcome.DEADLINE_EXPIRED,
+                                 f"{DeadlineExceeded.__name__}: {why}")
+                    slot.release()
+
+    # ----------------------------------------------------------- watchdog
+    def _watchdog_fire(self):
+        """Deterministically break a stuck engine: no admission, dispatch
+        or termination for ``watchdog_ticks`` consecutive ticks means the
+        head-of-line request can never be paid for — fail it (typed) and
+        move on instead of spinning to max_ticks."""
+        self.stats["watchdog_fired"] += 1
+        self._no_progress = 0
+        msg = (f"stuck-tick watchdog: no engine progress for "
+               f"{self.sc.watchdog_ticks} ticks")
+        if self.queue:
+            req = self.queue.pop(0)
+            self._finish(req, Outcome.FAILED,
+                         f"{msg} — failing head-of-line request")
+            return
+        if self.paged and self.active:
+            s = min(self.active, key=lambda q: q.admit_idx)
+            self._finish(s.req, Outcome.FAILED, msg)
+            self._release_paged(s)
+        elif not self.paged:
+            occ = [s for s in self.slots if s.state != Slot.FREE]
+            if occ:
+                s = min(occ, key=lambda q: q.t_admit)
+                self._finish(s.req, Outcome.FAILED, msg)
                 s.release()
 
     # --------------------------------------------------------------- run
@@ -524,21 +910,58 @@ class ServingEngine:
             return bool(self.active)
         return any(s.state != Slot.FREE for s in self.slots)
 
+    def _progress_sig(self):
+        return (self.stats["prefill_dispatches"],
+                self.stats["decode_dispatches"],
+                self._admitted, self._terminated)
+
     def step(self):
-        """One engine tick: admit, at most one prefill chunk dispatch,
-        one fused decode dispatch."""
+        """One engine tick: expire deadlines, admit, at most one prefill
+        chunk dispatch, one fused decode dispatch.  Returns True when the
+        tick made progress (an admission, a dispatch, or a termination).
+
+        Chaos point ``engine.tick``: an injected :class:`EngineCrash`
+        raises out of here mid-stream; recover via ``restore()`` from
+        ``latest_snapshot()``."""
+        self._tick += 1
+        if self._chaos is not None and self._chaos.fire(
+                "engine.tick", f"tick={self._tick}"):
+            raise EngineCrash(
+                f"[chaos] engine killed at tick {self._tick} — restore "
+                f"from latest_snapshot() and rerun run_to_completion()")
+        with chaos_mod.scope(self._chaos):
+            return self._step_inner()
+
+    def _step_inner(self):
+        sig0 = self._progress_sig()
+        self._expire_deadlines()
         self._admit()
-        if not self._resident():
-            return False
-        self._prefill_tick()
-        self._decode_tick()
-        return True
+        if self._resident():
+            self._prefill_tick()
+            self._decode_tick()
+        return self._progress_sig() != sig0
 
     def run_to_completion(self, max_ticks: int = 10000):
         ticks = 0
+        if self.sc.snapshot_every_ticks and not self._snapshots:
+            self._take_snapshot()
         while (self.queue or self._resident()) and ticks < max_ticks:
-            self.step()
+            t0 = self.clock()
+            progress = self.step()
+            # per-tick heartbeat: host 0's liveness + step time feed the
+            # monitor an external supervisor would watch
+            self.monitor.beat(0, self._tick, self.clock() - t0)
             ticks += 1
+            if (self.sc.snapshot_every_ticks
+                    and self._tick % self.sc.snapshot_every_ticks == 0):
+                self._take_snapshot()
+            if progress:
+                self._no_progress = 0
+            else:
+                self._no_progress += 1
+                if (self.sc.watchdog_ticks
+                        and self._no_progress >= self.sc.watchdog_ticks):
+                    self._watchdog_fire()
         if substrate.strict_audit_enabled():
             # post-run routing cross-check: every site label the jit'd
             # steps recorded must be known to planner.model_gemms ([AF007]
@@ -546,3 +969,132 @@ class ServingEngine:
             # analysis.jaxpr_audit pass
             substrate.check_dispatch_sites()
         return ticks
+
+    # ------------------------------------------------- snapshot / restore
+    def _take_snapshot(self):
+        self._snapshots[:] = [self.snapshot()]
+        self.stats["snapshots_taken"] += 1
+
+    def latest_snapshot(self) -> Optional[dict]:
+        return self._snapshots[-1] if self._snapshots else None
+
+    def snapshot(self) -> dict:
+        """Deep copy of the scheduling state at a tick boundary: queue,
+        slot/sequence metadata, block tables, pool refcounts, radix tree,
+        PRNG key, stats, chaos draw counters and the K/V cache (as host
+        numpy).  ``restore()`` rebuilds an engine that continues with
+        bit-identical streams."""
+        snap = {
+            "paged": self.paged,
+            "tick": self._tick,
+            "admit_seq": self._admit_seq,
+            "admitted": self._admitted,
+            "terminated": self._terminated,
+            "rr": self._rr,
+            "key": np.asarray(self.key),
+            "stats": dict(self.stats),
+            "queue": [_req_state(r) for r in self.queue],
+            "cache": jax.tree_util.tree_map(np.asarray, self.cache),
+            "chaos": (self._chaos.state_snapshot()
+                      if self._chaos is not None else None),
+        }
+        if self.paged:
+            snap["seqs"] = [
+                {"req": _req_state(s.req), "prompt": list(s.prompt),
+                 "block_table": list(s.block_table),
+                 "n_shared": s.n_shared, "published": s.published,
+                 "state": s.state, "pos": s.pos,
+                 "prefill_len": s.prefill_len,
+                 "prefill_done": s.prefill_done,
+                 "next_token": s.next_token, "t_admit": s.t_admit,
+                 "admit_idx": s.admit_idx}
+                for s in self.active]
+            snap["pool"] = {"free_pages": list(self.pool.free_pages),
+                            "refcounts": list(self.pool.refcounts)}
+            snap["radix"] = (self.radix.to_snapshot()
+                             if self.radix is not None else None)
+        else:
+            snap["slots"] = [
+                {"state": s.state, "pos": s.pos,
+                 "prefill_len": s.prefill_len,
+                 "prefill_done": s.prefill_done,
+                 "next_token": s.next_token, "t_admit": s.t_admit,
+                 "req": _req_state(s.req) if s.req is not None else None}
+                for s in self.slots]
+        return snap
+
+    def _load_snapshot(self, snap: dict):
+        if bool(snap["paged"]) != self.paged:
+            raise ValueError("snapshot/config mode mismatch: snapshot is "
+                             f"{'paged' if snap['paged'] else 'dense'}, "
+                             f"engine is "
+                             f"{'paged' if self.paged else 'dense'}")
+        self._tick = snap["tick"]
+        self._admit_seq = snap["admit_seq"]
+        self._admitted = snap["admitted"]
+        self._terminated = snap["terminated"]
+        self._rr = snap["rr"]
+        self.key = jnp.asarray(snap["key"])
+        self.stats.update(snap["stats"])
+        self.cache = jax.tree_util.tree_map(jnp.asarray, snap["cache"])
+        self.queue = [_req_from_state(d) for d in snap["queue"]]
+        restored: List[Request] = list(self.queue)
+        if self.paged:
+            self.pool.free_pages[:] = list(snap["pool"]["free_pages"])
+            self.pool.refcounts[:] = list(snap["pool"]["refcounts"])
+            if snap.get("radix") is not None:
+                if self.radix is None:
+                    raise ValueError("snapshot carries a radix tree but "
+                                     "prefix_cache is off in this config")
+                self.radix = RadixCache.from_snapshot(snap["radix"])
+            self.active = []
+            for d in snap["seqs"]:
+                req = _req_from_state(d["req"])
+                seq = PagedSeq(req, len(d["block_table"]),
+                               prompt=d["prompt"])
+                seq.block_table[:] = list(d["block_table"])
+                seq.n_shared = d["n_shared"]
+                seq.published = d["published"]
+                seq.state = d["state"]
+                seq.pos = d["pos"]
+                seq.prefill_len = d["prefill_len"]
+                seq.prefill_done = d["prefill_done"]
+                seq.next_token = d["next_token"]
+                seq.t_admit = d["t_admit"]
+                seq.admit_idx = d["admit_idx"]
+                self.active.append(seq)
+                restored.append(req)
+        else:
+            for slot, d in zip(self.slots, snap["slots"]):
+                slot.state = d["state"]
+                slot.pos = d["pos"]
+                slot.prefill_len = d["prefill_len"]
+                slot.prefill_done = d["prefill_done"]
+                slot.next_token = d["next_token"]
+                slot.t_admit = d["t_admit"]
+                slot.req = (_req_from_state(d["req"])
+                            if d["req"] is not None else None)
+                if slot.req is not None:
+                    restored.append(slot.req)
+        if self._chaos is not None and snap.get("chaos") is not None:
+            self._chaos.load_state(snap["chaos"])
+        self.restored_requests = restored
+
+    @classmethod
+    def restore(cls, cfg: ModelConfig, params, serve_cfg: ServeConfig,
+                snap: dict, *, clock=time.perf_counter,
+                reinject_crash: bool = False) -> "ServingEngine":
+        """Rebuild an engine from ``snapshot()`` state after a crash.
+
+        In-flight requests are rebuilt as fresh :class:`Request` objects
+        (exposed on ``restored_requests``) and continue bit-identically.
+        By default the inherited chaos config drops its ``crash``
+        triggers (:meth:`ChaosConfig.without_crash`): replaying the same
+        seed would otherwise re-kill the engine at the same draw forever.
+        Pass ``reinject_crash=True`` to keep them."""
+        if serve_cfg.chaos is not None and not reinject_crash:
+            serve_cfg = dataclasses.replace(
+                serve_cfg, chaos=serve_cfg.chaos.without_crash())
+        eng = cls(cfg, params, serve_cfg, clock=clock)
+        eng._load_snapshot(snap)
+        return eng

@@ -67,7 +67,17 @@ class PagePool:
         return (self.n_pages - 1) - len(self.free_pages)
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Reserve ``n`` pages (refcount 1 each), or None if short."""
+        """Reserve ``n`` pages (refcount 1 each), or None if short.
+
+        Chaos injection point ``pool.alloc``: the ambient
+        :mod:`repro.runtime.chaos` engine may report exhaustion even when
+        pages are free — exercising the caller's head-of-line-retry /
+        evict / preempt paths without actually shrinking the pool (lazy
+        import; no-op contextvar read when chaos is inactive)."""
+        if n > 0:
+            from repro.runtime import chaos
+            if chaos.fire("pool.alloc", f"n={n} free={len(self.free_pages)}"):
+                return None
         if n > len(self.free_pages):
             return None
         pages = [self.free_pages.pop() for _ in range(n)]
@@ -215,6 +225,40 @@ class RadixCache:
             node = child
         return 0
 
+    # --------------------------------------------------------- snapshot
+    def to_snapshot(self) -> dict:
+        """Pure-python serialization of the trie (engine crash-recovery
+        snapshots).  Pool refcounts are snapshotted by the engine; the
+        tree carries only its structure and LRU clocks."""
+        def ser(node: _Node) -> dict:
+            return {"keys": [list(k) for k in node.keys],
+                    "pages": list(node.pages),
+                    "last_used": node.last_used,
+                    "children": [ser(c) for c in node.children.values()]}
+        return {"page_size": self.page_size, "clock": self._clock,
+                "hit_tokens": self.hit_tokens,
+                "lookup_tokens": self.lookup_tokens,
+                "root": ser(self.root)}
+
+    @classmethod
+    def from_snapshot(cls, snap: dict) -> "RadixCache":
+        out = cls(snap["page_size"])
+        out._clock = snap["clock"]
+        out.hit_tokens = snap["hit_tokens"]
+        out.lookup_tokens = snap["lookup_tokens"]
+
+        def de(d: dict, parent: Optional[_Node]) -> _Node:
+            node = _Node([tuple(k) for k in d["keys"]], d["pages"],
+                         parent=parent)
+            node.last_used = d["last_used"]
+            for cd in d["children"]:
+                child = de(cd, node)
+                node.children[child.keys[0]] = child
+            return node
+
+        out.root = de(snap["root"], None)
+        return out
+
     # ------------------------------------------------------------- evict
     def evict(self, n_needed: int, pool: PagePool) -> int:
         """Drop least-recently-used leaves whose pages only the tree still
@@ -250,22 +294,29 @@ class PagedSeq:
 
     PREFILL, DECODE = "prefill", "decode"
 
-    def __init__(self, req, n_table_entries: int):
+    def __init__(self, req, n_table_entries: int, prompt=None):
         self.req = req
+        # effective prompt: a preempted request re-admits with its
+        # original prompt + already-generated tokens, so recompute (via
+        # the prefix cache when warm) reproduces the K/V state exactly
+        self.prompt: List[int] = (list(prompt) if prompt is not None
+                                  else list(req.prompt))
         self.block_table = [PagePool.SCRATCH] * n_table_entries
         self.n_shared = 0          # leading block_table entries borrowed
         self.published = False     # prefix pages handed to the radix tree
         self.state = PagedSeq.PREFILL
         self.pos = 0
-        self.prefill_len = len(req.prompt) - 1
+        self.prefill_len = len(self.prompt) - 1
         self.prefill_done = 0
         self.next_token = 0
         self.t_admit = 0.0
+        self.admit_idx = 0         # monotonic admission number (preemption
+        #                            picks the youngest deterministically)
 
     def to_decode(self):
         self.state = PagedSeq.DECODE
         self.pos = self.prefill_len
-        self.next_token = self.req.prompt[-1]
+        self.next_token = self.prompt[-1]
 
     @property
     def write_pos(self) -> int:

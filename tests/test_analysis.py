@@ -290,6 +290,43 @@ def test_lint_seeded_paged_state_mutation(tmp_path):
     assert owned == []
 
 
+def test_lint_seeded_chaos_and_snapshot_state_mutation(tmp_path):
+    """AFL03's chaos + snapshot ownership groups: chaos draw-state may
+    only move inside runtime/chaos.py, engine snapshot state only inside
+    serving/engine.py."""
+    zone = tmp_path / "serving"
+    zone.mkdir()
+    (zone / "rogue.py").write_text(textwrap.dedent("""\
+        def hijack(chaos_engine, engine):
+            chaos_engine.chaos_draws["engine.tick"] = 0
+            chaos_engine.chaos_draws.update({"pool.alloc": 9})
+            chaos_engine.chaos_log.append(("engine.tick", 0, "forged"))
+            engine._snapshots.pop()
+            engine._snapshots[0] = {}
+            return engine
+    """))
+    found = ast_lint.lint_paths([tmp_path], root=tmp_path)
+    assert codes(found) == ["AFL03"] and len(found) == 5
+    chaos_msgs = [f for f in found if "runtime/chaos.py" in f.message]
+    snap_msgs = [f for f in found if "serving/engine.py" in f.message
+                 and "snapshot" in f.message]
+    assert len(chaos_msgs) == 3 and len(snap_msgs) == 2
+    # the same mutations under the respective owner paths are clean
+    rt = tmp_path / "runtime"
+    rt.mkdir()
+    (rt / "chaos.py").write_text(textwrap.dedent("""\
+        def advance(self):
+            self.chaos_draws["engine.tick"] = 1
+            self.chaos_log.append(("engine.tick", 1, ""))
+    """))
+    assert ast_lint.lint_paths([rt / "chaos.py"], root=tmp_path) == []
+    (zone / "engine.py").write_text(textwrap.dedent("""\
+        def snap(self):
+            self._snapshots[:] = [{}]
+    """))
+    assert ast_lint.lint_paths([zone / "engine.py"], root=tmp_path) == []
+
+
 def test_lint_allowlist_and_forwarded_site(tmp_path):
     """ALLOWLIST functions may use raw GEMMs; a non-literal site= (a
     forwarder like nn.layers.linear) is left to the runtime check."""

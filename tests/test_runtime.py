@@ -1,0 +1,240 @@
+"""Runtime fault-tolerance layer: heartbeats, checkpoint-restart, elastic.
+
+Promised by ``runtime/fault.py``'s module docstring since the seed: drives
+dead-host / straggler scenarios through :class:`HeartbeatMonitor` with an
+injected clock, the :class:`FaultToleranceManager` restart loop through
+failures injected at every phase of the checkpoint cadence, and property
+tests over :func:`elastic.largest_mesh_shape` (hypothesis, or the stub in
+``tests/_hypothesis_stub.py`` when absent).
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.checkpoint import CheckpointManager
+from repro.runtime import FaultToleranceManager, HeartbeatMonitor
+from repro.runtime import elastic
+from repro.runtime.fault import RECOVERABLE
+
+
+class FakeClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+# ---------------------------------------------------------------- monitor
+def test_monitor_dead_hosts_by_timeout():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(3, dead_after_s=10.0, clock=clk)
+    # nobody has beaten yet: everyone is dead
+    assert mon.dead_hosts() == [0, 1, 2]
+    for h in range(3):
+        mon.beat(h, step=5, step_time_s=1.0)
+    assert mon.dead_hosts() == []
+    clk.t = 11.0
+    assert mon.dead_hosts() == [0, 1, 2]
+    mon.beat(1, step=6, step_time_s=1.0)
+    assert mon.dead_hosts() == [0, 2]
+
+
+def test_monitor_stragglers_need_quorum():
+    clk = FakeClock()
+    mon = HeartbeatMonitor(8, straggler_factor=2.0, clock=clk)
+    mon.beat(0, 1, 10.0)
+    mon.beat(1, 1, 1.0)
+    # fewer than max(2, n//2)=4 beats: no straggler verdicts yet
+    assert mon.stragglers() == []
+    mon.beat(2, 1, 1.0)
+    mon.beat(3, 1, 1.1)
+    assert mon.stragglers() == [0]      # 10s >> 2 x median(~1s)
+
+
+def test_monitor_single_host_never_straggles():
+    mon = HeartbeatMonitor(1, clock=FakeClock())
+    mon.beat(0, 1, 100.0)
+    # a fleet of one has no median to be slower than
+    assert mon.stragglers() == []
+
+
+# ------------------------------------------------- checkpoint-restart loop
+class CountingSource:
+    """batch_at(step) -> the step index; the training invariant below is
+    state == sum of consumed batches, so lost/duplicated batches show up
+    as a wrong final sum."""
+
+    def batch_at(self, step):
+        return step
+
+
+def _mk_ftm(tmp_path, ckpt_every=3, **kw):
+    mgr = CheckpointManager(str(tmp_path / "ckpt"), keep=3)
+    mon = HeartbeatMonitor(1, clock=FakeClock())
+    return FaultToleranceManager(mgr, mon, ckpt_every=ckpt_every, **kw)
+
+
+def _step_fn(state, batch):
+    return {"acc": state["acc"] + np.float64(batch)}
+
+
+@pytest.mark.parametrize("fail_step", list(range(4, 10)))
+def test_restart_resumes_exact_state(tmp_path, fail_step):
+    """Inject one RuntimeError at every phase of the ckpt_every=3 cadence
+    (right after a save, mid-interval, right before one): the loop must
+    reach n_steps with state == sum(range(n)) — no lost or replayed
+    batch escapes the sum."""
+    ft = _mk_ftm(tmp_path)
+    fired = []
+
+    def inject(step):
+        if step == fail_step and not fired:
+            fired.append(step)
+            raise RuntimeError("simulated node failure")
+
+    state, steps, restarts = ft.run({"acc": np.float64(0)}, _step_fn,
+                                    CountingSource(), 10,
+                                    inject_failure=inject)
+    assert steps == 10 and restarts == 1
+    assert state["acc"] == sum(range(10))
+
+
+def test_failure_before_first_checkpoint_raises_by_default(tmp_path):
+    """A crash with no durable checkpoint is a cold restart; the default
+    contract is to surface it, not silently replay from step 0."""
+    ft = _mk_ftm(tmp_path)
+
+    def inject(step):
+        if step == 1:
+            raise RuntimeError("early crash")
+
+    with pytest.raises(RuntimeError, match="early crash"):
+        ft.run({"acc": np.float64(0)}, _step_fn, CountingSource(), 10,
+               inject_failure=inject)
+    assert ft.restarts == 1 and ft.cold_restarts == 0
+
+
+def test_cold_restart_opt_in_replays_from_zero(tmp_path):
+    ft = _mk_ftm(tmp_path)
+    fired = []
+
+    def inject(step):
+        if step == 1 and not fired:
+            fired.append(step)
+            raise RuntimeError("early crash")
+
+    state, steps, restarts = ft.run({"acc": np.float64(0)}, _step_fn,
+                                    CountingSource(), 10,
+                                    inject_failure=inject,
+                                    cold_restart="restart")
+    assert steps == 10 and restarts == 1 and ft.cold_restarts == 1
+    assert state["acc"] == sum(range(10))
+
+
+def test_cold_restart_rejects_unknown_mode(tmp_path):
+    ft = _mk_ftm(tmp_path)
+    with pytest.raises(ValueError, match="cold_restart"):
+        ft.run({"acc": np.float64(0)}, _step_fn, CountingSource(), 2,
+               cold_restart="retry")
+
+
+def test_unrecoverable_exception_propagates(tmp_path):
+    """Programming errors are not node failures: a TypeError must escape
+    the restart loop immediately, not burn max_restarts retries."""
+    assert RuntimeError in RECOVERABLE and OSError in RECOVERABLE
+    ft = _mk_ftm(tmp_path)
+
+    def inject(step):
+        if step == 4:
+            raise TypeError("bug, not a fault")
+
+    with pytest.raises(TypeError):
+        ft.run({"acc": np.float64(0)}, _step_fn, CountingSource(), 10,
+               inject_failure=inject)
+    assert ft.restarts == 0
+
+
+def test_custom_recoverable_tuple(tmp_path):
+    ft = _mk_ftm(tmp_path)
+    fired = []
+
+    def inject(step):
+        if step == 4 and not fired:
+            fired.append(step)
+            raise KeyError("flaky storage layer")
+
+    state, steps, restarts = ft.run({"acc": np.float64(0)}, _step_fn,
+                                    CountingSource(), 10,
+                                    inject_failure=inject,
+                                    recoverable=(KeyError,))
+    assert steps == 10 and restarts == 1
+    assert state["acc"] == sum(range(10))
+
+
+def test_max_restarts_exceeded_reraises(tmp_path):
+    ft = _mk_ftm(tmp_path, max_restarts=2)
+
+    def inject(step):
+        if step == 4:
+            raise RuntimeError("permanent failure")
+
+    with pytest.raises(RuntimeError, match="permanent failure"):
+        ft.run({"acc": np.float64(0)}, _step_fn, CountingSource(), 10,
+               inject_failure=inject)
+    assert ft.restarts == 3        # 2 recoveries + the re-raising attempt
+
+
+def test_beats_carry_host_index(tmp_path):
+    ft = _mk_ftm(tmp_path, host_index=2)
+    ft.monitor.n_hosts = 3
+    ft.run({"acc": np.float64(0)}, _step_fn, CountingSource(), 4)
+    assert 2 in ft.monitor.beats
+    assert 0 not in ft.monitor.beats
+    assert ft.monitor.beats[2].step == 3
+
+
+def test_resume_across_manager_instances(tmp_path):
+    """A fresh FTM over the same directory resumes from the durable step
+    (process-death recovery, not just in-process restart)."""
+    ft1 = _mk_ftm(tmp_path)
+
+    def inject(step):
+        if step == 7:
+            raise OSError("process killed")
+
+    with pytest.raises(OSError):
+        # max_restarts=0 via a fresh manager: make the first failure fatal
+        ft1.max_restarts = 0
+        ft1.run({"acc": np.float64(0)}, _step_fn, CountingSource(), 10,
+                inject_failure=inject)
+    ft2 = _mk_ftm(tmp_path)
+    state, steps, restarts = ft2.run({"acc": np.float64(0)}, _step_fn,
+                                     CountingSource(), 10)
+    assert steps == 10 and restarts == 0
+    assert state["acc"] == sum(range(10))
+
+
+# ------------------------------------------------------------ elastic
+@settings(max_examples=60)
+@given(n=st.integers(min_value=1, max_value=256),
+       m=st.integers(min_value=1, max_value=64))
+def test_largest_mesh_shape_properties(n, m):
+    data, model = elastic.largest_mesh_shape(n, m)
+    assert data * model == n                      # every device placed
+    assert 1 <= model <= min(m, n)                # never exceeds the ask
+    # maximality: no larger valid TP degree <= m divides n
+    assert all(n % k for k in range(model + 1, min(m, n) + 1))
+
+
+@settings(max_examples=30)
+@given(n=st.integers(min_value=1, max_value=64))
+def test_largest_mesh_shape_tp1_is_pure_data(n):
+    assert elastic.largest_mesh_shape(n, 1) == (n, 1)
+
+
+def test_replan_mesh_smoke():
+    mesh, state = elastic.replan_mesh(model_parallel=1)
+    assert state.mesh_shape[0] * state.mesh_shape[1] == state.n_devices
+    assert mesh.axis_names == ("data", "model")
