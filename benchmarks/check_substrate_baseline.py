@@ -27,6 +27,17 @@ What is gated (and why these fields):
   int8 wall-clock ratio is reported but NOT gated (the CPU grid
   interpreter pays the dequant as extra interpreted ops; the Eq.(6')
   columns carry the calibrated win).
+* ``w8a8`` section — the quantize-boundary op counts of a traced W8A8
+  dispatch must match exactly (the int8 x int8 -> int32 dot_generals and
+  the in-kernel activation int8 casts: the integer MAC path engaging is
+  deterministic jaxpr structure — if either count drifts, the kernel's
+  quantize placement changed), the w8a8 dispatch counts must match
+  exactly, the w8a8 logits must stay within the documented 0.12
+  tolerance of fp32 arrayflex, the fused-swiglu planned-k three-way
+  (k_fp32 / k_int8 / k_w8a8) must match exactly, and ``k_shift_sites``
+  (full-decode-cell sites the w8a8 datapath + Eq.(5') activation-quantize
+  term replans to a different k) must match exactly.  W8A8 wall-clock
+  ratios are reported but NOT gated (same CPU-interpreter caveat).
 
 * ``paged`` section — the serving layer's paged-KV workload (five
   requests sharing a system prompt, staggered) is deterministic
@@ -159,6 +170,45 @@ def check(current: dict, baseline: dict, tolerance: float):
                     f"{c_sh['dispatch_counts']} != baseline "
                     f"{b_sh['dispatch_counts']}")
 
+    # --- w8a8: boundary structure, dispatch counts, tolerance, k shift ---
+    w8b = baseline.get("w8a8")
+    w8c = current.get("w8a8")
+    if w8b:
+        if not w8c:
+            errors.append("w8a8 section missing from current report")
+        else:
+            if w8c["quantize_boundary"] != w8b["quantize_boundary"]:
+                errors.append(
+                    f"w8a8 quantize-boundary op counts changed: "
+                    f"{w8c['quantize_boundary']} != baseline "
+                    f"{w8b['quantize_boundary']}")
+            if w8c["dispatch_counts"] != w8b["dispatch_counts"]:
+                errors.append(
+                    f"w8a8 dispatch_counts changed: "
+                    f"{w8c['dispatch_counts']} != baseline "
+                    f"{w8b['dispatch_counts']}")
+            dw = w8c["equivalence"]["logits_max_abs_diff_vs_fp32"]
+            if dw > w8c["equivalence"]["documented_atol"]:
+                errors.append(f"w8a8 logits beyond documented tolerance: "
+                              f"{dw}")
+            for kf in ("k_fp32", "k_int8", "k_w8a8"):
+                if w8c["fused_swiglu"][kf] != w8b["fused_swiglu"][kf]:
+                    errors.append(
+                        f"w8a8 fused-swiglu {kf} changed: "
+                        f"{w8c['fused_swiglu'][kf]} != baseline "
+                        f"{w8b['fused_swiglu'][kf]}")
+            if w8c["k_shift_sites"] != w8b["k_shift_sites"]:
+                errors.append(
+                    f"w8a8 k_shift_sites changed: {w8c['k_shift_sites']} "
+                    f"!= baseline {w8b['k_shift_sites']}")
+            c_sh, b_sh = w8c.get("sharded"), w8b.get("sharded")
+            if c_sh and b_sh and (c_sh["dispatch_counts"]
+                                  != b_sh["dispatch_counts"]):
+                errors.append(
+                    f"w8a8 sharded dispatch_counts changed: "
+                    f"{c_sh['dispatch_counts']} != baseline "
+                    f"{b_sh['dispatch_counts']}")
+
     # --- paged: stream identity, launch/byte structure, reuse win --------
     pgb = baseline.get("paged")
     pgc = current.get("paged")
@@ -231,6 +281,11 @@ def main(argv=None):
                f"{i8['quantize_cache']['hit_rate_after_warmup']:.0%}, "
                f"{i8['k_shift_sites']} k-shift sites"
                if i8 else "")
+    w8 = current.get("w8a8") or {}
+    if w8:
+        i8_note += (f", w8a8 "
+                    f"{w8['quantize_boundary']['int8_int8_dot_generals']} "
+                    f"int8xint8 dots / {w8['k_shift_sites']} k-shift sites")
     pg = current.get("paged") or {}
     if pg:
         gd = pg["prefill_gemm_dispatches"]

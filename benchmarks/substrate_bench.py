@@ -36,6 +36,16 @@ tolerance, the int8 dispatch structure, and the fp32-vs-int8 analytic
 k table (``k_shift_sites``: where the int8 datapath re-picks the
 collapse depth).
 
+New in the W8A8 substrate: the ``w8a8`` section (see ``_w8a8_section``)
+gates the in-kernel quantize-boundary structure of a traced W8A8
+dispatch (int8 x int8 -> int32 dot_generals plus the activation int8
+casts that feed them — the integer MAC path is a jaxpr fact, not a
+tolerance), the fused-swiglu plan three-way (fp32 vs int8 vs w8a8 at
+each backend's planned k with the Eq.(6') speedups), the w8a8-vs-fp32
+logits tolerance, the dispatch structure, and the fp32-vs-w8a8
+``k_shift_sites`` over the full decode cell — where the Eq.(5')
+activation-quantize boundary term re-picks the collapse depth.
+
 CPU wall-times are structural (the Pallas kernel runs in interpret mode);
 the Eq.(6) columns are the hardware-calibrated quantities.
 
@@ -275,8 +285,9 @@ def _sharded_section(iters, backend="arrayflex"):
     Per site: logical vs per-shard (M, N, T), the shard signature, the
     per-shard Eq.(6') cycle count / prediction, and the measured time of
     the per-shard standalone dispatch — the GEMM each device actually
-    executes, epilogue replayed (with int8 codes + scales when
-    ``backend`` quantizes) — so predicted vs measured joins per shard.
+    executes, epilogue replayed (with int8 weight codes + scales when
+    ``backend`` quantizes, and the in-kernel activation quantize when the
+    plan's precision is w8a8) — so predicted vs measured joins per shard.
     The dispatch counts are gated exactly by check_substrate_baseline.py:
     sharded dispatch stays ONE launch per site.  Returns None on hosts
     with fewer than 4 devices (the multi-device CI job provides them via
@@ -321,12 +332,15 @@ def _sharded_section(iters, backend="arrayflex"):
              if ep.bias and not reduce else None)
         act = "none" if reduce else ep.activation
         ws = w2s = None
-        if quant and plan.precision == "int8":
+        # both quantized precisions stage int8 weight codes + scales; the
+        # w8a8 replay additionally quantizes the activation tile in-kernel
+        if quant and plan.precision in ("int8", "w8a8"):
             w, ws = substrate._quantize(w)
             if w2 is not None:
                 w2, w2s = substrate._quantize(w2)
-        f = jax.jit(lambda a, k=plan.k, a_=act: ops.arrayflex_matmul(
-            a, w, w2=w2, bias=b, w_scale=ws, w2_scale=w2s,
+        aq = plan.precision == "w8a8"
+        f = jax.jit(lambda a, k=plan.k, a_=act, q=aq: ops.arrayflex_matmul(
+            a, w, w2=w2, bias=b, w_scale=ws, w2_scale=w2s, act_quant=q,
             activation=a_, k_collapse=k))
         rows.append({
             "site": site,
@@ -452,6 +466,125 @@ def _int8_section(params, toks, iters, fused_iters):
     }
 
 
+def _w8a8_section(params, toks, iters, fused_iters):
+    """W8A8-backend section (gated by check_substrate_baseline.py):
+
+    * ``quantize_boundary`` — jaxpr facts of one traced W8A8 swiglu
+      dispatch: the count of int8 x int8 -> int32 dot_generals and of the
+      in-kernel activation int8 casts that feed them (the weights are
+      persistent and memo-quantized outside the trace, so every int8 cast
+      in the jaxpr IS an activation-quantize boundary).  Gated exactly —
+      the integer MAC path engaging is structure, not a tolerance;
+    * ``fused_swiglu`` — the one-launch dual-GEMM swiglu under fp32 vs
+      int8 vs w8a8 arrayflex, each at its own planned k, with the
+      Eq.(6') speedup columns (wall times structural on the CPU
+      interpreter: the per-tile quantize runs as extra interpreted ops);
+    * ``equivalence`` — w8a8 forward logits vs the fp32 arrayflex
+      backend within the documented tolerance (0.12 on the reduced dense
+      config: weight + activation rounding; gated);
+    * ``dispatch_counts`` — one launch per site under w8a8, fused and
+      expert-batched structure intact (gated exactly);
+    * ``analytic_decode_32k`` — fp32-vs-w8a8 plans side by side for the
+      FULL qwen2-0.5b decode cell; ``k_shift_sites`` counts sites whose
+      best_k moved under the w8a8 datapath + Eq.(5') activation-quantize
+      boundary term (gated exactly);
+    * ``sharded`` — predicted vs measured *per-shard* w8a8 plans under
+      FSDP=2 x TP=2 (>= 4 devices, else null; dispatch counts gated).
+    """
+    from repro.analysis import jaxpr_audit
+
+    rng = np.random.RandomState(5)
+    T, K, N = 256, 512, 512
+    x = jnp.asarray(rng.randn(T, K), jnp.float32)
+    wg = jnp.asarray(rng.randn(K, N), jnp.float32)
+    wu = jnp.asarray(rng.randn(K, N), jnp.float32)
+
+    # -- quantize-boundary structure of the traced dispatch
+    substrate.clear_quant_cache()
+    closed = jax.make_jaxpr(lambda a: substrate.gemm(
+        a, wg, w2=wu, epilogue="swiglu", backend="arrayflex_w8a8"))(x)
+    int8_dots = act_casts = 0
+    for eqn in jaxpr_audit.iter_eqns(closed.jaxpr):
+        if (eqn.primitive.name == "dot_general"
+                and {str(v.aval.dtype) for v in eqn.invars} == {"int8"}
+                and str(eqn.outvars[0].aval.dtype) == "int32"):
+            int8_dots += 1
+        if (eqn.primitive.name == "convert_element_type"
+                and str(eqn.outvars[0].aval.dtype) == "int8"
+                and eqn.outvars[0].aval.ndim >= 2):
+            act_casts += 1
+    assert int8_dots > 0, "w8a8 dispatch staged no int8 x int8 dot_general"
+    quantize_boundary = {"int8_int8_dot_generals": int8_dots,
+                         "act_quantize_casts": act_casts}
+
+    # -- fused swiglu three-way: each backend at its own planned k
+    ep = substrate.Epilogue(kind="swiglu")
+    plans = {be: substrate.plan_gemm(N, K, T, be, ep)
+             for be in ("arrayflex", "arrayflex_int8", "arrayflex_w8a8")}
+    t_us = {}
+    for be in plans:
+        f = jax.jit(lambda a, be=be: substrate.gemm(
+            a, wg, w2=wu, epilogue="swiglu", backend=be))
+        t_us[be] = _time_min(f, x, iters=fused_iters, repeats=3)
+    pw = plans["arrayflex_w8a8"]
+    fused_swiglu = {
+        "T": T, "K": K, "N": N,
+        "k_fp32": plans["arrayflex"].k,
+        "k_int8": plans["arrayflex_int8"].k,
+        "k_w8a8": pw.k,
+        "fp32_us": round(t_us["arrayflex"], 1),
+        "int8_us": round(t_us["arrayflex_int8"], 1),
+        "w8a8_us": round(t_us["arrayflex_w8a8"], 1),
+        "eq6_speedup_vs_fp32": round(
+            plans["arrayflex"].t_pred_ps / pw.t_pred_ps, 3),
+        "eq6_speedup_vs_int8": round(
+            plans["arrayflex_int8"].t_pred_ps / pw.t_pred_ps, 3)}
+
+    # -- model equivalence at the documented tolerance
+    fwd_fp = jax.jit(lambda p, b: lm.forward(_cfg("arrayflex"), p, b)[0])
+    fwd_w8 = jax.jit(lambda p, b: lm.forward(_cfg("arrayflex_w8a8"),
+                                             p, b)[0])
+    diff = float(np.max(np.abs(
+        np.float32(fwd_w8(params, {"tokens": toks}))
+        - np.float32(fwd_fp(params, {"tokens": toks})))))
+    assert diff < 0.12, f"w8a8 logits beyond documented tolerance: {diff}"
+
+    # -- dispatch structure under w8a8 (one launch per site)
+    counts = {}
+    for arch in ("qwen2-0.5b", "qwen3-moe-30b-a3b"):
+        cfg = reduced(get_config(arch), compute_dtype="float32",
+                      param_dtype="float32", gemm_backend="arrayflex_w8a8")
+        p = lm.init_params(cfg, jax.random.PRNGKey(0))
+        substrate.clear_plan_cache()
+        jax.eval_shape(lambda pp, b, c=cfg: lm.forward(c, pp, b), p,
+                       {"tokens": jnp.ones((2, 8), jnp.int32)})
+        counts[arch] = dict(sorted(substrate.DISPATCH_COUNTS.items()))
+    substrate.clear_plan_cache()
+
+    # -- analytic fp32-vs-w8a8 plans for the full decode cell
+    rows = []
+    for g in planner.model_gemms(get_config("qwen2-0.5b"), DECODE_32K):
+        pf = planner.plan_gemm_precision(g, 128, 128, "fp32")
+        p8 = planner.plan_gemm_precision(g, 128, 128, "w8a8")
+        rows.append({"site": g.name, "M": g.M, "N": g.N, "T": g.T,
+                     "k_fp32": pf.k, "k_w8a8": p8.k,
+                     "fp32_us": round(pf.t_abs_ps / g.count / 1e6, 4),
+                     "w8a8_us": round(p8.t_abs_ps / g.count / 1e6, 4),
+                     "w8a8_speedup": round(pf.t_abs_ps / p8.t_abs_ps, 3)})
+    k_shift = sum(r["k_fp32"] != r["k_w8a8"] for r in rows)
+
+    return {
+        "quantize_boundary": quantize_boundary,
+        "fused_swiglu": fused_swiglu,
+        "equivalence": {"logits_max_abs_diff_vs_fp32": diff,
+                        "documented_atol": 0.12},
+        "dispatch_counts": counts,
+        "analytic_decode_32k": rows,
+        "k_shift_sites": k_shift,
+        "sharded": _sharded_section(iters, backend="arrayflex_w8a8"),
+    }
+
+
 def _analytic_full_rows():
     """Eq.(6') plans for the FULL qwen2-0.5b decode cell (no execution):
     what the selection loop buys at real scale.  Uses planner.plan_gemm so
@@ -491,6 +624,7 @@ def substrate_report(smoke: bool = False):
     plan_cache = dict(substrate.plan_cache_info()._asdict())
     sharded = _sharded_section(iters)
     int8 = _int8_section(params, toks, iters, fused_iters)
+    w8a8 = _w8a8_section(params, toks, iters, fused_iters)
     # serving-layer section: paged K/V + radix prefix reuse (memoized in
     # serving_bench so the run.py CSV entry and this JSON share one run);
     # fixed workload, so the gated numbers match one committed baseline
@@ -518,6 +652,7 @@ def substrate_report(smoke: bool = False):
         "moe_expert_launches": moe_launches,
         "sharded": sharded,
         "int8": int8,
+        "w8a8": w8a8,
         "paged": paged,
         "resilience": resilience,
         "equivalence": {"logits_max_abs_diff": max_diff,
@@ -539,7 +674,11 @@ def substrate_report(smoke: bool = False):
                f"{sh_note}, int8: quantize hit rate "
                f"{int8['quantize_cache']['hit_rate_after_warmup']:.0%}, "
                f"{int8['k_shift_sites']} k-shift sites, eq6 swiglu "
-               f"{int8['fused_swiglu']['eq6_speedup_vs_fp32']:.2f}x "
+               f"{int8['fused_swiglu']['eq6_speedup_vs_fp32']:.2f}x, "
+               f"w8a8: {w8a8['quantize_boundary']['int8_int8_dot_generals']}"
+               f" int8xint8 dots, {w8a8['k_shift_sites']} k-shift sites, "
+               f"eq6 swiglu "
+               f"{w8a8['fused_swiglu']['eq6_speedup_vs_fp32']:.2f}x "
                f"-> {OUT_JSON}")
     return site_rows, derived
 

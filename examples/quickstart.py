@@ -17,6 +17,10 @@
    radix prefix reuse — more resident sequences than max_batch, shared
    system prompts prefilled once, streams bit-identical to the dense
    cache.
+8. Go W8A8 (gemm_backend="arrayflex_w8a8"): dynamic per-tile activation
+   quantization in the kernel prologue engages the int8 x int8 -> int32
+   MAC path, and the Eq.(5') activation-quantize boundary term alone
+   re-picks the collapse depth at the pinned decode shape.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -157,6 +161,38 @@ def main():
           f"served from shared pages "
           f"({st['prefill_gemm_dispatches']} prefill GEMM launches)")
     print(f"  paged streams identical to dense: {paged_out == dense_out}")
+
+    # -- 8. W8A8: the int8 x int8 MAC path engages ------------------------
+    print("\n=== W8A8: dynamic per-tile activation quantization ===")
+    cfg_w8 = reduced(get_config("qwen2-0.5b"), compute_dtype="float32",
+                     param_dtype="float32", gemm_backend="arrayflex_w8a8")
+    lw, _, _ = lm.forward(cfg_w8, params, {"tokens": toks})
+    print(f"  fp32-arrayflex vs w8a8 logits max diff "
+          f"{float(jnp.max(jnp.abs(la - lw))):.3e} "
+          f"(documented tolerance 0.12: weight + activation rounding)")
+    # the acceptance jaxpr fact: the traced dispatch stages int8 x int8
+    # dot_generals with an int32 result — the integer MAC path is real
+    closed = jax.make_jaxpr(
+        lambda a, b: substrate.gemm(a, b, backend="arrayflex_w8a8"))(
+            jnp.ones((8, 256), jnp.float32), jnp.ones((256, 32), jnp.float32))
+    n_i8 = sum(1 for eqn in jaxpr_audit.iter_eqns(closed.jaxpr)
+               if eqn.primitive.name == "dot_general"
+               and {str(v.aval.dtype) for v in eqn.invars} == {"int8"})
+    print(f"  int8 x int8 dot_generals staged in-kernel: {n_i8}")
+    # Eq.(5') quantize boundary term: at the pinned decode shape the actq
+    # stage ALONE deepens the argmin (w8a8 without it still picks k=2)
+    k_w8_no = ops.plan_collapse(M, N, T, precision="w8a8")
+    k_w8 = ops.plan_collapse(M, N, T, precision="w8a8", actq_ops=1)
+    pw = substrate.plan_gemm(M, N, T, "arrayflex_w8a8")
+    print(f"  mlp.wo (M={M}, N={N}, T={T}): fp32 k={k_fp}, "
+          f"w8a8-unpriced k={k_w8_no}, w8a8+actq k={k_w8} "
+          f"-> Eq.(6') speedup {pf.t_pred_ps / pw.t_pred_ps:.2f}x vs fp32")
+    rows = planner.precision_table(
+        cfg_w8, planner.ShapeConfig("demo", 8, 2, "train"))
+    r0 = rows[0]
+    print(f"  precision_table[{r0['gemm'].name}]: " + "  ".join(
+        f"{p}: k={r0['plans'][p].k} t={r0['plans'][p].t_abs_ps / 1e3:.1f}ns"
+        for p in ("fp32", "int8", "w8a8")))
 
 
 if __name__ == "__main__":

@@ -3,7 +3,7 @@
 Runs the three analysis passes over the default matrix —
 
 * models:   qwen2-0.5b (dense), qwen3-moe-30b-a3b (MoE), mamba2-370m (SSM)
-* backends: xla, arrayflex, arrayflex_int8
+* backends: xla, arrayflex, arrayflex_int8, arrayflex_w8a8
 * meshes:   unsharded and TP2 (mesh ``(1, 2)`` on forced host devices)
 
 — at ``reduced()`` smoke sizes, plus the kernel<->timing consistency
@@ -23,7 +23,7 @@ import os
 import sys
 
 DEFAULT_MODELS = ("qwen2-0.5b", "qwen3-moe-30b-a3b", "mamba2-370m")
-DEFAULT_BACKENDS = ("xla", "arrayflex", "arrayflex_int8")
+DEFAULT_BACKENDS = ("xla", "arrayflex", "arrayflex_int8", "arrayflex_w8a8")
 
 
 def _force_host_devices(n: int) -> None:

@@ -9,12 +9,20 @@ jaxprs).  Checks:
   attributable — via its traceback frames — to the substrate dispatch
   layer or an explicit :data:`repro.analysis.contract.ALLOWLIST` entry;
 * **AF002** every ``psum`` on a substrate contraction path (and, under a
-  quantizing backend, every float psum anywhere) must be fp32;
+  quantizing backend, every float psum anywhere) must be fp32; *and*
+  (the sharding-contract leg, :func:`check_psum_boundaries`) every
+  substrate psum staged under a quantizing backend must sit at a
+  collapsed-block boundary the plan actually priced — some recorded
+  ``substrate.SITE_PLANS`` entry carries ``ShardSig.reduce_ops > 0``, so
+  the combine tree entered the Eq.(5') argmin rather than riding free;
 * **AF003/AF008** ``convert_element_type`` to int8 on a weight-shaped
   (ndim >= 2) operand inside the trace: through
   ``substrate.quantize_weight`` it is the *known* staged-quantization of
-  the ROADMAP W8A8 item (warning AF008); anywhere else it is a rogue
-  re-quantization (error AF003);
+  the W8 weight path (warning AF008); on a declared W8A8 backend
+  (``BackendInfo.act_quantize``) the *dynamic activation* casts — the
+  in-kernel per-tile ``quantize_tile`` and the batched-QK in-trace
+  ``_quantize`` of K — are the priced Eq.(5') quantize boundary and are
+  clean; anywhere else it is a rogue re-quantization (error AF003);
 * **AF004** every float scratch ref of a ``pallas_call`` (the carry-save
   accumulators) must be fp32;
 * **AF007** every site label recorded in ``substrate.DISPATCH_COUNTS``
@@ -103,8 +111,14 @@ def _check_pallas_scratch(eqn, label: str) -> List[Finding]:
 
 
 def audit_closed_jaxpr(closed, *, quantized: bool = False,
+                       act_quantized: bool = False,
                        label: str = "trace") -> List[Finding]:
-    """Walk one closed jaxpr; returns AF001-AF004/AF008 findings."""
+    """Walk one closed jaxpr; returns AF001-AF004/AF008 findings.
+
+    ``act_quantized`` declares a W8A8 backend: dynamic activation
+    quantization — ``quantize_tile`` inside the Pallas kernels and the
+    batched-path ``_quantize`` of K staged from ``_batched_exec`` — is
+    then the priced quantize boundary, not an AF003/AF008 candidate."""
     findings: List[Finding] = []
     for eqn in iter_eqns(closed.jaxpr):
         prim = eqn.primitive.name
@@ -135,6 +149,16 @@ def audit_closed_jaxpr(closed, *, quantized: bool = False,
             if len(shape) < 2:
                 continue
             frames = _frames(eqn)
+            if act_quantized and any(
+                    fn in ("quantize_tile", "_batched_exec")
+                    and contract.repro_rel(f) is not None
+                    for f, fn in frames):
+                # declared W8A8 dynamic activation quantize: the per-tile
+                # in-kernel quantizer / the batched-QK quantize of K is
+                # the Eq.(5') boundary the plan priced (actq_ops), by
+                # design re-executed per step — neither staged weight
+                # quantization nor a rogue cast
+                continue
             staged = any(fn in ("quantize_weight", "_quantize")
                          and contract.repro_rel(f) is not None
                          for f, fn in frames)
@@ -155,6 +179,45 @@ def audit_closed_jaxpr(closed, *, quantized: bool = False,
                     pass_name="jaxpr"))
         elif prim == "pallas_call":
             findings.extend(_check_pallas_scratch(eqn, label))
+    return findings
+
+
+def check_psum_boundaries(closed, *, quantized: bool = False,
+                          site_plans=None,
+                          label: str = "trace") -> List[Finding]:
+    """AF002, sharding-contract leg: every substrate ``psum`` staged under
+    a quantizing backend must sit at a collapsed-block boundary the plan
+    priced.
+
+    The dtype leg (fp32 operands) lives in :func:`audit_closed_jaxpr`;
+    this leg cross-checks the *pricing*: a substrate-attributed float
+    psum in the trace means ``_sharded_gemm`` took the reduce path, so
+    the recorded plans (``substrate.SITE_PLANS``, reset per entry trace)
+    must include at least one whose ``ShardSig.reduce_ops > 0`` — the
+    ``ceil(log2(shards))`` combine-tree adds entered the Eq.(5') argmin.
+    A psum with no priced reduce anywhere means the collapse depth was
+    chosen as if the cross-shard combine were free (the sharding rules
+    only set ``reduce_axes`` for genuinely sharded contractions, so this
+    never fires on a clean trace)."""
+    if not quantized:
+        return []
+    plans = substrate.SITE_PLANS if site_plans is None else site_plans
+    priced = any(p.shard.reduce_ops > 0 for p in plans.values())
+    findings: List[Finding] = []
+    for eqn in iter_eqns(closed.jaxpr):
+        if not eqn.primitive.name.startswith("psum"):
+            continue
+        if not _float_dtypes(eqn):
+            continue
+        verdict, where = contract.classify_frames(_frames(eqn))
+        if verdict != "substrate" or priced:
+            continue
+        findings.append(Finding(
+            "AF002", f"{label} @ {where}",
+            "substrate psum on the quantized path but no recorded site "
+            "plan priced a reduce boundary (ShardSig.reduce_ops == 0 "
+            "everywhere) — the collapse depth was chosen as if the "
+            "cross-shard combine were free", pass_name="jaxpr"))
     return findings
 
 
@@ -244,14 +307,18 @@ def audit_model(cfg: ModelConfig, label: str = "", *,
     this tree; the default ``False`` audits the raw-tree path, which is
     expected to carry AF008)."""
     label = label or f"{cfg.name}/{cfg.gemm_backend}"
-    quantized = cfg.gemm_backend == "arrayflex_int8"
+    quantized = substrate.backend_quantizes(cfg.gemm_backend)
+    act_quantized = substrate.backend_act_quantizes(cfg.gemm_backend)
     findings: List[Finding] = []
     for entry, thunk in _trace_entries(cfg, prequantize=prequantize):
         substrate.clear_plan_cache()     # fresh site log per entry
         closed = thunk()
         cell = f"{label}/{entry}"
         findings.extend(audit_closed_jaxpr(closed, quantized=quantized,
+                                           act_quantized=act_quantized,
                                            label=cell))
+        findings.extend(check_psum_boundaries(closed, quantized=quantized,
+                                              label=cell))
         findings.extend(check_recorded_sites(cfg, label=cell))
     substrate.clear_plan_cache()
     return findings

@@ -50,12 +50,13 @@ class _OpCount:
         self.bias2_adds = 0
         self.gate_muls = 0
         self.dequant_muls = 0
+        self.residual_adds = 0
         self.nonlinear = False
 
     @property
     def total(self) -> int:
         return (self.bias_adds + self.bias2_adds + self.gate_muls
-                + int(self.nonlinear))
+                + self.residual_adds + int(self.nonlinear))
 
 
 def _prov_of(prov, atom):
@@ -91,6 +92,8 @@ def _walk_count(jaxpr, prov, count: _OpCount) -> None:
                 count.bias_adds += 1
             elif any(s == {"bias2"} for s in sources):
                 count.bias2_adds += 1
+            elif any(s == {"residual"} for s in sources):
+                count.residual_adds += 1
         elif name == "mul":
             if any(s in ({"w_scale"}, {"w2_scale"}) for s in sources):
                 count.dequant_muls += 1
@@ -120,6 +123,8 @@ def _count_store_ops(store_fn: Callable, ep: substrate.Epilogue,
         operands["bias"] = vec
     if ep.bias2:
         operands["bias2"] = vec
+    if ep.residual:
+        operands["residual"] = row
     names = list(operands)
     closed = jax.make_jaxpr(
         lambda *args: store_fn(activation=ep.activation,
@@ -136,7 +141,9 @@ def _valid_epilogues():
         dual = kind == "swiglu"
         for bias in (False, True):
             for bias2 in ((False, True) if dual else (False,)):
-                yield substrate.Epilogue(kind=kind, bias=bias, bias2=bias2)
+                for residual in (False, True):
+                    yield substrate.Epilogue(kind=kind, bias=bias,
+                                             bias2=bias2, residual=residual)
 
 
 def check_epilogue_pricing(
@@ -161,10 +168,12 @@ def check_epilogue_pricing(
                 findings.append(Finding(
                     "AF005",
                     f"store_phase[kind={ep.kind}, bias={ep.bias}, "
-                    f"bias2={ep.bias2}, quant={quant}]",
+                    f"bias2={ep.bias2}, residual={ep.residual}, "
+                    f"quant={quant}]",
                     f"kernel store stages {measured} boundary op(s) "
                     f"(bias={count.bias_adds}+{count.bias2_adds}, "
                     f"gate={count.gate_muls}, dequant={count.dequant_muls}, "
+                    f"residual={count.residual_adds}, "
                     f"act={int(count.nonlinear)}) but the Eq.(5') pricing "
                     f"charges {priced}", pass_name="kernel"))
     return findings

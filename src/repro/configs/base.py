@@ -98,7 +98,11 @@ class ModelConfig:
     # "arrayflex" (Pallas K-collapse kernel at the planner's Eq.(6) k),
     # "arrayflex_int8" (same kernel on memoized int8 weights +
     # per-output-channel fp32 scales, fp32 accumulation, k planned with
-    # the int8 datapath timing), "ref" (fp32 oracle).  Validated against
+    # the int8 datapath timing), "arrayflex_w8a8" (int8 weights AND
+    # dynamic per-tile int8 activations quantized in-kernel, int8 x int8
+    # -> int32 accumulation, k planned with the w8a8 datapath timing
+    # plus the Eq.(5') quantize boundary term), "ref" (fp32 oracle).
+    # Validated against
     # substrate.backends() at the execution entry points (lm.forward /
     # decode_step / prefill_step, the serving engine, serve.py) so an
     # unknown name fails with the registered list, not deep in dispatch.

@@ -57,18 +57,21 @@ class LayerPlan:
 
 
 def plan_gemm(g: GEMM, R: int, C: int,
-              tp: TimingParams = DEFAULT_TIMING) -> LayerPlan:
-    k = timing.best_k(g.M, g.N, g.T, R, C, tp, epilogue_ops=g.epilogue_ops)
+              tp: TimingParams = DEFAULT_TIMING,
+              actq_ops: int = 0) -> LayerPlan:
+    k = timing.best_k(g.M, g.N, g.T, R, C, tp, epilogue_ops=g.epilogue_ops,
+                      actq_ops=actq_ops)
     return LayerPlan(
         gemm=g, k=k, k_hat=timing.k_hat(R, C, g.T, tp),
         cycles=g.contractions * timing.total_cycles(g.M, g.N, g.T, R, C, k),
-        clock_ghz=tp.clock_ghz(k, g.epilogue_ops),
+        clock_ghz=tp.clock_ghz(k, g.epilogue_ops, actq_ops),
         t_abs_ps=timing.t_abs_ps(g.M, g.N, g.T, R, C, k, tp,
                                  epilogue_ops=g.epilogue_ops,
-                                 contractions=g.contractions) * g.count,
+                                 contractions=g.contractions,
+                                 actq_ops=actq_ops) * g.count,
         t_conventional_ps=timing.t_abs_conventional_ps(
             g.M, g.N, g.T, R, C, tp, contractions=g.contractions,
-            epilogue_ops=g.epilogue_ops) * g.count,
+            epilogue_ops=g.epilogue_ops, actq_ops=actq_ops) * g.count,
     )
 
 
@@ -80,23 +83,31 @@ def plan_gemm_precision(g: GEMM, R: int, C: int,
     d_mul/d_CSA) and adds one dequant boundary op per contraction —
     exactly the pricing ``kernels.substrate`` applies for the
     ``arrayflex_int8`` backend, so the analytic table and the executed
-    plan pick the same k."""
+    plan pick the same k.  ``w8a8`` uses ``timing.W8A8TimingParams``
+    (int8 mul + int32-accumulate adder) and additionally prices the
+    Eq.(5') activation-quantize boundary stage (``actq_ops=1``,
+    ``d_actq_ps``) — the pricing the ``arrayflex_w8a8`` backend plans
+    with."""
     tp = timing.timing_for(precision)
-    if precision == "int8":
+    actq = 0
+    if precision in ("int8", "w8a8"):
         g = dataclasses.replace(g, epilogue_ops=g.epilogue_ops
                                 + g.contractions)
-    return plan_gemm(g, R, C, tp)
+    if precision == "w8a8":
+        actq = 1
+    return plan_gemm(g, R, C, tp, actq_ops=actq)
 
 
 def precision_table(cfg: "ModelConfig", shape: "ShapeConfig",
                     R: int = 128, C: int = 128,
-                    precisions=("fp32", "int8")) -> list:
+                    precisions=("fp32", "int8", "w8a8")) -> list:
     """Side-by-side per-GEMM plans across datapath precisions for one
     (model, shape) cell: every ``model_gemms`` entry with one
     :class:`LayerPlan` per precision.  This is where the quantized
-    backend's planning story is visible analytically — the int8 datapath
+    backends' planning story is visible analytically — the int8 datapath
     legitimately picks a different (usually deeper) k at the same shape,
-    the per-layer configurability the paper argues for."""
+    and the w8a8 datapath's quantize boundary term can deepen it again:
+    the per-layer configurability the paper argues for, three ways."""
     return [{"gemm": g,
              "plans": {p: plan_gemm_precision(g, R, C, p)
                        for p in precisions}}

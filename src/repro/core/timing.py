@@ -49,19 +49,29 @@ class TimingParams:
     # stage.  Sized like a CSA+mux stage — the epilogue ALU sits behind the
     # same collapsed-block boundary the carry-propagate adder does.
     d_epilogue_ps: float = 54.35
+    # Eq.(5') activation-quantize coefficient: critical-path cost of the
+    # dynamic per-tile quantizer (amax reduce + reciprocal scale +
+    # round/clip) that feeds the MAC datapath each collapsed-block step.
+    # 0 on datapaths with no quantize boundary (fp32, weight-only int8 —
+    # activations arrive at datapath width there).
+    d_actq_ps: float = 0.0
 
-    def clock_period_ps(self, k: int, epilogue_ops: int = 0) -> float:
+    def clock_period_ps(self, k: int, epilogue_ops: int = 0,
+                        actq_ops: int = 0) -> float:
         """Eq.(5'): minimum clock period of a k-collapsed ArrayFlex
-        pipeline with ``epilogue_ops`` fused vector ops at the boundary."""
-        epi = epilogue_ops * self.d_epilogue_ps
+        pipeline with ``epilogue_ops`` fused vector ops and ``actq_ops``
+        activation-quantize stages at the boundary."""
+        epi = (epilogue_ops * self.d_epilogue_ps
+               + actq_ops * self.d_actq_ps)
         if self.mode == "table":
             for kk, ghz in self.freq_table_ghz:
                 if kk == k:
                     return 1000.0 / ghz + epi
         return self.d_base_ps + k * self.d_inc_ps + epi
 
-    def clock_ghz(self, k: int, epilogue_ops: int = 0) -> float:
-        return 1000.0 / self.clock_period_ps(k, epilogue_ops)
+    def clock_ghz(self, k: int, epilogue_ops: int = 0,
+                  actq_ops: int = 0) -> float:
+        return 1000.0 / self.clock_period_ps(k, epilogue_ops, actq_ops)
 
 
 DEFAULT_TIMING = TimingParams()
@@ -113,8 +123,54 @@ class IntTimingParams(TimingParams):
 
 INT8_TIMING = IntTimingParams()
 
+
+@dataclass(frozen=True)
+class W8A8TimingParams(IntTimingParams):
+    """Eq.(5)/(7) coefficients for the **fully-int8** (W8A8) datapath:
+    int8 weights x int8 activations with an int32 accumulator.
+
+    What changes vs the weight-only int8 fit and why:
+
+    * ``d_base_ps`` shrinks again: the weight-only datapath still paid the
+      fp32 accumulate adder (``d_add``) because activations arrived at
+      fp32 width.  With activations quantized at the boundary the MAC is
+      int8 x int8 -> int32 end to end, so d_add is a narrow int32
+      carry-select add.  372.6 -> 280.0 ps (~93 ps shaved off the adder).
+    * ``d_inc_ps`` stays 15.0: the collapse chain already carried narrow
+      partial products under weight-only int8.
+    * ``d_actq_ps = 54.35``: the *new* Eq.(5') boundary term.  The dynamic
+      per-tile quantizer (amax reduce over the tile, reciprocal scale,
+      round/clip to int8) sits at the collapsed-block boundary in front of
+      the MAC array, exactly where the carry-propagate/epilogue ALU sits
+      behind it, so it is sized like one epilogue stage.  Like the fused
+      epilogue term it is k-independent while cycle counts fall with k —
+      so pricing the quantize boundary pushes the Eq.(6') argmin toward
+      deeper collapse.  On the pinned (M=896, N=4864, T=512) decode cell
+      this term is decisive: without it the W8A8 coefficients pick k=2
+      (like fp32 silicon), with it the argmin moves to k=4.
+
+    The conventional fixed-pipeline W8A8 comparator clocks at 269.7 ps
+    (3.71 GHz): the k=1 linear period (295.0 ps) scaled by the same
+    mux-overhead ratio the fp32 numbers exhibit (500 / 546.95).  It pays
+    the same ``d_actq_ps`` per period (a fixed pipeline still has to
+    quantize), keeping the *saving* a measure of transparent pipelining.
+
+    The per-tile activation scale resolves at the carry-propagate boundary
+    together with the weight dequant — the substrate folds both into the
+    fused ``store_phase`` dequant, so no extra epilogue op is priced for
+    the activation scale beyond the ``d_actq_ps`` stage itself.
+    """
+
+    d_base_ps: float = 280.0     # d_FF + d_mul(int8) + d_add(int32 accum)
+    conventional_period_ps: float = 269.7   # 3.71 GHz fixed-pipeline W8A8
+    d_actq_ps: float = 54.35     # per-tile amax + scale + round/clip stage
+
+
+W8A8_TIMING = W8A8TimingParams()
+
 # precision name -> the TimingParams pricing that datapath's Eq.(5)-(7)
-PRECISION_TIMING = {"fp32": DEFAULT_TIMING, "int8": INT8_TIMING}
+PRECISION_TIMING = {"fp32": DEFAULT_TIMING, "int8": INT8_TIMING,
+                    "w8a8": W8A8_TIMING}
 
 
 def timing_for(precision: str) -> TimingParams:
@@ -151,30 +207,36 @@ def total_cycles_conventional(M: int, N: int, T: int, R: int, C: int) -> int:
 
 def t_abs_ps(M: int, N: int, T: int, R: int, C: int, k: int,
              params: TimingParams = DEFAULT_TIMING,
-             epilogue_ops: int = 0, contractions: int = 1) -> float:
+             epilogue_ops: int = 0, contractions: int = 1,
+             actq_ops: int = 0) -> float:
     """Eq.(6'): absolute execution time (ps) on a k-collapsed ArrayFlex.
 
     ``epilogue_ops`` prices fused post-GEMM work into the per-step period
-    (Eq. 5'); ``contractions`` > 1 streams that many weight matrices
-    through the same collapsed schedule (the dual-GEMM swiglu epilogue).
+    (Eq. 5'); ``actq_ops`` prices the dynamic activation-quantize boundary
+    stages of a W8A8 datapath; ``contractions`` > 1 streams that many
+    weight matrices through the same collapsed schedule (the dual-GEMM
+    swiglu epilogue).
     """
     return (contractions * total_cycles(M, N, T, R, C, k)
-            * params.clock_period_ps(k, epilogue_ops))
+            * params.clock_period_ps(k, epilogue_ops, actq_ops))
 
 
 def t_abs_conventional_ps(M: int, N: int, T: int, R: int, C: int,
                           params: TimingParams = DEFAULT_TIMING,
                           contractions: int = 1,
-                          epilogue_ops: int = 0) -> float:
+                          epilogue_ops: int = 0,
+                          actq_ops: int = 0) -> float:
     """Fixed-pipeline SA at its (higher) max clock, with the SAME fused
-    epilogue datapath (``epilogue_ops`` boundary ops on the period).
-    Pricing the epilogue into both machines keeps the *saving* a measure
-    of the transparent-pipelining technique alone — otherwise every fused
-    GEMM would be charged the epilogue against an epilogue-free baseline
-    that must run it as an (uncosted) post-pass anyway."""
+    epilogue datapath (``epilogue_ops`` boundary ops on the period) and
+    the SAME activation-quantize stages (``actq_ops``).  Pricing both
+    into both machines keeps the *saving* a measure of the
+    transparent-pipelining technique alone — otherwise every fused GEMM
+    would be charged the epilogue against an epilogue-free baseline that
+    must run it as an (uncosted) post-pass anyway."""
     return (contractions * total_cycles_conventional(M, N, T, R, C)
             * (params.conventional_period_ps
-               + epilogue_ops * params.d_epilogue_ps))
+               + epilogue_ops * params.d_epilogue_ps
+               + actq_ops * params.d_actq_ps))
 
 
 def k_hat(R: int, C: int, T: int,
@@ -186,13 +248,13 @@ def k_hat(R: int, C: int, T: int,
 
 def best_k(M: int, N: int, T: int, R: int, C: int,
            params: TimingParams = DEFAULT_TIMING,
-           epilogue_ops: int = 0) -> int:
+           epilogue_ops: int = 0, actq_ops: int = 0) -> int:
     """Discrete argmin of Eq.(6') over the supported collapse depths.
 
-    The epilogue term is additive on the period, so it never changes the
-    ordering *between* two depths with equal cycle counts but can tip the
-    argmin toward deeper collapse (fewer boundary crossings amortize the
-    fixed epilogue cost better)."""
+    The epilogue and activation-quantize terms are additive on the
+    period, so they never change the ordering *between* two depths with
+    equal cycle counts but can tip the argmin toward deeper collapse
+    (fewer boundary crossings amortize the fixed boundary cost better)."""
     return min(params.supported_k,
                key=lambda k: t_abs_ps(M, N, T, R, C, k, params,
-                                      epilogue_ops))
+                                      epilogue_ops, actq_ops=actq_ops))

@@ -15,10 +15,12 @@ K-panels into ONE grid step:
     cast/store is the carry-propagate add at the collapsed-block boundary.
 
 That carry-propagate boundary is exactly where an **epilogue** belongs:
-bias add, activation, and the gated multiply of a second fused contraction
-(dual-GEMM swiglu: ``silu(x@w + b) * (x@w2 + b2)``) are applied to the
-resolved fp32 accumulator *before* the single cast/store, so the
-activation never round-trips through HBM.  Eq.(5') in core.timing prices
+bias add, activation, the gated multiply of a second fused contraction
+(dual-GEMM swiglu: ``silu(x@w + b) * (x@w2 + b2)``), and the transformer
+sublayer's residual join (``residual + f(x)``, applied after the
+activation/gate) are applied to the resolved fp32 accumulator *before*
+the single cast/store, so neither the activation nor the residual add
+round-trips through HBM.  Eq.(5') in core.timing prices
 the fused vector ops into the per-step period and ``best_k`` re-picks k.
 
 The boundary also hosts **int8 dequantization** (``w_scale``/``w2_scale``):
@@ -28,6 +30,22 @@ carry-propagate — per-column scales factor out of the K sum, so the
 deferred dequant is exact and rides the same boundary ALU the epilogue
 does (one extra Eq.(5') op per contraction, priced by
 ``timing.IntTimingParams``'s int8 datapath coefficients).
+
+The **W8A8** path (``act_quant=True``) adds the other half: each grid
+step's activation tile is quantized to int8 with a dynamic symmetric
+per-tile fp32 scale in the step prologue — amax over the (bm, kk) tile,
+reciprocal scale, round/clip — and the k-deep chain then runs real
+int8 x int8 -> int32 MXU passes.  The two scales resolve at different
+boundaries, both exact: the per-tile *activation* scale differs per
+K-step, so it folds into the fp32 carry accumulator as each step's int32
+partial resolves (sum_s x_scale_s * iacc_s); the per-output-channel
+*weight* scale is constant across K, factors out of the whole sum, and
+rides the carry-propagate ``store_phase`` dequant exactly as in the
+weight-only path.  The quantizer stage is priced as the Eq.(5')
+``d_actq_ps`` boundary term (``timing.W8A8TimingParams``).  The int32
+accumulator cannot overflow: |code| <= 127, so one collapsed block of
+kk <= bk * k_collapse = 512 MACs is bounded by 512 * 127^2 ~ 8.3e6,
+far inside int32 range.
 
 ``arrayflex_expert_gemm`` runs a whole stack of per-expert GEMMs in ONE
 ``pallas_call`` whose *leading grid dimension is the expert axis* — the
@@ -82,10 +100,31 @@ def apply_epilogue(y, y2=None, bias=None, bias2=None, activation="none"):
     return out
 
 
+def quantize_tile(x, eps: float = 1e-12):
+    """Dynamic symmetric per-tile activation quantization: the W8A8 grid
+    step's prologue stage, and the SINGLE definition of the quantizer
+    (the kernels inline it; the property tests and the analysis passes
+    trace this exact function).
+
+    Returns ``(codes, scale)`` with ``codes`` int8 in [-127, 127] and
+    ``scale`` a per-tile fp32 scalar such that ``codes * scale ~= x``
+    with error bounded by ``scale / 2 = amax / 254`` per element.  An
+    all-zero tile quantizes to all-zero codes (the eps floor keeps the
+    reciprocal finite), so zero K-padding tails contribute exactly 0.
+    """
+    x32 = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(x32))
+    scale = jnp.maximum(amax, eps) / 127.0
+    codes = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
 def store_phase(y, y2=None, w_scale=None, w2_scale=None, bias=None,
-                bias2=None, activation="none"):
+                bias2=None, activation="none", residual=None):
     """The carry-propagate boundary math, in execution order: dequant the
-    resolved fp32 accumulator(s), then the fused epilogue.
+    resolved fp32 accumulator(s), the fused epilogue, then the residual
+    join (``residual + f(x)`` — the sublayer add applies to the finished
+    activation/gate output, matching the unfused layers' op order).
 
     This is the SINGLE definition of what the kernel store applies —
     ``_kernel``/``_expert_kernel`` call it on their accumulator refs, and
@@ -97,26 +136,39 @@ def store_phase(y, y2=None, w_scale=None, w2_scale=None, bias=None,
         y = y * w_scale.astype(jnp.float32)
     if y2 is not None and w2_scale is not None:
         y2 = y2 * w2_scale.astype(jnp.float32)
-    return apply_epilogue(
+    out = apply_epilogue(
         y, y2,
         None if bias is None else bias.astype(jnp.float32),
         None if bias2 is None else bias2.astype(jnp.float32),
         activation)
+    if residual is not None:
+        out = residual.astype(jnp.float32) + out
+    return out
 
 
 # ---------------------------------------------------------------------------
 # single-GEMM kernel (optionally dual-contraction) with fused epilogue
 
 def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
-            dual: bool, quant: bool, has_b: bool, has_b2: bool):
-    """refs = x, w, [w2], [scale], [scale2], [b], [b2], o, acc, [acc2]
-    (inputs, outputs, scratch — in pallas_call order).
+            dual: bool, quant: bool, act_quant: bool, has_b: bool,
+            has_b2: bool, has_r: bool):
+    """refs = x, w, [w2], [scale], [scale2], [b], [b2], [r], o, acc, [acc2]
+    (inputs, outputs, scratch — in pallas_call order).  ``has_r``: an
+    (M, N) residual stream tiled like the output joins at the store,
+    after the activation/gate.
 
     ``quant``: w (and w2) hold int8 codes with per-output-channel fp32
     scales; the contraction accumulates the raw codes and the dequant
     multiply resolves at the carry-propagate ``_store`` — the per-column
     scale factors out of the K sum, so deferring it is exact and the
-    scale rides the same boundary ALU the epilogue does."""
+    scale rides the same boundary ALU the epilogue does.
+
+    ``act_quant`` (W8A8, requires ``quant``): the step's x-tile is
+    quantized to int8 with one dynamic per-tile fp32 scale in the
+    prologue, the k-chain runs int8 x int8 -> int32 dots, and the int32
+    partial folds into the fp32 carry accumulator scaled by this step's
+    tile scale (per-step fold: the scale differs across K-steps, so only
+    the K-constant weight scale defers to the store)."""
     i = 2
     x_ref, w_ref = refs[0], refs[1]
     w2_ref = refs[i] if dual else None
@@ -129,6 +181,8 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
     i += has_b
     b2_ref = refs[i] if has_b2 else None
     i += has_b2
+    r_ref = refs[i] if has_r else None
+    i += has_r
     o_ref = refs[i]
     acc_ref = refs[i + 1]
     acc2_ref = refs[i + 2] if dual else None
@@ -142,24 +196,46 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
     x = x_ref[...]                     # (bm, bk * k)
     w = w_ref[...]                     # (bk * k, bn)
     w2 = w2_ref[...] if dual else None
-    if quant:                          # int8 codes ride the MXU in x's dtype
+    if quant and not act_quant:        # int8 codes ride the MXU in x's dtype
         w = w.astype(x.dtype)          # (exact: |code| <= 127)
         if dual:
             w2 = w2.astype(x.dtype)
     bk = x.shape[1] // k_collapse
     acc = acc_ref[...]
     acc2 = acc2_ref[...] if dual else None
-    # the k-deep "carry-save" chain: k MXU passes accumulate into the same
-    # fp32 VMEM accumulator within one grid step (both contractions stream
-    # through the same collapsed schedule when dual)
-    for i in range(k_collapse):
-        xs = x[:, i * bk:(i + 1) * bk]
-        ws = slice(i * bk, (i + 1) * bk)
-        acc = acc + jnp.dot(xs, w[ws, :],
-                            preferred_element_type=jnp.float32)
+    if act_quant:
+        # W8A8: quantize this step's x-tile once (the Eq.(5') d_actq
+        # boundary stage), run the k-chain as int8 x int8 -> int32, and
+        # fold the per-tile scale as the int32 partial resolves.  Bound:
+        # kk <= 512 codes of |.| <= 127 -> |iacc| <= 512 * 127^2, no
+        # int32 overflow.
+        qx, x_scale = quantize_tile(x)
+        iacc = jnp.zeros(acc_ref.shape, jnp.int32)
+        iacc2 = jnp.zeros(acc_ref.shape, jnp.int32) if dual else None
+        for i in range(k_collapse):
+            qs = qx[:, i * bk:(i + 1) * bk]
+            ws = slice(i * bk, (i + 1) * bk)
+            iacc = iacc + jnp.dot(qs, w[ws, :],
+                                  preferred_element_type=jnp.int32)
+            if dual:
+                iacc2 = iacc2 + jnp.dot(qs, w2[ws, :],
+                                        preferred_element_type=jnp.int32)
+        acc = acc + iacc.astype(jnp.float32) * x_scale
         if dual:
-            acc2 = acc2 + jnp.dot(xs, w2[ws, :],
-                                  preferred_element_type=jnp.float32)
+            acc2 = acc2 + iacc2.astype(jnp.float32) * x_scale
+    else:
+        # the k-deep "carry-save" chain: k MXU passes accumulate into the
+        # same fp32 VMEM accumulator within one grid step (both
+        # contractions stream through the same collapsed schedule when
+        # dual)
+        for i in range(k_collapse):
+            xs = x[:, i * bk:(i + 1) * bk]
+            ws = slice(i * bk, (i + 1) * bk)
+            acc = acc + jnp.dot(xs, w[ws, :],
+                                preferred_element_type=jnp.float32)
+            if dual:
+                acc2 = acc2 + jnp.dot(xs, w2[ws, :],
+                                      preferred_element_type=jnp.float32)
     acc_ref[...] = acc
     if dual:
         acc2_ref[...] = acc2
@@ -173,19 +249,26 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
             s2_ref[...] if (quant and dual) else None,
             b_ref[...] if has_b else None,
             b2_ref[...] if has_b2 else None,
-            activation)
+            activation,
+            r_ref[...] if has_r else None)
         o_ref[...] = out.astype(o_ref.dtype)
 
 
 def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
-                   w_scale=None, w2_scale=None,
+                   w_scale=None, w2_scale=None, act_quant: bool = False,
+                   residual=None,
                    activation: str = "none", bm: int = 128, bn: int = 128,
                    bk: int = 128, k_collapse: int = 1, out_dtype=None,
                    interpret=None):
     """X[M,K] @ W[K,N] with K-collapse factor k_collapse and an optional
     fused epilogue at the carry-propagate boundary:
 
-        out = act(X@W [+ bias]) [* (X@W2 [+ bias2])]
+        out = [residual +] act(X@W [+ bias]) [* (X@W2 [+ bias2])]
+
+    ``residual`` (an (M, N) array, any float dtype) fuses the sublayer
+    residual join into the store: it is tiled exactly like the output,
+    cast to fp32, and added after the activation/gate — one more Eq.(5')
+    boundary op, no separate HBM round-trip for the add.
 
     ``w2`` (same shape as ``w``) enables the dual-contraction gated form —
     with ``activation="silu"`` this is the one-kernel swiglu.  ``bias`` /
@@ -200,6 +283,14 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     store, *before* bias/activation — per-column scales factor out of the
     K sum, so deferring the dequant to the boundary is exact.  A dual
     contraction takes its own ``w2_scale``.
+
+    ``act_quant`` (requires ``w_scale``) enables the **W8A8** path: each
+    grid step quantizes its activation tile to int8 with a dynamic
+    per-tile fp32 scale and the MAC chain runs int8 x int8 -> int32; the
+    tile scale folds per step, the weight scale at the store (see the
+    module docstring).  Unlike the weight path this is *lossy* on the
+    activations (per-tile round-off bounded by amax/254 per element
+    pre-contraction), so it is opt-in per site.
 
     Divisibility contract:
       * ``bm`` (clamped to M) must divide M and ``bn`` (clamped to N) must
@@ -234,10 +325,15 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
         raise ValueError("w2_scale requires both w_scale and w2")
     if quant and dual and w2_scale is None:
         raise ValueError("int8 dual contraction needs w2_scale for w2")
+    if act_quant and not quant:
+        raise ValueError("act_quant (W8A8) requires int8 weights (w_scale)")
     for name, b in (("bias", bias), ("bias2", bias2),
                     ("w_scale", w_scale), ("w2_scale", w2_scale)):
         if b is not None and b.shape != (N,):
             raise ValueError(f"{name} must be ({N},), got {b.shape}")
+    if residual is not None and residual.shape != (M, N):
+        raise ValueError(
+            f"residual must be ({M}, {N}), got {residual.shape}")
     out_dtype = out_dtype or x.dtype
     if M == 0 or N == 0 or K == 0:      # empty operand: epilogue of zeros
         zero = jnp.zeros((M, N), jnp.float32)
@@ -245,6 +341,8 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
                              None if bias is None else bias.astype(jnp.float32),
                              None if bias2 is None else bias2.astype(jnp.float32),
                              activation)
+        if residual is not None:
+            out = residual.astype(jnp.float32) + out
         return out.astype(out_dtype)
     bm, bn = min(bm, M), min(bn, N)
     if M % bm or N % bn:
@@ -266,9 +364,10 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     interpret = resolve_interpret(interpret)
     kernel = functools.partial(_kernel, k_collapse=k_collapse,
                                n_steps=n_steps, activation=activation,
-                               dual=dual, quant=quant,
+                               dual=dual, quant=quant, act_quant=act_quant,
                                has_b=bias is not None,
-                               has_b2=bias2 is not None)
+                               has_b2=bias2 is not None,
+                               has_r=residual is not None)
     operands = [x, w]
     in_specs = [
         pl.BlockSpec((bm, kk), lambda i, j, s: (i, s)),
@@ -281,6 +380,9 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
         if b is not None:
             operands.append(b.reshape(1, N))
             in_specs.append(pl.BlockSpec((1, bn), lambda i, j, s: (0, j)))
+    if residual is not None:            # output-tiled: one (bm, bn) block
+        operands.append(residual)
+        in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)))
     scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     if dual:
         scratch.append(pltpu.VMEM((bm, bn), jnp.float32))
@@ -298,9 +400,13 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
 # ---------------------------------------------------------------------------
 # expert-batched kernel: the expert axis is the leading grid dimension
 
-def _expert_kernel(*refs, k_collapse: int, n_steps: int, quant: bool):
+def _expert_kernel(*refs, k_collapse: int, n_steps: int, quant: bool,
+                   act_quant: bool):
     """refs = x, w, [scale], o, acc.  ``quant``: int8 per-expert codes
-    with per-(expert, output-channel) scales dequantized at the store."""
+    with per-(expert, output-channel) scales dequantized at the store.
+    ``act_quant``: W8A8 — this expert's x-tile quantizes with one dynamic
+    per-tile scale and the chain runs int8 x int8 -> int32, exactly as in
+    :func:`_kernel`."""
     x_ref, w_ref = refs[0], refs[1]
     s_ref = refs[2] if quant else None
     o_ref = refs[2 + quant]
@@ -312,14 +418,23 @@ def _expert_kernel(*refs, k_collapse: int, n_steps: int, quant: bool):
 
     x = x_ref[0]                       # (bm, bk * k)  — this expert's rows
     w = w_ref[0]                       # (bk * k, bn)  — this expert's weights
-    if quant:
+    if quant and not act_quant:
         w = w.astype(x.dtype)          # exact: |code| <= 127
     bk = x.shape[1] // k_collapse
     acc = acc_ref[...]
-    for i in range(k_collapse):
-        acc = acc + jnp.dot(x[:, i * bk:(i + 1) * bk],
-                            w[i * bk:(i + 1) * bk, :],
-                            preferred_element_type=jnp.float32)
+    if act_quant:
+        qx, x_scale = quantize_tile(x)
+        iacc = jnp.zeros(acc_ref.shape, jnp.int32)
+        for i in range(k_collapse):
+            iacc = iacc + jnp.dot(qx[:, i * bk:(i + 1) * bk],
+                                  w[i * bk:(i + 1) * bk, :],
+                                  preferred_element_type=jnp.int32)
+        acc = acc + iacc.astype(jnp.float32) * x_scale
+    else:
+        for i in range(k_collapse):
+            acc = acc + jnp.dot(x[:, i * bk:(i + 1) * bk],
+                                w[i * bk:(i + 1) * bk, :],
+                                preferred_element_type=jnp.float32)
     acc_ref[...] = acc
 
     @pl.when(pl.program_id(3) == n_steps - 1)
@@ -329,7 +444,8 @@ def _expert_kernel(*refs, k_collapse: int, n_steps: int, quant: bool):
         o_ref[0] = y.astype(o_ref.dtype)
 
 
-def arrayflex_expert_gemm(x, w, *, w_scale=None, bm: int = 128,
+def arrayflex_expert_gemm(x, w, *, w_scale=None, act_quant: bool = False,
+                          bm: int = 128,
                           bn: int = 128, bk: int = 128, k_collapse: int = 1,
                           out_dtype=None, interpret=None):
     """Batched per-expert GEMM in ONE launch: X[E,T,K] @ W[E,K,N] -> [E,T,N].
@@ -337,7 +453,8 @@ def arrayflex_expert_gemm(x, w, *, w_scale=None, bm: int = 128,
     ``w_scale`` (an (E, N) fp32 array) enables the int8-weight path: ``w``
     holds int8 codes and each expert's per-output-channel dequant multiply
     resolves at its carry-propagate store, exactly as in
-    :func:`arrayflex_gemm`.
+    :func:`arrayflex_gemm`.  ``act_quant`` (requires ``w_scale``) adds the
+    W8A8 per-tile activation quantize + int8 x int8 -> int32 chain.
 
     Grid = (E, T/bm, N/bn, n_steps) — the *leading* grid dimension walks
     the expert axis, so every expert's K-collapsed schedule runs inside a
@@ -359,6 +476,8 @@ def arrayflex_expert_gemm(x, w, *, w_scale=None, bm: int = 128,
     quant = w_scale is not None
     if quant and w_scale.shape != (E, N):
         raise ValueError(f"w_scale must be ({E}, {N}), got {w_scale.shape}")
+    if act_quant and not quant:
+        raise ValueError("act_quant (W8A8) requires int8 weights (w_scale)")
     out_dtype = out_dtype or x.dtype
     if E == 0 or T == 0 or N == 0 or K == 0:
         return jnp.zeros((E, T, N), out_dtype)
@@ -377,7 +496,8 @@ def arrayflex_expert_gemm(x, w, *, w_scale=None, bm: int = 128,
     grid = (E, T // bm, N // bn, n_steps)
     interpret = resolve_interpret(interpret)
     kernel = functools.partial(_expert_kernel, k_collapse=k_collapse,
-                               n_steps=n_steps, quant=quant)
+                               n_steps=n_steps, quant=quant,
+                               act_quant=act_quant)
     operands = [x, w]
     in_specs = [
         pl.BlockSpec((1, bm, kk), lambda e, i, j, s: (e, i, s)),

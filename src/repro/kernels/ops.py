@@ -37,7 +37,8 @@ SA_C = 128
 
 @functools.lru_cache(maxsize=None)
 def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4,
-                  epilogue_ops: int = 0, precision: str = "fp32") -> int:
+                  epilogue_ops: int = 0, precision: str = "fp32",
+                  actq_ops: int = 0) -> int:
     """ArrayFlex pipeline depth for GEMM X[T,K] @ W[K,M] (Eq. 7 -> discrete).
 
     K is the contraction (the SA's R-tiled dim), M the output columns.
@@ -46,39 +47,46 @@ def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4,
     ``precision`` selects the datapath's Eq.(5) coefficients
     (``timing.timing_for``): the int8 datapath's cheap collapse stages
     move the argmin deeper than fp32 picks at the same shape.
+    ``actq_ops`` prices the W8A8 dynamic activation-quantize boundary
+    stage (Eq. 5' ``d_actq_ps``); on the w8a8 datapath this term alone
+    can deepen the argmin — e.g. (896, 4864, 512) picks k=2 unpriced and
+    k=4 with the quantizer priced.
     """
     k = timing.best_k(M, K, T_rows, SA_R, SA_C,
                       timing.timing_for(precision),
-                      epilogue_ops=epilogue_ops)
+                      epilogue_ops=epilogue_ops, actq_ops=actq_ops)
     return max(1, min(max_k, k))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("activation", "has_w2", "has_b",
-                                    "has_b2", "has_s", "has_s2",
-                                    "k_collapse", "bk", "out_dtype",
-                                    "interpret"))
-def _gemm(x, w, w2, bias, bias2, w_scale, w2_scale, activation, has_w2,
-          has_b, has_b2, has_s, has_s2, k_collapse: int, bk: int,
-          out_dtype, interpret: bool):
+                                    "has_b2", "has_s", "has_s2", "has_r",
+                                    "act_quant", "k_collapse", "bk",
+                                    "out_dtype", "interpret"))
+def _gemm(x, w, w2, bias, bias2, w_scale, w2_scale, residual, activation,
+          has_w2, has_b, has_b2, has_s, has_s2, has_r, act_quant: bool,
+          k_collapse: int, bk: int, out_dtype, interpret: bool):
     return arrayflex_gemm(x, w,
                           w2=w2 if has_w2 else None,
                           bias=bias if has_b else None,
                           bias2=bias2 if has_b2 else None,
                           w_scale=w_scale if has_s else None,
                           w2_scale=w2_scale if has_s2 else None,
+                          residual=residual if has_r else None,
+                          act_quant=act_quant,
                           activation=activation, bk=bk,
                           k_collapse=k_collapse, out_dtype=out_dtype,
                           interpret=interpret)
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("has_s", "k_collapse", "bk",
-                                    "out_dtype", "interpret"))
-def _expert_gemm(x, w, w_scale, has_s, k_collapse: int, bk: int, out_dtype,
-                 interpret: bool):
+                   static_argnames=("has_s", "act_quant", "k_collapse",
+                                    "bk", "out_dtype", "interpret"))
+def _expert_gemm(x, w, w_scale, has_s, act_quant: bool, k_collapse: int,
+                 bk: int, out_dtype, interpret: bool):
     return arrayflex_expert_gemm(x, w,
                                  w_scale=w_scale if has_s else None,
+                                 act_quant=act_quant,
                                  bk=bk, k_collapse=k_collapse,
                                  out_dtype=out_dtype, interpret=interpret)
 
@@ -88,18 +96,26 @@ def _round_up(x: int, m: int) -> int:
 
 
 def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
-                     w_scale=None, w2_scale=None,
+                     w_scale=None, w2_scale=None, act_quant: bool = False,
+                     residual=None,
                      activation: str = "none", k_collapse: int = 0,
                      bk: int = 128, out_dtype=None, interpret=None):
     """Planner-configured GEMM with fused epilogue.  x: (..., K), w: (K, N).
 
-        out = act(x@w [+ bias]) [* (x@w2 [+ bias2])]
+        out = [residual +] act(x@w [+ bias]) [* (x@w2 [+ bias2])]
+
+    ``residual`` is an output-shaped ``(..., N)`` stream joined after the
+    activation/gate at the carry-propagate store (one more priced
+    boundary op; padded rows/columns join zero residual and slice off).
 
     ``w_scale`` enables the int8-weight path (``w`` holds int8 codes,
     effective weight ``w * w_scale`` per output channel; dequant at the
     carry-propagate store) — the unplanned ``k_collapse=0`` then picks k
     with the int8 datapath's Eq.(5) coefficients, which favor deeper
-    collapse than fp32.
+    collapse than fp32.  ``act_quant`` (requires ``w_scale``) enables the
+    W8A8 per-tile activation quantize + int8 x int8 -> int32 chain; the
+    unplanned path then prices the w8a8 datapath with one Eq.(5')
+    activation-quantize boundary op.
 
     Covers *every* nonempty shape exactly: the kernel zero-pads ragged K
     itself, and ragged M rows / N columns (tilings the output grid cannot
@@ -122,21 +138,31 @@ def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
             None if bias is None else bias.astype(jnp.float32),
             None if bias2 is None else bias2.astype(jnp.float32),
             activation)
+        if residual is not None:
+            out = residual.astype(jnp.float32) + out
         return out.astype(out_dtype)
     x2 = x.reshape(-1, K)
     M_rows = x2.shape[0]
     quant = w_scale is not None
     if not k_collapse:
-        # dequant multiplies are boundary ops too: one per contraction
+        # dequant multiplies (one per contraction) and the residual join
+        # are boundary ops too
         n_ops = ((activation != "none") + (bias is not None)
                  + (bias2 is not None) + (w2 is not None)
+                 + (residual is not None)
                  + quant * (1 + (w2 is not None)))
+        precision = ("w8a8" if act_quant else "int8") if quant else "fp32"
         k_collapse = plan_collapse(N, K, M_rows, epilogue_ops=n_ops,
-                                   precision="int8" if quant else "fp32")
+                                   precision=precision,
+                                   actq_ops=int(act_quant))
     # tile sizes mirror the kernel's bm/bn clamp: a dim smaller than the SA
     # is its own (exactly dividing) tile; larger dims pad up to a multiple.
     Mp = M_rows if M_rows <= SA_R else _round_up(M_rows, SA_R)
     Np = N if N <= SA_C else _round_up(N, SA_C)
+    if residual is not None:
+        residual = residual.reshape(M_rows, N)
+        if (Mp, Np) != (M_rows, N):
+            residual = jnp.pad(residual, ((0, Mp - M_rows), (0, Np - N)))
     if Mp != M_rows:
         x2 = jnp.pad(x2, ((0, Mp - M_rows), (0, 0)))
     if Np != N:
@@ -158,23 +184,28 @@ def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
                 bias2 if bias2 is not None else dummy,
                 w_scale if w_scale is not None else dummy,
                 w2_scale if w2_scale is not None else dummy,
+                residual if residual is not None else dummy,
                 activation, w2 is not None, bias is not None,
                 bias2 is not None, w_scale is not None,
-                w2_scale is not None, k_collapse, bk, out_dtype, interpret)
+                w2_scale is not None, residual is not None,
+                act_quant, k_collapse, bk,
+                out_dtype, interpret)
     if (Mp, Np) != (M_rows, N):
         out = out[:M_rows, :N]
     return out.reshape(*lead, N)
 
 
-def arrayflex_expert_matmul(x, w, *, w_scale=None, k_collapse: int = 0,
+def arrayflex_expert_matmul(x, w, *, w_scale=None, act_quant: bool = False,
+                            k_collapse: int = 0,
                             bk: int = 128, out_dtype=None, interpret=None):
     """Planner-configured batched expert GEMM in ONE kernel launch.
 
     x: (E, T, K), w: (E, K, N) -> (E, T, N).  All experts share one
     collapse depth k, planned for the common (N, K, T) shape (every expert
     GEMM in a capacity-buffered MoE layer has identical shape).
-    ``w_scale`` (E, N) enables the int8-weight path.  Ragged T / N are
-    zero-padded to the systolic tile and sliced off, exactly as in
+    ``w_scale`` (E, N) enables the int8-weight path; ``act_quant`` adds
+    the W8A8 per-tile activation quantize.  Ragged T / N are zero-padded
+    to the systolic tile and sliced off, exactly as in
     :func:`arrayflex_matmul`.
     """
     E, T, K = x.shape
@@ -185,8 +216,10 @@ def arrayflex_expert_matmul(x, w, *, w_scale=None, k_collapse: int = 0,
         return jnp.zeros((E, T, N), out_dtype)
     quant = w_scale is not None
     if not k_collapse:
+        precision = ("w8a8" if act_quant else "int8") if quant else "fp32"
         k_collapse = plan_collapse(N, K, T, epilogue_ops=int(quant),
-                                   precision="int8" if quant else "fp32")
+                                   precision=precision,
+                                   actq_ops=int(act_quant))
     Tp = T if T <= SA_R else _round_up(T, SA_R)
     Np = N if N <= SA_C else _round_up(N, SA_C)
     if Tp != T:
@@ -196,7 +229,7 @@ def arrayflex_expert_matmul(x, w, *, w_scale=None, k_collapse: int = 0,
         if w_scale is not None:
             w_scale = jnp.pad(w_scale, ((0, 0), (0, Np - N)))
     dummy = jnp.zeros((), x.dtype)
-    out = _expert_gemm(x, w, w_scale if quant else dummy, quant,
+    out = _expert_gemm(x, w, w_scale if quant else dummy, quant, act_quant,
                        k_collapse, bk, out_dtype, interpret)
     if (Tp, Np) != (T, N):
         out = out[:, :T, :N]

@@ -24,6 +24,13 @@ MoE batched form, :func:`batched_gemm` for attention QK/PV products), which
                          channel fp32 scales (fp32 accumulation, dequant
                          at the carry-propagate boundary), planned with
                          the int8 datapath's Eq.(5) coefficients,
+      ``arrayflex_w8a8`` int8 weights AND dynamically quantized int8
+                         activations: each grid step quantizes its
+                         activation tile in-kernel (per-tile fp32 scale)
+                         and the MAC chain runs int8 x int8 -> int32,
+                         planned with the w8a8 datapath's coefficients
+                         plus the Eq.(5') activation-quantize boundary
+                         term (``timing.W8A8TimingParams.d_actq_ps``),
       ``ref``            an fp32-everywhere oracle for equivalence tests.
 
 **Int8 weight quantization** (the ``arrayflex_int8`` backend): dispatch
@@ -47,10 +54,11 @@ router logits feed a discrete top-k, where quantization noise would
 change expert routing rather than add bounded output error.
 
 **Epilogues**: ``gemm(..., epilogue="silu"|"gelu"|"swiglu", bias=...,
-w2=...)`` fuses bias add, activation, and the dual-contraction gated
-multiply (swiglu: ``silu(x@w [+bias]) * (x@w2 [+bias2])``) into the
-arrayflex kernel's carry-propagate store — no HBM round-trip between a
-GEMM and its activation.  Unfused backends (xla/ref) apply the identical
+w2=..., residual=...)`` fuses bias add, activation, the dual-contraction
+gated multiply (swiglu: ``silu(x@w [+bias]) * (x@w2 [+bias2])``), and the
+sublayer residual join (``residual + f(x)``) into the arrayflex kernel's
+carry-propagate store — no HBM round-trip between a GEMM and its
+activation or residual add.  Unfused backends (xla/ref) apply the identical
 math as a post-pass (``apply_epilogue``), so every backend computes the
 same function and equivalence tests stay meaningful.  The epilogue's
 vector ops are priced into Eq.(5')/(6') and can shift the planned k.
@@ -122,6 +130,9 @@ class Epilogue:
     kind: str = "none"
     bias: bool = False
     bias2: bool = False
+    # residual-add fused after the activation/gate at the same boundary
+    # (the transformer sublayer ``x + f(x)`` — one more Eq.(5') vector op)
+    residual: bool = False
 
     @property
     def dual(self) -> bool:
@@ -134,9 +145,9 @@ class Epilogue:
     @property
     def ops(self) -> int:
         """Fused vector ops at the collapsed-block boundary (Eq. 5' ``e``):
-        one per activation, gate multiply, and bias add."""
+        one per activation, gate multiply, bias add, and residual add."""
         return ((self.activation != "none") + self.dual
-                + self.bias + self.bias2)
+                + self.bias + self.bias2 + self.residual)
 
     @property
     def contractions(self) -> int:
@@ -159,6 +170,8 @@ class GemmCall:
     # (set by the dispatch for quantizing backends; None = fp32 weights)
     w_scale: Any = None
     w2_scale: Any = None
+    # (T, N_out) residual stream added after the epilogue (epilogue.residual)
+    residual: Any = None
     interpret: Optional[bool] = None   # Pallas interpret override
 
 
@@ -189,6 +202,8 @@ CALL_FIELD_KEYING = {
     "w_scale": "backend:quantize — scales present iff the keyed backend "
                "quantizes (dequant_ops priced from BackendInfo.quantize)",
     "w2_scale": "backend:quantize",
+    "residual": "epilogue:residual — residual present iff the keyed "
+                "Epilogue spec carries the fused residual add",
     "interpret": "operand: Pallas interpret mode swaps the executor, never "
                  "the plan (identical math at the same k)",
 }
@@ -201,6 +216,8 @@ BACKEND_FIELD_KEYING = {
     "collapse": "keyed-by-name: read inside _plan_gemm_cached",
     "precision": "keyed-by-name: read inside _plan_gemm_cached",
     "quantize": "keyed-by-name: read inside _plan_gemm_cached (dequant_ops)",
+    "act_quantize": "keyed-by-name: read inside _plan_gemm_cached "
+                    "(actq_ops — the Eq.(5') quantize boundary term)",
 }
 
 
@@ -316,6 +333,14 @@ def quantize_weight(w):
         return ent[1], ent[2]
     QUANT_CACHE_STATS["misses"] += 1
     q, s = _quantize(w)
+    if isinstance(q, jax.core.Tracer):
+        # concrete weight quantized under an ambient trace (make_jaxpr /
+        # jit over a closure lifts even concrete-operand ops into the
+        # trace): memoizing the traced codes would leak tracers into
+        # later dispatches — treat it as the in-trace path instead
+        QUANT_CACHE_STATS["misses"] -= 1
+        QUANT_CACHE_STATS["traced"] += 1
+        return q, s
     try:
         ref = weakref.ref(w, lambda _, k=key: _QUANT_CACHE.pop(k, None))
     except TypeError:       # array type without weakref support: pin it
@@ -384,6 +409,15 @@ def backend_quantizes(name: str) -> bool:
     pre-quantized param tree applies to it)."""
     check_backend(name)
     return _BACKEND_INFO[name].quantize
+
+
+def backend_act_quantizes(name: str) -> bool:
+    """Whether the registered backend also quantizes activation tiles
+    dynamically (the W8A8 datapath): its in-trace int8 activation casts
+    are the priced Eq.(5') quantize boundary, not rogue re-quantization
+    — the jaxpr auditor keys its AF003 classification on this."""
+    check_backend(name)
+    return _BACKEND_INFO[name].act_quantize
 
 
 def quantize_cache_info() -> Dict[str, int]:
@@ -510,9 +544,13 @@ def _plan_gemm_cached(M: int, N: int, T: int, backend: str,
     # a quantizing backend's per-output-channel dequant multiply resolves
     # at the carry-propagate boundary like any fused op: one per contraction
     dequant_ops = epilogue.contractions if (info and info.quantize) else 0
+    # a W8A8 backend's per-tile activation quantizer (amax + scale +
+    # round/clip) is one more boundary stage, priced with its own Eq.(5')
+    # coefficient (d_actq_ps) rather than d_epilogue_ps
+    actq_ops = 1 if (info and info.act_quantize) else 0
     e_ops = epilogue.ops + shard.reduce_ops + dequant_ops
     k = (ops.plan_collapse(Ms, Ns, Ts, epilogue_ops=e_ops,
-                           precision=precision)
+                           precision=precision, actq_ops=actq_ops)
          if collapse else 1)
     return GemmPlan(
         M=M, N=N, T=T, backend=backend, k=k, epilogue=epilogue, shard=shard,
@@ -521,11 +559,12 @@ def _plan_gemm_cached(M: int, N: int, T: int, backend: str,
             Ms, Ns, Ts, ops.SA_R, ops.SA_C, k),
         t_pred_ps=timing.t_abs_ps(Ms, Ns, Ts, ops.SA_R, ops.SA_C, k,
                                   params=params, epilogue_ops=e_ops,
-                                  contractions=epilogue.contractions),
+                                  contractions=epilogue.contractions,
+                                  actq_ops=actq_ops),
         t_conventional_ps=timing.t_abs_conventional_ps(
             Ms, Ns, Ts, ops.SA_R, ops.SA_C, params=params,
             contractions=epilogue.contractions,
-            epilogue_ops=e_ops))
+            epilogue_ops=e_ops, actq_ops=actq_ops))
 
 
 # backend name -> {"hits": n, "misses": n} of plan_gemm lookups: which
@@ -608,19 +647,23 @@ def _xla_backend(x2, w, plan: GemmPlan, call: GemmCall):
     if call.out_dtype is None:
         # bit-for-bit the pre-substrate path: operand-dtype contraction(s),
         # epilogue applied in the same op order the unfused layers used
+        # (residual + out matches the layers' ``x + f(x)``)
         y = x2 @ w
         y2 = x2 @ call.w2 if ep.dual else None
-        return apply_epilogue(y, y2, call.bias, call.bias2, ep.activation)
+        out = apply_epilogue(y, y2, call.bias, call.bias2, ep.activation)
+        return out if call.residual is None else call.residual + out
     y = jnp.dot(x2, w, preferred_element_type=jnp.float32)
     y2 = (jnp.dot(x2, call.w2, preferred_element_type=jnp.float32)
           if ep.dual else None)
-    return apply_epilogue(y, y2, call.bias, call.bias2,
-                          ep.activation).astype(call.out_dtype)
+    out = apply_epilogue(y, y2, call.bias, call.bias2, ep.activation)
+    if call.residual is not None:
+        out = call.residual.astype(jnp.float32) + out
+    return out.astype(call.out_dtype)
 
 
 def _arrayflex_backend(x2, w, plan: GemmPlan, call: GemmCall):
     return ops.arrayflex_matmul(x2, w, w2=call.w2, bias=call.bias,
-                                bias2=call.bias2,
+                                bias2=call.bias2, residual=call.residual,
                                 activation=plan.epilogue.activation,
                                 k_collapse=plan.k, out_dtype=call.out_dtype,
                                 interpret=call.interpret)
@@ -634,6 +677,8 @@ def _ref_backend(x2, w, plan: GemmPlan, call: GemmCall):
     b = None if call.bias is None else call.bias.astype(jnp.float32)
     b2 = None if call.bias2 is None else call.bias2.astype(jnp.float32)
     out = apply_epilogue(y, y2, b, b2, plan.epilogue.activation)
+    if call.residual is not None:
+        out = call.residual.astype(jnp.float32) + out
     return out.astype(call.out_dtype or x2.dtype)
 
 
@@ -646,6 +691,23 @@ def _arrayflex_int8_backend(x2, w, plan: GemmPlan, call: GemmCall):
     return ops.arrayflex_matmul(x2, w, w2=call.w2, bias=call.bias,
                                 bias2=call.bias2, w_scale=call.w_scale,
                                 w2_scale=call.w2_scale,
+                                residual=call.residual,
+                                activation=plan.epilogue.activation,
+                                k_collapse=plan.k, out_dtype=call.out_dtype,
+                                interpret=call.interpret)
+
+
+def _arrayflex_w8a8_backend(x2, w, plan: GemmPlan, call: GemmCall):
+    # Same operand contract as the int8 backend (codes + scales from the
+    # dispatch memo); ``act_quant`` keys on the scales' presence, so an
+    # exempt site (fp32 w, no scale — planned as the fp32 base) runs the
+    # fp32 kernel while every quantized site engages the in-kernel
+    # per-tile activation quantizer and the int8 x int8 -> int32 chain.
+    return ops.arrayflex_matmul(x2, w, w2=call.w2, bias=call.bias,
+                                bias2=call.bias2, w_scale=call.w_scale,
+                                w2_scale=call.w2_scale,
+                                act_quant=call.w_scale is not None,
+                                residual=call.residual,
                                 activation=plan.epilogue.activation,
                                 k_collapse=plan.k, out_dtype=call.out_dtype,
                                 interpret=call.interpret)
@@ -661,12 +723,18 @@ class BackendInfo:
     the plan, carried by the backend name in the cache key).
     ``quantize``: the dispatch pre-quantizes weight operands through
     :func:`quantize_weight` and hands int8 codes + scales to ``fn``.
+    ``act_quantize``: the backend also quantizes activation tiles
+    dynamically in-kernel (W8A8) — planning prices one Eq.(5')
+    activation-quantize boundary op (``timing`` ``d_actq_ps``) on top of
+    the dequant ops.  Requires ``quantize`` (the kernel's int8 chain
+    needs int8 weight codes on the other operand).
     """
 
     fn: Callable
     collapse: bool = False
     precision: str = "fp32"
     quantize: bool = False
+    act_quantize: bool = False
 
 
 _BACKENDS: Dict[str, Callable] = {}
@@ -675,7 +743,8 @@ _BACKEND_INFO: Dict[str, BackendInfo] = {}
 
 def register_backend(name: str, fn: Callable, *, collapse: bool = False,
                      precision: str = "fp32",
-                     quantize: bool = False) -> None:
+                     quantize: bool = False,
+                     act_quantize: bool = False) -> None:
     """fn(x2: (T, K), w: (K, N_out), plan: GemmPlan, call: GemmCall)
     -> (T, N_out).  ``call`` carries out_dtype, the epilogue operands
     (w2/bias/bias2 — apply with ``kernels.arrayflex_gemm.apply_epilogue``
@@ -689,10 +758,16 @@ def register_backend(name: str, fn: Callable, *, collapse: bool = False,
     backend's collapse/precision metadata, so a name whose metadata
     changes must not keep serving stale k picks."""
     timing.timing_for(precision)     # fail fast on unknown precisions
+    if act_quantize and not quantize:
+        raise ValueError(
+            f"backend {name!r}: act_quantize requires quantize — the W8A8 "
+            f"int8 chain multiplies quantized activation tiles against "
+            f"int8 weight codes")
     _BACKENDS[name] = fn
     _BACKEND_INFO[name] = BackendInfo(fn=fn, collapse=collapse,
                                       precision=precision,
-                                      quantize=quantize)
+                                      quantize=quantize,
+                                      act_quantize=act_quantize)
     _plan_gemm_cached.cache_clear()
     PLAN_CACHE_STATS.clear()
 
@@ -720,11 +795,33 @@ register_backend("xla", _xla_backend)
 register_backend("arrayflex", _arrayflex_backend, collapse=True)
 register_backend("arrayflex_int8", _arrayflex_int8_backend, collapse=True,
                  precision="int8", quantize=True)
+register_backend("arrayflex_w8a8", _arrayflex_w8a8_backend, collapse=True,
+                 precision="w8a8", quantize=True, act_quantize=True)
 register_backend("ref", _ref_backend)
 
 _BUILTIN_BACKENDS = {"xla": _xla_backend, "arrayflex": _arrayflex_backend,
                      "arrayflex_int8": _arrayflex_int8_backend,
+                     "arrayflex_w8a8": _arrayflex_w8a8_backend,
                      "ref": _ref_backend}
+
+# builtin quantizing backend -> the fp32 ArrayFlex base that exempt sites
+# and non-quantizable dispatches plan (and, on the batched path, execute)
+# instead — the recorded Eq.(6') prediction must match the datapath the
+# array actually runs.
+_QUANT_FP32_BASE = {"arrayflex_int8": "arrayflex",
+                    "arrayflex_w8a8": "arrayflex"}
+
+# Batched (activation x activation) sites the W8A8 backend quantizes:
+# attn.qk only.  Both QK operands quantize dynamically — K per key column
+# in-trace (one scale per key position, via _quantize), q per tile in the
+# kernel prologue — and the resulting logit error is bounded relative to
+# |q||k|, which the softmax tolerates at the gated tolerances.  attn.pv
+# stays on the fp32 base: softmax concentrates the probability operand's
+# mass near zero, and symmetric per-tile int8 (resolution amax/127 with
+# amax ~ 1) would zero exactly the long tail of small attention weights
+# that distinguishes outputs.  Cross-attention QK keeps the conservative
+# fp32 base until separately validated.
+BATCHED_ACTQ_SITES = frozenset({"attn.qk"})
 
 
 def _is_builtin(name: str) -> bool:
@@ -783,7 +880,7 @@ def _record(site: str, plan: GemmPlan, launches: int = 1) -> None:
     DISPATCH_COUNTS[site] = DISPATCH_COUNTS.get(site, 0) + launches
 
 
-def _epilogue_spec(epilogue: str, w2, bias, bias2) -> Epilogue:
+def _epilogue_spec(epilogue: str, w2, bias, bias2, residual=None) -> Epilogue:
     if epilogue not in EPILOGUE_KINDS:
         raise ValueError(f"unknown epilogue {epilogue!r}; "
                          f"supported: {EPILOGUE_KINDS}")
@@ -793,7 +890,8 @@ def _epilogue_spec(epilogue: str, w2, bias, bias2) -> Epilogue:
     if bias2 is not None and w2 is None:
         raise ValueError("bias2 requires the w2 contraction")
     return Epilogue(kind=epilogue, bias=bias is not None,
-                    bias2=bias2 is not None)
+                    bias2=bias2 is not None,
+                    residual=residual is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -821,12 +919,14 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
     flags = []
     for arr, spec in ((call.w2, ctx.w_spec), (call.w_scale, col_spec),
                       (call.w2_scale, col_spec), (call.bias, col_spec),
-                      (call.bias2, col_spec)):
+                      (call.bias2, col_spec),
+                      # the residual stream is output-shaped: shard like out
+                      (call.residual, ctx.out_spec)):
         flags.append(arr is not None)
         if arr is not None:
             operands.append(arr)
             in_specs.append(spec)
-    has_w2, has_s, has_s2, has_b, has_b2 = flags
+    has_w2, has_s, has_s2, has_b, has_b2, has_r = flags
     # reduce path: the per-shard kernel runs the contraction(s) only, at
     # the SAME k the (reduce-priced) plan picked
     exec_plan = (dataclasses.replace(plan, epilogue=EPILOGUE_NONE)
@@ -840,11 +940,12 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
         s2s = next(it) if has_s2 else None
         bs = next(it) if has_b else None
         b2s = next(it) if has_b2 else None
+        rs = next(it) if has_r else None
         if not reduce_axes:
             return fn(xs, ws, plan,
                       GemmCall(out_dtype=call.out_dtype, w2=w2s, bias=bs,
                                bias2=b2s, w_scale=ss, w2_scale=s2s,
-                               interpret=call.interpret))
+                               residual=rs, interpret=call.interpret))
         pc = GemmCall(out_dtype=jnp.float32, w_scale=ss,
                       interpret=call.interpret)
         y = jax.lax.psum(fn(xs, ws, exec_plan, pc), reduce_axes)
@@ -857,6 +958,8 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
             None if bs is None else bs.astype(jnp.float32),
             None if b2s is None else b2s.astype(jnp.float32),
             ep.activation)
+        if rs is not None:       # residual joins after the post-psum epilogue
+            out = rs.astype(jnp.float32) + out
         return out.astype(call.out_dtype or xs.dtype)
 
     return shard_map(body, mesh=ctx.mesh, in_specs=tuple(in_specs),
@@ -865,7 +968,7 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
 
 def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
          epilogue: str = "none", w2=None, bias=None, bias2=None,
-         interpret=None, shard: Optional[ShardCtx] = None):
+         residual=None, interpret=None, shard: Optional[ShardCtx] = None):
     """The substrate entry: x (..., K) @ w (K, N_out) -> (..., N_out).
 
     ``out_dtype=None`` returns the operands' dtype with the backend's
@@ -876,8 +979,12 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     on the arrayflex backend): ``"silu"``/``"gelu"`` apply the activation
     to ``x@w [+ bias]``; ``"swiglu"`` computes
     ``silu(x@w [+ bias]) * (x@w2 [+ bias2])`` — the dual-GEMM gated MLP in
-    ONE launch.  A fused site label like ``"mlp.wi_gate+mlp.wi_up"``
-    records the shared plan under both component names.
+    ONE launch.  ``residual`` (an output-shaped ``(..., N_out)`` array)
+    fuses the transformer sublayer's ``residual + f(x)`` add after the
+    activation/gate, at the same carry-propagate boundary — no extra HBM
+    round-trip between a sublayer GEMM and its residual join.  A fused
+    site label like ``"mlp.wi_gate+mlp.wi_up"`` records the shared plan
+    under both component names.
 
     ``shard`` (a :class:`ShardCtx`) dispatches under the SPMD mesh: the
     plan is computed on the post-partition per-shard (M, N, T) — keyed in
@@ -887,15 +994,16 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     context whose counts do not divide the dims (or an empty operand)
     falls back to replicated dispatch.
 
-    On a quantizing backend (``arrayflex_int8``) the dispatch swaps ``w``
-    (and ``w2``) for int8 codes + per-output-channel fp32 scales through
-    the weight memo (:func:`quantize_weight`) before planning/sharding —
-    unless the site is quantization-exempt (:data:`QUANT_EXEMPT_SITES`).
+    On a quantizing backend (``arrayflex_int8`` / ``arrayflex_w8a8``) the
+    dispatch swaps ``w`` (and ``w2``) for int8 codes + per-output-channel
+    fp32 scales through the weight memo (:func:`quantize_weight`) before
+    planning/sharding — unless the site is quantization-exempt
+    (:data:`QUANT_EXEMPT_SITES`).
     """
     fn = get_backend(backend)
     _maybe_chaos_fault(site)
     info = _BACKEND_INFO[backend]
-    ep = _epilogue_spec(epilogue, w2, bias, bias2)
+    ep = _epilogue_spec(epilogue, w2, bias, bias2, residual)
     w_scale = w2_scale = None
     plan_backend = backend
     if isinstance(w, QuantizedTensor):
@@ -913,11 +1021,11 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
         if isinstance(w2, QuantizedTensor):
             w2, w2_scale = w2.codes, w2.scale
     elif info.quantize and site in QUANT_EXEMPT_SITES:
-        # an exempt site runs fp32 weights with no dequant: price (and
-        # record) it as the fp32 base so its Eq.(6') prediction matches
-        # the datapath it actually executes, not the quantized one
-        if backend == "arrayflex_int8":
-            plan_backend = "arrayflex"
+        # an exempt site runs fp32 weights with no dequant (the w8a8
+        # kernel's activation quantizer keys off the scales and stays off
+        # too): price (and record) it as the fp32 base so its Eq.(6')
+        # prediction matches the datapath it actually executes
+        plan_backend = _QUANT_FP32_BASE.get(backend, plan_backend)
     elif info.quantize and w.shape[0] and w.shape[-1]:
         w, w_scale = quantize_weight(w)
         if w2 is not None:
@@ -927,11 +1035,13 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     N_out = w.shape[-1]
     x2 = x.reshape(math.prod(lead), K)   # explicit rows: K may be 0
     T = x2.shape[0]
+    r2 = (None if residual is None
+          else residual.reshape(T, N_out))   # raises on shape mismatch
     if shard is not None and (T * K * N_out == 0
                               or not shard.divides(T, K, N_out)):
         shard = None
     call = GemmCall(out_dtype=out_dtype, w2=w2, bias=bias, bias2=bias2,
-                    w_scale=w_scale, w2_scale=w2_scale,
+                    w_scale=w_scale, w2_scale=w2_scale, residual=r2,
                     interpret=interpret)
     if shard is not None:
         plan = plan_gemm(N_out, K, T, plan_backend, ep, shard.signature())
@@ -948,6 +1058,18 @@ def _batched_exec(x, w, plan: GemmPlan, backend: str, out_dtype, interpret):
     """Builtin batched execution (B, T, K) @ (B, K, N): ONE launch."""
     if backend == "arrayflex":
         return ops.arrayflex_expert_matmul(x, w, k_collapse=plan.k,
+                                           out_dtype=out_dtype,
+                                           interpret=interpret)
+    if backend == "arrayflex_w8a8":
+        # W8A8 QK: both operands are activations, and both quantize
+        # dynamically — the "w" operand (K^T) per (batch, column) in-trace,
+        # one scale per key position, and each q tile in the kernel
+        # prologue.  The int8 x int8 -> int32 chain runs exactly as on
+        # weight GEMMs; the per-key scales dequant at the store.
+        qw, ws = _quantize(w)
+        return ops.arrayflex_expert_matmul(x, qw, w_scale=ws,
+                                           act_quant=True,
+                                           k_collapse=plan.k,
                                            out_dtype=out_dtype,
                                            interpret=interpret)
     if backend == "ref":
@@ -979,14 +1101,21 @@ def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
 
     The batched operands are attention K/V *activations*, not weights —
     there is nothing to quantize once (weights-only quantization) — so
-    the builtin quantizing backend maps to its fp32 ArrayFlex base
-    (kernel AND plan); a custom quantizing backend dispatches itself
-    with ``call.w_scale=None`` (fp32 operands, the registry contract).
+    the builtin ``arrayflex_int8`` backend maps to its fp32 ArrayFlex
+    base (kernel AND plan), and a custom quantizing backend dispatches
+    itself with ``call.w_scale=None`` (fp32 operands, the registry
+    contract).  The ``arrayflex_w8a8`` backend *can* quantize an
+    activation product — both operands dynamically — and does so on the
+    sites in :data:`BATCHED_ACTQ_SITES` (``attn.qk``; PV stays on the
+    fp32 base — see the constant's rationale), planned and recorded under
+    the w8a8 datapath with the quantize boundary term priced.
     """
     check_backend(backend)
     _maybe_chaos_fault(site)
-    if backend == "arrayflex_int8":
-        backend = "arrayflex"
+    if backend in _QUANT_FP32_BASE and not (
+            _BACKEND_INFO[backend].act_quantize and _is_builtin(backend)
+            and site in BATCHED_ACTQ_SITES):
+        backend = _QUANT_FP32_BASE[backend]
     B, T, K = x.shape
     N_out = w.shape[-1]
     plan = plan_gemm(N_out, K, T, backend)
@@ -1014,10 +1143,12 @@ def batched_gemm(x, w, *, site: str = "", backend: str = "xla",
 
 
 def _expert_exec(x, w, plan: GemmPlan, backend: str, interpret,
-                 w_scale=None):
+                 w_scale=None, act_quant: bool = False):
     """Builtin expert execution (G, E, C, K) @ (E, K, N): ONE launch.
     ``w_scale`` (E, N): int8 expert bank, dequantized per expert at the
-    kernel's carry-propagate store."""
+    kernel's carry-propagate store.  ``act_quant`` (W8A8): the kernel
+    additionally quantizes each activation tile in its prologue and runs
+    the int8 x int8 -> int32 chain."""
     if backend == "xla":
         return jnp.einsum("gecd,edf->gecf", x, w)
     if backend == "ref":
@@ -1028,6 +1159,7 @@ def _expert_exec(x, w, plan: GemmPlan, backend: str, interpret,
     N_out = w.shape[-1]
     xe = x.transpose(1, 0, 2, 3).reshape(E, G * C, K)
     out = ops.arrayflex_expert_matmul(xe, w, w_scale=w_scale,
+                                      act_quant=act_quant,
                                       k_collapse=plan.k,
                                       interpret=interpret)
     return out.reshape(E, G, C, N_out).transpose(1, 0, 2, 3)
@@ -1069,6 +1201,9 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
         w, w_scale = w.codes, w.scale
     elif info.quantize and E and K and N_out:
         w, w_scale = quantize_weight(w)
+    # W8A8: the expert kernel engages its in-kernel activation quantizer
+    # whenever the bank is quantized (the plan priced the boundary term)
+    actq = bool(info.act_quantize and w_scale is not None)
     plan = plan_gemm(N_out, K, G * C, backend)
     if shard is not None and (not _is_builtin(backend)
                               or E % shard.axis_shards(shard.x_spec[1])):
@@ -1078,7 +1213,8 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
 
         if w_scale is not None:
             def body_q(xs, ws, ss):
-                return _expert_exec(xs, ws, plan, backend, interpret, ss)
+                return _expert_exec(xs, ws, plan, backend, interpret, ss,
+                                    actq)
 
             return shard_map(
                 body_q, mesh=shard.mesh,
@@ -1094,7 +1230,7 @@ def expert_gemm(x, w, *, site: str = "", backend: str = "xla",
                          out_specs=shard.out_spec, check_rep=False)(x, w)
     if _is_builtin(backend):
         _record(site, plan)
-        return _expert_exec(x, w, plan, backend, interpret, w_scale)
+        return _expert_exec(x, w, plan, backend, interpret, w_scale, actq)
     # custom backend: unroll the (static) expert axis through the 2-D
     # entry — E launches, each recorded against the shared per-shape plan
     # (a quantizing backend's per-expert dequant scales ride along)

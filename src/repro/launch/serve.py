@@ -51,6 +51,13 @@ def phase_report(engine: ServingEngine, reqs) -> str:
                 f"peak concurrency {st['concurrency_peak']}, "
                 f"prefix hits {st['prefix_hit_tokens']} tok, "
                 f"{st['prefill_gemm_dispatches']} prefill GEMM launches")
+    be = engine.cfg.gemm_backend
+    if substrate.backend_quantizes(be):
+        out += (f"\nquantized: {be} serves int8 weights from the "
+                f"pre-quantized tree"
+                + (", per-tile int8 activations in-kernel (W8A8 MAC path)"
+                   if substrate.backend_act_quantizes(be)
+                   else " against fp32 activations"))
     counts = {r.outcome or "pending": 0 for r in reqs}
     for r in reqs:
         counts[r.outcome or "pending"] += 1

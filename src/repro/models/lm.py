@@ -412,9 +412,10 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
         x = x + out
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend,
-                              interpret=cfg.pallas_interpret)
+        # sublayer residual join fused into the mlp.wo store
+        x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                          backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret, residual=x)
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -453,9 +454,10 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
         x = x + cross_attn_decode(p["xattn"], h, cfg, cache)
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend,
-                              interpret=cfg.pallas_interpret)
+        # sublayer residual join fused into the mlp.wo store
+        x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                          backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret, residual=x)
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -488,9 +490,10 @@ def sublayer_prefill(p, cfg: ModelConfig, pos_idx: int, x, cache, pos,
     x = x + out
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend,
-                              interpret=cfg.pallas_interpret)
+        # sublayer residual join fused into the mlp.wo store
+        x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                          backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret, residual=x)
     return x, new_cache
 
 
@@ -562,8 +565,8 @@ def _encode_audio(cfg, params, frames):
         out, _ = attn_full(p["attn"], h, cfg, positions, causal=False)
         x = x + out
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, cd, backend=cfg.gemm_backend,
-                                               interpret=cfg.pallas_interpret)
+        x = layers.swiglu(p["mlp"], h, cd, backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret, residual=x)
         return x, None
 
     x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_blocks"][0])
@@ -747,9 +750,10 @@ def _sublayer_decode_paged(p, cfg, pos_idx, x, cache, pos, bt):
     x = x + out
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend,
-                              interpret=cfg.pallas_interpret)
+        # sublayer residual join fused into the mlp.wo store
+        x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                          backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret, residual=x)
     return x, new_cache
 
 
@@ -763,9 +767,10 @@ def _sublayer_prefill_paged(p, cfg, pos_idx, x, cache, pos, lengths, bt):
     x = x + out
     if kind["mlp"] == "dense":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        x = x + layers.swiglu(p["mlp"], h, _cdtype(cfg),
-                              backend=cfg.gemm_backend,
-                              interpret=cfg.pallas_interpret)
+        # sublayer residual join fused into the mlp.wo store
+        x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
+                          backend=cfg.gemm_backend,
+                          interpret=cfg.pallas_interpret, residual=x)
     return x, new_cache
 
 

@@ -37,14 +37,16 @@ def linear_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32,
 
 
 def linear(p, x, compute_dtype=None, *, site="", backend="xla",
-           interpret=None, shard=None):
+           interpret=None, shard=None, residual=None):
     """Dense projection through the GEMM substrate (kernels.substrate).
 
     ``backend`` selects the execution backend; ``site`` labels the GEMM
     with its ``planner.model_gemms`` name so the plan cache lines up with
     the analytic model.  The default backend reproduces ``x @ w`` exactly.
     A bias rides the substrate's fused epilogue (one kernel launch on the
-    arrayflex backend, no HBM round-trip between GEMM and add).
+    arrayflex backend, no HBM round-trip between GEMM and add), and
+    ``residual`` (an output-shaped array) fuses the sublayer's
+    ``residual + f(x)`` join at the same boundary.
 
     Under an active GEMM mesh (``sharding.use_gemm_mesh`` — the lm entry
     points activate it from ``ModelConfig.mesh_shape``) the dispatch
@@ -60,7 +62,8 @@ def linear(p, x, compute_dtype=None, *, site="", backend="xla",
         shard = sharding.gemm_shard_ctx(site, math.prod(x.shape[:-1]),
                                         w.shape[0], w.shape[-1])
     return substrate.gemm(x, w, site=site, backend=backend,
-                          bias=p.get("b"), interpret=interpret, shard=shard)
+                          bias=p.get("b"), residual=residual,
+                          interpret=interpret, shard=shard)
 
 
 # ---------------------------------------------------------------- norms
@@ -144,11 +147,15 @@ def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
 
 
 def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
-           interpret=None):
+           interpret=None, residual=None):
     """Gated MLP via the substrate's dual-GEMM swiglu epilogue:
     ``silu(x@Wg) * (x@Wu)`` is ONE dispatch (one fused kernel launch on
     the arrayflex backend — both contractions stream the collapsed
-    schedule, the gate resolves at the carry-propagate store)."""
+    schedule, the gate resolves at the carry-propagate store).
+
+    ``residual`` fuses the sublayer's ``residual + mlp(x)`` join into the
+    ``wo`` projection's store — the model's residual stream never makes a
+    separate HBM round-trip for the add."""
     wg, wu = p["wi_gate"]["w"], p["wi_up"]["w"]
     if compute_dtype is not None:
         wg = wg.astype(compute_dtype)
@@ -163,7 +170,7 @@ def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
                        site="mlp.wi_gate+mlp.wi_up", backend=backend,
                        interpret=interpret, shard=shard)
     return linear(p["wo"], h, compute_dtype, site="mlp.wo",
-                  backend=backend, interpret=interpret)
+                  backend=backend, interpret=interpret, residual=residual)
 
 
 def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
@@ -173,8 +180,9 @@ def gelu_mlp_init(key, d_model, d_ff, dtype=jnp.float32):
 
 
 def gelu_mlp(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
-             interpret=None):
-    """Biased MLP with the gelu fused into the wi GEMM's epilogue."""
+             interpret=None, residual=None):
+    """Biased MLP with the gelu fused into the wi GEMM's epilogue (and
+    the sublayer residual join fused into wo's, when passed)."""
     wi = p["wi"]["w"]
     if compute_dtype is not None:
         wi = wi.astype(compute_dtype)
@@ -182,7 +190,7 @@ def gelu_mlp(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
     h = substrate.gemm(x, wi, bias=p["wi"].get("b"), epilogue="gelu",
                        site="mlp.wi", backend=backend, interpret=interpret)
     return linear(p["wo"], h, compute_dtype, site="mlp.wo",
-                  backend=backend, interpret=interpret)
+                  backend=backend, interpret=interpret, residual=residual)
 
 
 # ---------------------------------------------------------------- loss

@@ -46,11 +46,22 @@ prefill work entirely.
 A quantizing ``cfg.gemm_backend`` is served from a **pre-quantized param
 tree** (``lm.prequantize_params``): weights are quantized once at engine
 construction, so the jit'd steps consume int8 codes directly instead of
-re-running the in-trace quantize (the AF008 path) every step.
+re-running the in-trace quantize (the AF008 path) every step.  A W8A8
+backend (``substrate.backend_act_quantizes``) needs nothing extra staged
+here: activation tiles are data-dependent, so their int8 codes + per-tile
+scales are computed in the kernel prologue on every dispatch — the served
+tree is identical to the weight-only backend's, and greedy streams stay
+bit-identical run-to-run because the quantize is deterministic.
 
 Sampling: greedy or temperature; logits come back fp32 from the model.
 Greedy token streams are bit-identical across prefill modes and across
-batch compositions (per-row cache evolution is independent).
+batch compositions (per-row cache evolution is independent).  Exception:
+a W8A8 backend's per-tile activation scales make tile geometry part of
+the numerics — which tokens/rows share a quantization tile depends on
+prefill chunking and batch composition — so its streams are bit-identical
+run-to-run for a fixed serving configuration, not across prefill modes
+(same rationale as the documented TP2 re-tiling drift; see
+docs/substrate.md W8A8 tolerance policy).
 
 **Resilience** (PR 8 — see docs/resilience.md): every request terminates
 with a typed :class:`~repro.serving.errors.Outcome`, counted in

@@ -104,6 +104,49 @@ def test_jaxpr_audit_int8_prequantized_clean():
     assert findings == [], "\n".join(str(f) for f in findings)
 
 
+def test_jaxpr_audit_w8a8_prequantized_clean():
+    """The W8A8 backend's dynamic activation quantization (in-kernel
+    quantize_tile per tile, batched-QK _quantize of K) is declared via
+    BackendInfo.act_quantize and priced by the Eq.(5') actq term — the
+    auditor must classify it clean, not AF003/AF008."""
+    cfg = dataclasses.replace(reduced(get_config("qwen2-0.5b")),
+                              gemm_backend="arrayflex_w8a8")
+    findings = jaxpr_audit.audit_model(cfg, prequantize=True)
+    assert findings == [], "\n".join(str(f) for f in findings)
+
+
+def test_jaxpr_audit_w8a8_raw_tree_warns_af008_only():
+    """Raw-tree W8A8 stages weight quantization like W8: AF008 warnings
+    only — the activation-quantize casts must not add AF003 errors."""
+    cfg = dataclasses.replace(reduced(get_config("qwen2-0.5b")),
+                              gemm_backend="arrayflex_w8a8")
+    findings = jaxpr_audit.audit_model(cfg)
+    assert not [f for f in findings if f.severity == "error"], \
+        "\n".join(str(f) for f in findings)
+    assert codes(findings) == ["AF008"]
+
+
+def test_jaxpr_audit_w8a8_actq_declaration_is_load_bearing():
+    """The same W8A8 trace audited WITHOUT the act_quantize declaration
+    must flag the in-kernel activation casts as rogue AF003 — proving the
+    classifier keys on the backend's declared capability, not on blanket
+    int8-cast tolerance."""
+    cfg = dataclasses.replace(reduced(get_config("qwen2-0.5b")),
+                              gemm_backend="arrayflex_w8a8")
+    entries = jaxpr_audit._trace_entries(cfg, prequantize=True)
+    substrate.clear_plan_cache()
+    try:
+        closed = entries[0][1]()                    # forward
+        undeclared = jaxpr_audit.audit_closed_jaxpr(
+            closed, quantized=True, act_quantized=False)
+        assert "AF003" in codes(undeclared)
+        declared = jaxpr_audit.audit_closed_jaxpr(
+            closed, quantized=True, act_quantized=True)
+        assert declared == [], "\n".join(str(f) for f in declared)
+    finally:
+        substrate.clear_plan_cache()
+
+
 # ---------------------------------------------------------------------------
 # jaxpr auditor: seeded violations (one per code)
 
@@ -124,6 +167,42 @@ def test_seeded_af002_bf16_psum_on_quantized_path():
     assert codes(found) == ["AF002"]
     # same trace on a non-quantized path, no substrate frames: tolerated
     assert jaxpr_audit.audit_closed_jaxpr(closed, quantized=False) == []
+
+
+def test_seeded_af002_unpriced_psum_boundary():
+    """Sharding-contract leg: a substrate psum staged while NO recorded
+    plan priced a reduce boundary (ShardSig.reduce_ops == 0) trips AF002.
+
+    Seeded through the real dispatch pipeline: a ShardCtx with forced
+    ``reduce_axes`` over a 1-device mesh makes ``_sharded_gemm`` take the
+    psum path while ``signature()`` prices ceil(log2(1)) == 0 reduce ops
+    — exactly the 'combine tree rode free' drift the check exists for
+    (the production sharding rules only set reduce_axes when tp > 1)."""
+    mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1), ("data", "model"))
+    ctx = substrate.ShardCtx(mesh, P(None, "model"), P("model", None),
+                             P(None, None), reduce_axes=("model",))
+    x = jnp.ones((4, 8), jnp.float32)
+    w = jnp.ones((8, 4), jnp.float32)
+    substrate.clear_plan_cache()
+    try:
+        closed = jax.make_jaxpr(
+            lambda a, b: substrate.gemm(a, b, site="mlp.wo", shard=ctx))(x, w)
+        plan = substrate.SITE_PLANS["mlp.wo"]
+        assert plan.shard.reduce_ops == 0          # the seeded mispricing
+        found = jaxpr_audit.check_psum_boundaries(closed, quantized=True)
+        assert found and codes(found) == ["AF002"]
+        assert "reduce_ops" in found[0].message
+        # same trace with the reduce priced somewhere: clean
+        priced = dataclasses.replace(
+            plan, shard=dataclasses.replace(plan.shard, reduce_ops=1))
+        assert jaxpr_audit.check_psum_boundaries(
+            closed, quantized=True, site_plans={"mlp.wo": priced}) == []
+        # the leg only binds quantized backends (fp32 paths keep the
+        # dtype-only AF002 semantics)
+        assert jaxpr_audit.check_psum_boundaries(closed,
+                                                 quantized=False) == []
+    finally:
+        substrate.clear_plan_cache()
 
 
 def test_seeded_af003_rogue_int8_cast():
@@ -181,9 +260,9 @@ def test_kernel_check_clean():
 
 def test_seeded_af005_store_drops_bias():
     def broken_store(y, y2=None, w_scale=None, w2_scale=None, bias=None,
-                     bias2=None, activation="none"):
+                     bias2=None, residual=None, activation="none"):
         return store_phase(y, y2, w_scale, w2_scale, None, bias2,
-                           activation)        # silently ignores bias
+                           activation, residual)  # silently ignores bias
 
     found = kernel_check.check_epilogue_pricing(store_fn=broken_store)
     assert found and codes(found) == ["AF005"]
@@ -192,9 +271,9 @@ def test_seeded_af005_store_drops_bias():
 
 def test_seeded_af005_extra_unpriced_op():
     def gilded_store(y, y2=None, w_scale=None, w2_scale=None, bias=None,
-                     bias2=None, activation="none"):
+                     bias2=None, residual=None, activation="none"):
         out = store_phase(y, y2, w_scale, w2_scale, bias, bias2,
-                          activation)
+                          activation, residual)
         return out * jnp.tanh(out)            # fused but never priced
 
     found = kernel_check.check_epilogue_pricing(store_fn=gilded_store)
