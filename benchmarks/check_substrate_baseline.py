@@ -56,6 +56,16 @@ What is gated (and why these fields):
   preemption, crash-restored streams identical, and the typed outcome
   histograms of every scenario unchanged.
 
+* ``disagg`` section — the disaggregated prefill/decode workload is
+  deterministic structure: disagg streams must stay identical to the
+  colocated engine's, the planner-picked chunks, per-role dispatch
+  counts and K/V handoff bytes must match the baseline exactly, and the
+  analytic ``role_best_k`` table at the pipeline boundary site must
+  match exactly with prefill strictly deeper than decode at every T
+  (the per-role argmin split — ``sharding.pp_transfer_terms`` — is the
+  point of the feature).  The TTFT/makespan numbers are reported but
+  NOT gated (CPU wall time).
+
 The expert-batching wall-time ratio is reported but NOT gated: the CPU
 grid interpreter serializes the batched launch (see substrate_bench), so
 its timing is structural; its launch counts are gated instead.
@@ -257,6 +267,27 @@ def check(current: dict, baseline: dict, tolerance: float):
                     errors.append(
                         f"resilience {field} changed: {rsc[field]} != "
                         f"baseline {rsb[field]}")
+
+    # --- disagg: stream identity, handoff structure, per-role k table ----
+    dgb = baseline.get("disagg")
+    dgc = current.get("disagg")
+    if dgb:
+        if not dgc:
+            errors.append("disagg section missing from current report")
+        else:
+            if not dgc["streams_identical"]:
+                errors.append("disagg/colocated greedy streams diverged")
+            if not dgc["prefill_deeper_than_decode"]:
+                errors.append(
+                    "role pricing no longer splits the boundary argmin: "
+                    "prefill best_k not strictly deeper than decode's at "
+                    f"every T ({dgc['role_best_k']})")
+            for field in ("prefill_chunk", "dispatches",
+                          "kv_transfer_bytes", "role_best_k"):
+                if dgc[field] != dgb[field]:
+                    errors.append(
+                        f"disagg {field} changed: {dgc[field]} != "
+                        f"baseline {dgb[field]}")
     return errors
 
 
@@ -291,6 +322,11 @@ def main(argv=None):
         gd = pg["prefill_gemm_dispatches"]
         i8_note += (f", paged prefill GEMMs {gd['cold']}->{gd['warm']} "
                     f"with prefix reuse")
+    dg = current.get("disagg") or {}
+    if dg:
+        ks = dg["role_best_k"][-1]
+        i8_note += (f", disagg boundary k (T={ks['T']}) prefill "
+                    f"{ks['k_prefill']} vs decode {ks['k_decode']}")
     print(f"substrate baseline check OK: "
           f"moe launches {current['moe_expert_launches']['per_moe_layer_unrolled']}"
           f"->{current['moe_expert_launches']['per_moe_layer_now']}/layer, "

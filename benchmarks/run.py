@@ -45,6 +45,7 @@ def main() -> None:
          out_dir)
     _run("serving_paged_kv", serving_bench.serving_paged_kv, out_dir)
     _run("serving_resilience", serving_bench.serving_resilience, out_dir)
+    _run("serving_disagg", serving_bench.serving_disagg, out_dir)
     _run("substrate_sites", substrate_bench.substrate_sites, out_dir)
     _run("roofline_table", roofline_table.roofline_rows, out_dir)
     _run("dryrun_status", roofline_table.dryrun_status_rows, out_dir)

@@ -8,7 +8,7 @@ Eq.(6)/(7) isomorphism at pod scale.
 from __future__ import annotations
 
 
-from repro.core import cluster_pipeline as cp
+from repro.parallel import pipeline as cp
 from repro.core import simulator, timing
 
 

@@ -46,6 +46,14 @@ logits tolerance, the dispatch structure, and the fp32-vs-w8a8
 ``k_shift_sites`` over the full decode cell — where the Eq.(5')
 activation-quantize boundary term re-picks the collapse depth.
 
+New in the disaggregated substrate: the ``disagg`` section (see
+``serving_bench.disagg_section``) gates colocated-vs-disaggregated
+stream identity on a mixed long-prefill/long-decode workload, the K/V
+handoff bytes, the per-role dispatch counts, and the analytic
+``role_best_k`` table at the pipeline boundary site — where
+``sharding.pp_transfer_terms`` deepens prefill's collapse depth and
+shallows decode's at the same (M, N, T).
+
 CPU wall-times are structural (the Pallas kernel runs in interpret mode);
 the Eq.(6) columns are the hardware-calibrated quantities.
 
@@ -641,6 +649,9 @@ def substrate_report(smoke: bool = False):
     # resilience: seeded chaos matrix + zero-chaos stream identity (also
     # memoized; every gated field is deterministic structure, no wall time)
     _, resilience = serving_bench.resilience_section()
+    # disaggregated prefill/decode: stream identity, K/V handoff bytes,
+    # and the per-role best_k table at the pp boundary site (memoized)
+    _, disagg = serving_bench.disagg_section()
 
     report = {
         "config": {"arch": "qwen2-0.5b (reduced)", "batch": B, "seq": S,
@@ -655,6 +666,7 @@ def substrate_report(smoke: bool = False):
         "w8a8": w8a8,
         "paged": paged,
         "resilience": resilience,
+        "disagg": disagg,
         "equivalence": {"logits_max_abs_diff": max_diff,
                         "reference_fallbacks": 0},
         "plan_cache": plan_cache,
@@ -678,7 +690,9 @@ def substrate_report(smoke: bool = False):
                f"w8a8: {w8a8['quantize_boundary']['int8_int8_dot_generals']}"
                f" int8xint8 dots, {w8a8['k_shift_sites']} k-shift sites, "
                f"eq6 swiglu "
-               f"{w8a8['fused_swiglu']['eq6_speedup_vs_fp32']:.2f}x "
+               f"{w8a8['fused_swiglu']['eq6_speedup_vs_fp32']:.2f}x, "
+               f"disagg streams identical="
+               f"{disagg['streams_identical']} "
                f"-> {OUT_JSON}")
     return site_rows, derived
 

@@ -12,7 +12,7 @@ import subprocess
 import sys
 import textwrap
 
-from repro.core import cluster_pipeline as cp
+from repro.parallel import pipeline as cp
 
 
 def main():

@@ -15,6 +15,13 @@ jaxprs).  Checks:
   collapsed-block boundary the plan actually priced — some recorded
   ``substrate.SITE_PLANS`` entry carries ``ShardSig.reduce_ops > 0``, so
   the combine tree entered the Eq.(5') argmin rather than riding free;
+  *and* (the pipeline-transfer leg, :func:`check_stage_boundaries`)
+  every stage-boundary ``collective_permute`` staged by
+  ``parallel.pipeline.staged_step`` must correspond to a recorded plan
+  that priced the pod->pod transfer (``ShardSig.transfer_ops`` or
+  ``transfer_cycles`` non-zero somewhere) — a pipeline hop whose cost
+  never entered the argmin means the roles' collapse depths were chosen
+  as if the ICI were free;
 * **AF003/AF008** ``convert_element_type`` to int8 on a weight-shaped
   (ndim >= 2) operand inside the trace: through
   ``substrate.quantize_weight`` it is the *known* staged-quantization of
@@ -221,6 +228,46 @@ def check_psum_boundaries(closed, *, quantized: bool = False,
     return findings
 
 
+def check_stage_boundaries(closed, *, site_plans=None,
+                           label: str = "trace") -> List[Finding]:
+    """AF002, pipeline-transfer leg: a stage-boundary
+    ``collective_permute`` must be priced by some recorded plan.
+
+    ``parallel.pipeline.staged_step`` moves the (rows, d_model)
+    activation pod->pod once per tick; that hop is priced into the
+    boundary site's plan by ``sharding.use_pp_pricing`` (prefill: Eq.(5')
+    boundary ops; decode: Eq.(6'') serialized ingress cycles).  A
+    ``ppermute`` staged from ``staged_step`` while *no* recorded
+    ``substrate.SITE_PLANS`` entry carries ``ShardSig.transfer_ops > 0``
+    or ``transfer_cycles > 0`` means the pipeline ran without a role
+    pricing scope — the collapse depths were chosen as if the ICI
+    transfer were free.  Never fires on the colocated paths (no
+    ppermute) or on a correctly-scoped role trace (the
+    ``PP_BOUNDARY_SITE`` plan prices the hop)."""
+    plans = substrate.SITE_PLANS if site_plans is None else site_plans
+    priced = any(p.shard.transfer_ops > 0 or p.shard.transfer_cycles > 0
+                 for p in plans.values())
+    findings: List[Finding] = []
+    for eqn in iter_eqns(closed.jaxpr):
+        if eqn.primitive.name != "ppermute":
+            continue
+        frames = _frames(eqn)
+        ours = any(fn == "staged_step" and contract.repro_rel(f) is not None
+                   for f, fn in frames)
+        if not ours or priced:
+            continue
+        _, where = contract.classify_frames(frames)
+        findings.append(Finding(
+            "AF002", f"{label} @ {where}",
+            "stage-boundary collective_permute staged by "
+            "parallel.pipeline.staged_step but no recorded site plan "
+            "priced the transfer (ShardSig.transfer_ops == "
+            "transfer_cycles == 0 everywhere) — the pipeline hop never "
+            "entered the Eq.(5')/(6'') argmin (missing "
+            "sharding.use_pp_pricing role scope)", pass_name="jaxpr"))
+    return findings
+
+
 def check_recorded_sites(cfg: Optional[ModelConfig] = None,
                          label: str = "trace",
                          counts=None) -> List[Finding]:
@@ -319,6 +366,54 @@ def audit_model(cfg: ModelConfig, label: str = "", *,
                                            label=cell))
         findings.extend(check_psum_boundaries(closed, quantized=quantized,
                                               label=cell))
+        findings.extend(check_recorded_sites(cfg, label=cell))
+    substrate.clear_plan_cache()
+    return findings
+
+
+def audit_pipeline(cfg: ModelConfig, label: str = "") -> List[Finding]:
+    """Jaxpr audit over the pipeline-sharded entry points
+    (``lm.decode_step_pp`` / ``lm.prefill_step_pp``): every colocated
+    check plus :func:`check_stage_boundaries`.
+
+    ``cfg`` must satisfy ``lm.supports_pipeline`` (pp_stages > 1, a
+    (pp, data, model) mesh_shape) and the host must have the mesh's
+    devices — role configs from the disaggregated engine qualify.  The
+    serving tree is audited (pre-quantized on a quantizing backend), so
+    a clean cell is also AF008-free."""
+    label = label or (f"{cfg.name}/{cfg.gemm_backend}/"
+                      f"{cfg.pp_role or 'unscoped'}-pp{cfg.pp_stages}")
+    quantized = substrate.backend_quantizes(cfg.gemm_backend)
+    act_quantized = substrate.backend_act_quantizes(cfg.gemm_backend)
+    B, S = 2, 8
+    params = lm.init_params(cfg, jax.random.PRNGKey(0))
+    if quantized:
+        params = lm.prequantize_params(cfg, params)
+    cache = lm.init_cache(cfg, B, S)
+    token = jnp.zeros((B,), jnp.int32)
+    pos = jnp.int32(1)
+    ptoks = jnp.zeros((B, 4), jnp.int32)
+    ppos = jnp.zeros((B,), jnp.int32)
+    lens = jnp.full((B,), 4, jnp.int32)
+    entries = [
+        ("decode_step_pp", lambda: jax.make_jaxpr(
+            lambda p, c, t, q: lm.decode_step_pp(cfg, p, c, t, q))(
+                params, cache, token, pos)),
+        ("prefill_step_pp", lambda: jax.make_jaxpr(
+            lambda p, c, t, q, n: lm.prefill_step_pp(cfg, p, c, t, q, n))(
+                params, cache, ptoks, ppos, lens)),
+    ]
+    findings: List[Finding] = []
+    for entry, thunk in entries:
+        substrate.clear_plan_cache()     # fresh site log per entry
+        closed = thunk()
+        cell = f"{label}/{entry}"
+        findings.extend(audit_closed_jaxpr(closed, quantized=quantized,
+                                           act_quantized=act_quantized,
+                                           label=cell))
+        findings.extend(check_psum_boundaries(closed, quantized=quantized,
+                                              label=cell))
+        findings.extend(check_stage_boundaries(closed, label=cell))
         findings.extend(check_recorded_sites(cfg, label=cell))
     substrate.clear_plan_cache()
     return findings

@@ -4,15 +4,18 @@ Two static checks, no kernel execution:
 
 * **AF005, epilogue pricing** — ``arrayflex_gemm.store_phase`` is the
   single definition of the carry-propagate boundary math (both Pallas
-  kernels call it on their accumulator refs).  For every valid
-  ``Epilogue`` spec x quantization, trace it with ``jax.make_jaxpr`` and
-  *count the boundary vector ops actually staged* (bias adds, gate
-  multiply, dequant multiplies, activation) by tracking operand
-  provenance through the jaxpr.  The count must equal what the Eq.(5')
-  timing term prices: ``Epilogue.ops`` plus ``Epilogue.contractions``
-  dequant multiplies on a quantizing backend (the ``dequant_ops`` term of
-  ``_plan_gemm_cached``).  A fused op added to the kernel store without
-  repricing — or priced without being executed — fails here.
+  kernels call it on their accumulator refs), and
+  ``arrayflex_gemm.prologue_phase`` of the pre-contraction boundary (the
+  fused rmsnorm scale).  For every valid ``Epilogue`` spec x
+  quantization, trace both with ``jax.make_jaxpr`` and *count the
+  boundary vector ops actually staged* (bias adds, gate multiply,
+  dequant multiplies, activation, prologue scale multiply) by tracking
+  operand provenance through the jaxpr.  The count must equal what the
+  Eq.(5') timing term prices: ``Epilogue.ops`` plus
+  ``Epilogue.contractions`` dequant multiplies on a quantizing backend
+  (the ``dequant_ops`` term of ``_plan_gemm_cached``).  A fused op added
+  to the kernel boundary without repricing — or priced without being
+  executed — fails here.
 
 * **AF006, plan-key completeness** — every ``GemmCall``/``BackendInfo``
   field must be covered by the ``_plan_gemm_cached`` key or declared
@@ -35,7 +38,7 @@ import jax.numpy as jnp
 
 from repro.analysis.findings import Finding
 from repro.kernels import substrate
-from repro.kernels.arrayflex_gemm import store_phase
+from repro.kernels.arrayflex_gemm import prologue_phase, store_phase
 
 _NONLINEAR = frozenset({"logistic", "tanh", "erf", "exp", "rsqrt", "cbrt"})
 _CALL_JAXPR_KEYS = ("call_jaxpr", "jaxpr")
@@ -51,12 +54,14 @@ class _OpCount:
         self.gate_muls = 0
         self.dequant_muls = 0
         self.residual_adds = 0
+        self.scale_muls = 0
         self.nonlinear = False
 
     @property
     def total(self) -> int:
         return (self.bias_adds + self.bias2_adds + self.gate_muls
-                + self.residual_adds + int(self.nonlinear))
+                + self.residual_adds + self.scale_muls
+                + int(self.nonlinear))
 
 
 def _prov_of(prov, atom):
@@ -95,7 +100,9 @@ def _walk_count(jaxpr, prov, count: _OpCount) -> None:
             elif any(s == {"residual"} for s in sources):
                 count.residual_adds += 1
         elif name == "mul":
-            if any(s in ({"w_scale"}, {"w2_scale"}) for s in sources):
+            if any(s == {"norm_scale"} for s in sources):
+                count.scale_muls += 1
+            elif any(s in ({"w_scale"}, {"w2_scale"}) for s in sources):
                 count.dequant_muls += 1
             elif (any("y2" in s for s in sources)
                   and any("y2" not in s and "y" in s for s in sources)):
@@ -107,9 +114,11 @@ def _walk_count(jaxpr, prov, count: _OpCount) -> None:
 
 
 def _count_store_ops(store_fn: Callable, ep: substrate.Epilogue,
-                     quant: bool, n: int = 8) -> _OpCount:
-    """Trace ``store_fn`` on resolved-accumulator avals for ``ep`` and
-    count the boundary ops it stages."""
+                     quant: bool, n: int = 8,
+                     prologue_fn: Callable = prologue_phase) -> _OpCount:
+    """Trace ``store_fn`` (and, when the spec fuses the rmsnorm scale,
+    ``prologue_fn``) on resolved-accumulator avals for ``ep`` and count
+    the boundary ops they stage."""
     row = jnp.zeros((1, n), jnp.float32)
     vec = jnp.zeros((n,), jnp.float32)
     operands = {"y": row}
@@ -133,6 +142,13 @@ def _count_store_ops(store_fn: Callable, ep: substrate.Epilogue,
             for v, nm in zip(closed.jaxpr.invars, names)}
     count = _OpCount()
     _walk_count(closed.jaxpr, prov, count)
+    if ep.norm_scale:
+        # the scale multiply rides the step prologue, not the store —
+        # trace it separately and fold its op count in
+        pro = jax.make_jaxpr(prologue_fn)(row, vec)
+        prov_p = {v: frozenset({nm})
+                  for v, nm in zip(pro.jaxpr.invars, ("x", "norm_scale"))}
+        _walk_count(pro.jaxpr, prov_p, count)
     return count
 
 
@@ -142,8 +158,10 @@ def _valid_epilogues():
         for bias in (False, True):
             for bias2 in ((False, True) if dual else (False,)):
                 for residual in (False, True):
-                    yield substrate.Epilogue(kind=kind, bias=bias,
-                                             bias2=bias2, residual=residual)
+                    for norm_scale in (False, True):
+                        yield substrate.Epilogue(
+                            kind=kind, bias=bias, bias2=bias2,
+                            residual=residual, norm_scale=norm_scale)
 
 
 def check_epilogue_pricing(
@@ -169,11 +187,12 @@ def check_epilogue_pricing(
                     "AF005",
                     f"store_phase[kind={ep.kind}, bias={ep.bias}, "
                     f"bias2={ep.bias2}, residual={ep.residual}, "
-                    f"quant={quant}]",
-                    f"kernel store stages {measured} boundary op(s) "
+                    f"norm_scale={ep.norm_scale}, quant={quant}]",
+                    f"kernel boundary stages {measured} op(s) "
                     f"(bias={count.bias_adds}+{count.bias2_adds}, "
                     f"gate={count.gate_muls}, dequant={count.dequant_muls}, "
                     f"residual={count.residual_adds}, "
+                    f"scale={count.scale_muls}, "
                     f"act={int(count.nonlinear)}) but the Eq.(5') pricing "
                     f"charges {priced}", pass_name="kernel"))
     return findings

@@ -123,6 +123,23 @@ class ModelConfig:
     # "auto" shards dispatch whenever mesh_shape declares a mesh; "none"
     # keeps replicated dispatch (the planner then sees logical shapes).
     gemm_sharding: str = "auto"
+    # --- disaggregated pod roles / pipeline sharding ----------------------
+    # A 3-axis mesh_shape (pod, data, model) pipelines layers over the
+    # 'pod' axis with GPipe collective_permute stages
+    # (parallel.pipeline).  pp_role tags which serving phase this config
+    # plans for — "" (colocated), "prefill" (compute-bound: the
+    # stage-boundary send prices as an Eq.(5') boundary op, pushing
+    # best_k DEEPER), or "decode" (latency-bound: the stage ingress
+    # serializes as Eq.(6'') transfer cycles, pushing best_k SHALLOWER).
+    # The role is part of the plan-cache key via the shard signature, so
+    # prefill pods and decode pods legitimately hold different plans for
+    # the same GEMM shape.
+    pp_role: str = ""
+    # Pipeline stages over the 'pod' axis; 0/1 disables pipelining.
+    pp_stages: int = 0
+    # First device index of this role's pod window — a disaggregated
+    # engine places prefill pods at [0, P) and decode pods at [P, P+D).
+    pod_offset: int = 0
 
     # ------------------------------------------------------------------
     @property

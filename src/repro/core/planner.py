@@ -39,6 +39,15 @@ class GEMM:
     # boundary and fused contraction count (2 = dual-GEMM swiglu)
     epilogue_ops: int = 0
     contractions: int = 1
+    # pipeline-stage transfer pricing (disaggregated pod roles):
+    # ``transfer_ops`` boundary send ops join the Eq.(5') per-step period
+    # (a compute-bound prefill stage — pushes best_k DEEPER);
+    # ``transfer_cycles`` serialize in front of the schedule at the
+    # k-collapsed period (Eq. 6'', a latency-bound decode stage's ingress
+    # — pushes best_k SHALLOWER).  model_gemms decorates the pipeline
+    # boundary site with these from the config's pp role.
+    transfer_ops: int = 0
+    transfer_cycles: int = 0
 
 
 @dataclass
@@ -59,19 +68,26 @@ class LayerPlan:
 def plan_gemm(g: GEMM, R: int, C: int,
               tp: TimingParams = DEFAULT_TIMING,
               actq_ops: int = 0) -> LayerPlan:
-    k = timing.best_k(g.M, g.N, g.T, R, C, tp, epilogue_ops=g.epilogue_ops,
-                      actq_ops=actq_ops)
+    # transfer_ops price exactly like boundary epilogue ops (the same
+    # Eq.(5') slot the substrate's shard.transfer_ops joins), and
+    # transfer_cycles thread to the Eq.(6'') extra-cycles term — the
+    # analytic table and the shard-keyed plan cache price identically.
+    e = g.epilogue_ops + g.transfer_ops
+    k = timing.best_k(g.M, g.N, g.T, R, C, tp, epilogue_ops=e,
+                      actq_ops=actq_ops, extra_cycles=g.transfer_cycles)
     return LayerPlan(
         gemm=g, k=k, k_hat=timing.k_hat(R, C, g.T, tp),
         cycles=g.contractions * timing.total_cycles(g.M, g.N, g.T, R, C, k),
-        clock_ghz=tp.clock_ghz(k, g.epilogue_ops, actq_ops),
+        clock_ghz=tp.clock_ghz(k, e, actq_ops),
         t_abs_ps=timing.t_abs_ps(g.M, g.N, g.T, R, C, k, tp,
-                                 epilogue_ops=g.epilogue_ops,
+                                 epilogue_ops=e,
                                  contractions=g.contractions,
-                                 actq_ops=actq_ops) * g.count,
+                                 actq_ops=actq_ops,
+                                 extra_cycles=g.transfer_cycles) * g.count,
         t_conventional_ps=timing.t_abs_conventional_ps(
             g.M, g.N, g.T, R, C, tp, contractions=g.contractions,
-            epilogue_ops=g.epilogue_ops, actq_ops=actq_ops) * g.count,
+            epilogue_ops=e, actq_ops=actq_ops,
+            extra_cycles=g.transfer_cycles) * g.count,
     )
 
 
@@ -205,10 +221,13 @@ def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
         if cfg.is_cross_attn_layer(i) or cfg.family == "audio":
             n_cross += 1
     if n_attn:
+        # the qkv projections carry the fused rmsnorm scale (ln1 rides the
+        # kernel's step prologue — see nn/layers.rmsnorm_normalize): one
+        # Eq.(5') boundary op each
         out += [
-            GEMM("attn.wq", H * hd, d, toks, n_attn),
-            GEMM("attn.wk", KV * hd, d, toks, n_attn),
-            GEMM("attn.wv", KV * hd, d, toks, n_attn),
+            GEMM("attn.wq", H * hd, d, toks, n_attn, epilogue_ops=1),
+            GEMM("attn.wk", KV * hd, d, toks, n_attn, epilogue_ops=1),
+            GEMM("attn.wv", KV * hd, d, toks, n_attn, epilogue_ops=1),
             GEMM("attn.wo", d, H * hd, toks, n_attn),
             # scores & PV: per (batch, head): A[T=S_q, N=hd] x B[hd, S_kv]
             GEMM("attn.qk", S_ctx, hd,
@@ -231,12 +250,13 @@ def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
     if n_dense:
         # the wi pair executes as ONE fused dual-GEMM swiglu launch (see
         # nn/layers.swiglu): each entry carries the Eq.(5') epilogue term
-        # (silu + gate = 2 boundary ops) so per-entry t_abs sums to exactly
-        # the fused plan's contractions=2 prediction and best_k matches the
-        # substrate's plan_collapse(..., epilogue_ops=2) pick
+        # (silu + gate + the fused ln2 rmsnorm scale = 3 boundary ops) so
+        # per-entry t_abs sums to exactly the fused plan's contractions=2
+        # prediction and best_k matches the substrate's
+        # plan_collapse(..., epilogue_ops=3) pick
         out += [
-            GEMM("mlp.wi_gate", cfg.d_ff, d, toks, n_dense, epilogue_ops=2),
-            GEMM("mlp.wi_up", cfg.d_ff, d, toks, n_dense, epilogue_ops=2),
+            GEMM("mlp.wi_gate", cfg.d_ff, d, toks, n_dense, epilogue_ops=3),
+            GEMM("mlp.wi_up", cfg.d_ff, d, toks, n_dense, epilogue_ops=3),
             GEMM("mlp.wo", d, cfg.d_ff, toks, n_dense),
         ]
     if n_moe and cfg.moe:
@@ -263,11 +283,33 @@ def model_gemms(cfg: ModelConfig, shape: ShapeConfig) -> List[GEMM]:
                     shape.global_batch if shape.kind == "decode"
                     else shape.tokens, 1))
     ms = tuple(getattr(cfg, "mesh_shape", ()) or ())
-    if (len(ms) == 2 and (ms[0] > 1 or ms[1] > 1)
-            and getattr(cfg, "gemm_sharding", "auto") != "none"):
+    sharding_on = getattr(cfg, "gemm_sharding", "auto") != "none"
+    if len(ms) == 2 and (ms[0] > 1 or ms[1] > 1) and sharding_on:
         E = cfg.moe.num_experts if cfg.moe else 0
         out = [_postshard(g, ms[0], ms[1], E, shape.global_batch * KV)
                for g in out]
+    elif len(ms) == 3 and sharding_on:
+        # (pod, data, model) role mesh: the intra-role (data, model)
+        # partition applies as above, then the pipeline boundary site is
+        # decorated with the role's stage-transfer terms — the
+        # post-partition per-stage view a disaggregated pod actually plans
+        pp, dp, tp_ = ms
+        if dp > 1 or tp_ > 1:
+            E = cfg.moe.num_experts if cfg.moe else 0
+            out = [_postshard(g, dp, tp_, E, shape.global_batch * KV)
+                   for g in out]
+        role = getattr(cfg, "pp_role", "")
+        if pp > 1 and role:
+            from repro.parallel.sharding import (PP_BOUNDARY_SITE,
+                                                 pp_transfer_terms)
+            decorated = []
+            for g in out:
+                if g.name == PP_BOUNDARY_SITE:
+                    t_ops, t_cyc = pp_transfer_terms(role, pp, g.T, g.N)
+                    g = dataclasses.replace(g, transfer_ops=t_ops,
+                                            transfer_cycles=t_cyc)
+                decorated.append(g)
+            out = decorated
     return out
 
 

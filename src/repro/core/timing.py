@@ -208,16 +208,22 @@ def total_cycles_conventional(M: int, N: int, T: int, R: int, C: int) -> int:
 def t_abs_ps(M: int, N: int, T: int, R: int, C: int, k: int,
              params: TimingParams = DEFAULT_TIMING,
              epilogue_ops: int = 0, contractions: int = 1,
-             actq_ops: int = 0) -> float:
-    """Eq.(6'): absolute execution time (ps) on a k-collapsed ArrayFlex.
+             actq_ops: int = 0, extra_cycles: int = 0) -> float:
+    """Eq.(6''): absolute execution time (ps) on a k-collapsed ArrayFlex.
 
     ``epilogue_ops`` prices fused post-GEMM work into the per-step period
     (Eq. 5'); ``actq_ops`` prices the dynamic activation-quantize boundary
     stages of a W8A8 datapath; ``contractions`` > 1 streams that many
     weight matrices through the same collapsed schedule (the dual-GEMM
-    swiglu epilogue).
+    swiglu epilogue).  ``extra_cycles`` serializes additional array
+    cycles in front of the schedule — the ICI ingress of a
+    pipeline-stage activation transfer, clocked at the array's period.
+    It multiplies the k-dependent period but not the k-dependent cycle
+    count, so unlike the boundary-op terms it pushes the Eq.(6) argmin
+    toward SHALLOWER collapse (a k-collapsed array pays the transfer at
+    its slower clock).
     """
-    return (contractions * total_cycles(M, N, T, R, C, k)
+    return ((contractions * total_cycles(M, N, T, R, C, k) + extra_cycles)
             * params.clock_period_ps(k, epilogue_ops, actq_ops))
 
 
@@ -225,15 +231,19 @@ def t_abs_conventional_ps(M: int, N: int, T: int, R: int, C: int,
                           params: TimingParams = DEFAULT_TIMING,
                           contractions: int = 1,
                           epilogue_ops: int = 0,
-                          actq_ops: int = 0) -> float:
+                          actq_ops: int = 0,
+                          extra_cycles: int = 0) -> float:
     """Fixed-pipeline SA at its (higher) max clock, with the SAME fused
-    epilogue datapath (``epilogue_ops`` boundary ops on the period) and
-    the SAME activation-quantize stages (``actq_ops``).  Pricing both
-    into both machines keeps the *saving* a measure of the
-    transparent-pipelining technique alone — otherwise every fused GEMM
-    would be charged the epilogue against an epilogue-free baseline that
-    must run it as an (uncosted) post-pass anyway."""
-    return (contractions * total_cycles_conventional(M, N, T, R, C)
+    epilogue datapath (``epilogue_ops`` boundary ops on the period), the
+    SAME activation-quantize stages (``actq_ops``), and the SAME
+    serialized transfer cycles (``extra_cycles`` — a fixed pipeline must
+    ship stage activations too).  Pricing all three into both machines
+    keeps the *saving* a measure of the transparent-pipelining technique
+    alone — otherwise every fused GEMM would be charged the epilogue
+    against an epilogue-free baseline that must run it as an (uncosted)
+    post-pass anyway."""
+    return ((contractions * total_cycles_conventional(M, N, T, R, C)
+             + extra_cycles)
             * (params.conventional_period_ps
                + epilogue_ops * params.d_epilogue_ps
                + actq_ops * params.d_actq_ps))
@@ -248,13 +258,18 @@ def k_hat(R: int, C: int, T: int,
 
 def best_k(M: int, N: int, T: int, R: int, C: int,
            params: TimingParams = DEFAULT_TIMING,
-           epilogue_ops: int = 0, actq_ops: int = 0) -> int:
-    """Discrete argmin of Eq.(6') over the supported collapse depths.
+           epilogue_ops: int = 0, actq_ops: int = 0,
+           extra_cycles: int = 0) -> int:
+    """Discrete argmin of Eq.(6'') over the supported collapse depths.
 
     The epilogue and activation-quantize terms are additive on the
     period, so they never change the ordering *between* two depths with
     equal cycle counts but can tip the argmin toward deeper collapse
-    (fewer boundary crossings amortize the fixed boundary cost better)."""
+    (fewer boundary crossings amortize the fixed boundary cost better).
+    ``extra_cycles`` (serialized stage-transfer ingress) works the other
+    way: every extra cycle is paid at the k-collapsed period, so a
+    transfer-heavy GEMM tips toward shallower collapse."""
     return min(params.supported_k,
                key=lambda k: t_abs_ps(M, N, T, R, C, k, params,
-                                      epilogue_ops, actq_ops=actq_ops))
+                                      epilogue_ops, actq_ops=actq_ops,
+                                      extra_cycles=extra_cycles))

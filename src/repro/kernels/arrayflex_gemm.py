@@ -100,6 +100,31 @@ def apply_epilogue(y, y2=None, bias=None, bias2=None, activation="none"):
     return out
 
 
+def prologue_phase(x, norm_scale):
+    """The grid step's *prologue* boundary math — the rmsnorm elementwise
+    scale fused in front of the contraction: multiply the activation tile
+    by the per-input-channel ``g`` in fp32 and cast back to the operand
+    dtype.
+
+    This is the SINGLE definition of the fused norm-scale (the kernels
+    inline it on each x tile, the unfused backends apply it to the whole
+    x, and ``analysis.kernel_check`` traces it to count the boundary op
+    against ``Epilogue.ops``).  Because ``nn.layers.rmsnorm_normalize``
+    hands the substrate an already-cast normalized x, every backend
+    computes the identical ``(x_f32 * g) -> cast`` expression and fused
+    vs unfused outputs agree bit for bit.
+
+    Unlike the store-boundary ops, the scale is per-*input*-channel — it
+    cannot commute past the K sum to the carry-propagate store, which is
+    why it rides the step prologue (the same slot the W8A8 activation
+    quantizer occupies) rather than ``store_phase``.
+    """
+    if norm_scale is None:
+        return x
+    return (x.astype(jnp.float32)
+            * norm_scale.astype(jnp.float32)).astype(x.dtype)
+
+
 def quantize_tile(x, eps: float = 1e-12):
     """Dynamic symmetric per-tile activation quantization: the W8A8 grid
     step's prologue stage, and the SINGLE definition of the quantizer
@@ -151,11 +176,15 @@ def store_phase(y, y2=None, w_scale=None, w2_scale=None, bias=None,
 
 def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
             dual: bool, quant: bool, act_quant: bool, has_b: bool,
-            has_b2: bool, has_r: bool):
-    """refs = x, w, [w2], [scale], [scale2], [b], [b2], [r], o, acc, [acc2]
-    (inputs, outputs, scratch — in pallas_call order).  ``has_r``: an
-    (M, N) residual stream tiled like the output joins at the store,
-    after the activation/gate.
+            has_b2: bool, has_r: bool, has_g: bool):
+    """refs = x, w, [w2], [scale], [scale2], [b], [b2], [r], [g], o, acc,
+    [acc2] (inputs, outputs, scratch — in pallas_call order).  ``has_r``:
+    an (M, N) residual stream tiled like the output joins at the store,
+    after the activation/gate.  ``has_g``: a (K,) rmsnorm scale, tiled
+    with x's K axis, multiplies this step's x tile in the prologue
+    (:func:`prologue_phase`) before the contraction — and before the
+    W8A8 quantizer, so the quantizer sees the same values the unfused
+    path would hand it.
 
     ``quant``: w (and w2) hold int8 codes with per-output-channel fp32
     scales; the contraction accumulates the raw codes and the dequant
@@ -183,6 +212,8 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
     i += has_b2
     r_ref = refs[i] if has_r else None
     i += has_r
+    g_ref = refs[i] if has_g else None
+    i += has_g
     o_ref = refs[i]
     acc_ref = refs[i + 1]
     acc2_ref = refs[i + 2] if dual else None
@@ -194,6 +225,8 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
             acc2_ref[...] = jnp.zeros_like(acc2_ref)
 
     x = x_ref[...]                     # (bm, bk * k)
+    if has_g:                          # prologue: fused rmsnorm scale on
+        x = prologue_phase(x, g_ref[...])   # this step's K slice
     w = w_ref[...]                     # (bk * k, bn)
     w2 = w2_ref[...] if dual else None
     if quant and not act_quant:        # int8 codes ride the MXU in x's dtype
@@ -256,7 +289,7 @@ def _kernel(*refs, k_collapse: int, n_steps: int, activation: str,
 
 def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
                    w_scale=None, w2_scale=None, act_quant: bool = False,
-                   residual=None,
+                   residual=None, norm_scale=None,
                    activation: str = "none", bm: int = 128, bn: int = 128,
                    bk: int = 128, k_collapse: int = 1, out_dtype=None,
                    interpret=None):
@@ -269,6 +302,13 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     residual join into the store: it is tiled exactly like the output,
     cast to fp32, and added after the activation/gate — one more Eq.(5')
     boundary op, no separate HBM round-trip for the add.
+
+    ``norm_scale`` (a (K,) vector) fuses the rmsnorm elementwise scale
+    into each grid step's *prologue* (:func:`prologue_phase`): the step's
+    x tile is multiplied by its K-slice of ``g`` in fp32 and cast back
+    before the contraction (and before the W8A8 quantizer) — the
+    pre-attention norm's scale pass stops being a separate elementwise
+    kernel on the decode hot path.  One more priced Eq.(5') boundary op.
 
     ``w2`` (same shape as ``w``) enables the dual-contraction gated form —
     with ``activation="silu"`` this is the one-kernel swiglu.  ``bias`` /
@@ -334,6 +374,9 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     if residual is not None and residual.shape != (M, N):
         raise ValueError(
             f"residual must be ({M}, {N}), got {residual.shape}")
+    if norm_scale is not None and norm_scale.shape != (K,):
+        raise ValueError(
+            f"norm_scale must be ({K},), got {norm_scale.shape}")
     out_dtype = out_dtype or x.dtype
     if M == 0 or N == 0 or K == 0:      # empty operand: epilogue of zeros
         zero = jnp.zeros((M, N), jnp.float32)
@@ -360,14 +403,17 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
         w = jnp.pad(w, ((0, K_pad - K), (0, 0)))
         if dual:
             w2 = jnp.pad(w2, ((0, K_pad - K), (0, 0)))
-    grid = (M // bm, N // bn, n_steps)
+        if norm_scale is not None:      # padded x columns are zero, so the
+            norm_scale = jnp.pad(norm_scale, (0, K_pad - K))   # pad value
+    grid = (M // bm, N // bn, n_steps)  # is inert (0 * 0 == 0)
     interpret = resolve_interpret(interpret)
     kernel = functools.partial(_kernel, k_collapse=k_collapse,
                                n_steps=n_steps, activation=activation,
                                dual=dual, quant=quant, act_quant=act_quant,
                                has_b=bias is not None,
                                has_b2=bias2 is not None,
-                               has_r=residual is not None)
+                               has_r=residual is not None,
+                               has_g=norm_scale is not None)
     operands = [x, w]
     in_specs = [
         pl.BlockSpec((bm, kk), lambda i, j, s: (i, s)),
@@ -383,6 +429,9 @@ def arrayflex_gemm(x, w, *, w2=None, bias=None, bias2=None,
     if residual is not None:            # output-tiled: one (bm, bn) block
         operands.append(residual)
         in_specs.append(pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)))
+    if norm_scale is not None:          # K-tiled: this step's (kk,) slice
+        operands.append(norm_scale.reshape(1, K_pad))
+        in_specs.append(pl.BlockSpec((1, kk), lambda i, j, s: (0, s)))
     scratch = [pltpu.VMEM((bm, bn), jnp.float32)]
     if dual:
         scratch.append(pltpu.VMEM((bm, bn), jnp.float32))

@@ -38,7 +38,7 @@ SA_C = 128
 @functools.lru_cache(maxsize=None)
 def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4,
                   epilogue_ops: int = 0, precision: str = "fp32",
-                  actq_ops: int = 0) -> int:
+                  actq_ops: int = 0, transfer_cycles: int = 0) -> int:
     """ArrayFlex pipeline depth for GEMM X[T,K] @ W[K,M] (Eq. 7 -> discrete).
 
     K is the contraction (the SA's R-tiled dim), M the output columns.
@@ -50,21 +50,28 @@ def plan_collapse(M: int, K: int, T_rows: int, *, max_k: int = 4,
     ``actq_ops`` prices the W8A8 dynamic activation-quantize boundary
     stage (Eq. 5' ``d_actq_ps``); on the w8a8 datapath this term alone
     can deepen the argmin — e.g. (896, 4864, 512) picks k=2 unpriced and
-    k=4 with the quantizer priced.
+    k=4 with the quantizer priced.  ``transfer_cycles`` serializes a
+    pipeline-stage activation transfer (ICI ingress at C lanes/cycle) in
+    front of the schedule — paid at the k-collapsed period (Eq. 6''), it
+    pushes the argmin SHALLOWER, which is how a latency-bound decode
+    stage legitimately plans a shallower k than a compute-bound prefill
+    stage at the same (M, K, T).
     """
     k = timing.best_k(M, K, T_rows, SA_R, SA_C,
                       timing.timing_for(precision),
-                      epilogue_ops=epilogue_ops, actq_ops=actq_ops)
+                      epilogue_ops=epilogue_ops, actq_ops=actq_ops,
+                      extra_cycles=transfer_cycles)
     return max(1, min(max_k, k))
 
 
 @functools.partial(jax.jit,
                    static_argnames=("activation", "has_w2", "has_b",
                                     "has_b2", "has_s", "has_s2", "has_r",
-                                    "act_quant", "k_collapse", "bk",
-                                    "out_dtype", "interpret"))
-def _gemm(x, w, w2, bias, bias2, w_scale, w2_scale, residual, activation,
-          has_w2, has_b, has_b2, has_s, has_s2, has_r, act_quant: bool,
+                                    "has_g", "act_quant", "k_collapse",
+                                    "bk", "out_dtype", "interpret"))
+def _gemm(x, w, w2, bias, bias2, w_scale, w2_scale, residual, norm_scale,
+          activation, has_w2, has_b, has_b2, has_s, has_s2, has_r,
+          has_g, act_quant: bool,
           k_collapse: int, bk: int, out_dtype, interpret: bool):
     return arrayflex_gemm(x, w,
                           w2=w2 if has_w2 else None,
@@ -73,6 +80,7 @@ def _gemm(x, w, w2, bias, bias2, w_scale, w2_scale, residual, activation,
                           w_scale=w_scale if has_s else None,
                           w2_scale=w2_scale if has_s2 else None,
                           residual=residual if has_r else None,
+                          norm_scale=norm_scale if has_g else None,
                           act_quant=act_quant,
                           activation=activation, bk=bk,
                           k_collapse=k_collapse, out_dtype=out_dtype,
@@ -97,12 +105,16 @@ def _round_up(x: int, m: int) -> int:
 
 def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
                      w_scale=None, w2_scale=None, act_quant: bool = False,
-                     residual=None,
+                     residual=None, norm_scale=None,
                      activation: str = "none", k_collapse: int = 0,
                      bk: int = 128, out_dtype=None, interpret=None):
     """Planner-configured GEMM with fused epilogue.  x: (..., K), w: (K, N).
 
-        out = [residual +] act(x@w [+ bias]) [* (x@w2 [+ bias2])]
+        out = [residual +] act((g*x)@w [+ bias]) [* ((g*x)@w2 [+ bias2])]
+
+    ``norm_scale`` (``g``, a (K,) vector) fuses the rmsnorm elementwise
+    scale into the kernel's step prologue — one more priced boundary op,
+    no separate scale pass before the GEMM.
 
     ``residual`` is an output-shaped ``(..., N)`` stream joined after the
     activation/gate at the carry-propagate store (one more priced
@@ -149,7 +161,7 @@ def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
         # are boundary ops too
         n_ops = ((activation != "none") + (bias is not None)
                  + (bias2 is not None) + (w2 is not None)
-                 + (residual is not None)
+                 + (residual is not None) + (norm_scale is not None)
                  + quant * (1 + (w2 is not None)))
         precision = ("w8a8" if act_quant else "int8") if quant else "fp32"
         k_collapse = plan_collapse(N, K, M_rows, epilogue_ops=n_ops,
@@ -185,9 +197,11 @@ def arrayflex_matmul(x, w, *, w2=None, bias=None, bias2=None,
                 w_scale if w_scale is not None else dummy,
                 w2_scale if w2_scale is not None else dummy,
                 residual if residual is not None else dummy,
+                norm_scale if norm_scale is not None else dummy,
                 activation, w2 is not None, bias is not None,
                 bias2 is not None, w_scale is not None,
                 w2_scale is not None, residual is not None,
+                norm_scale is not None,
                 act_quant, k_collapse, bk,
                 out_dtype, interpret)
     if (Mp, Np) != (M_rows, N):

@@ -107,7 +107,7 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core import planner, timing
 from repro.kernels import ops
-from repro.kernels.arrayflex_gemm import apply_epilogue
+from repro.kernels.arrayflex_gemm import apply_epilogue, prologue_phase
 
 
 # ---------------------------------------------------------------------------
@@ -133,6 +133,13 @@ class Epilogue:
     # residual-add fused after the activation/gate at the same boundary
     # (the transformer sublayer ``x + f(x)`` — one more Eq.(5') vector op)
     residual: bool = False
+    # rmsnorm-scale multiply fused as a *prologue*: the per-input-channel
+    # norm gain rides the x tile into the array (x * g before the MACs),
+    # so the pre-attention norm is no longer a separate elementwise pass.
+    # Still one Eq.(5') boundary ALU on the period — the scale stage sits
+    # at the tile boundary in front of the array, exactly where the W8A8
+    # quantizer does.
+    norm_scale: bool = False
 
     @property
     def dual(self) -> bool:
@@ -145,9 +152,11 @@ class Epilogue:
     @property
     def ops(self) -> int:
         """Fused vector ops at the collapsed-block boundary (Eq. 5' ``e``):
-        one per activation, gate multiply, bias add, and residual add."""
+        one per activation, gate multiply, bias add, residual add, and
+        prologue norm-scale multiply."""
         return ((self.activation != "none") + self.dual
-                + self.bias + self.bias2 + self.residual)
+                + self.bias + self.bias2 + self.residual
+                + self.norm_scale)
 
     @property
     def contractions(self) -> int:
@@ -172,6 +181,8 @@ class GemmCall:
     w2_scale: Any = None
     # (T, N_out) residual stream added after the epilogue (epilogue.residual)
     residual: Any = None
+    # (K,) per-input-channel rmsnorm gain fused as a prologue x-tile scale
+    norm_scale: Any = None
     interpret: Optional[bool] = None   # Pallas interpret override
 
 
@@ -204,6 +215,8 @@ CALL_FIELD_KEYING = {
     "w2_scale": "backend:quantize",
     "residual": "epilogue:residual — residual present iff the keyed "
                 "Epilogue spec carries the fused residual add",
+    "norm_scale": "epilogue:norm_scale — the prologue rmsnorm gain is "
+                  "present iff the keyed Epilogue spec prices it",
     "interpret": "operand: Pallas interpret mode swaps the executor, never "
                  "the plan (identical math at the same k)",
 }
@@ -443,12 +456,27 @@ class ShardSig:
     tree (``ceil(log2(shards))`` boundary adds) into Eq.(5') — the reduce
     resolves at the collapsed-block boundary alongside the epilogue, so it
     rides the same ``d_epilogue_ps`` critical-path term.
+
+    ``transfer_ops``/``transfer_cycles`` price a pipeline-stage boundary
+    (the 'pod'-axis ``collective_permute`` of a GPipe stage) into the
+    plan, the same way the TP psum already is: ``transfer_ops`` are
+    boundary ALU stages on the period (the egress combine/packetize tree
+    — k-independent, so they deepen the argmin exactly like epilogue
+    ops), while ``transfer_cycles`` serialize the incoming activation's
+    ICI ingress in front of the schedule at the array's clock (Eq. 6'' —
+    paid at the k-collapsed period, so they SHALLOW the argmin).  A
+    throughput-bound prefill stage prices the egress tree; a
+    latency-bound decode stage sits behind the full ingress — which is
+    how ``best_k`` legitimately differs per serving role at the same
+    (M, N, T).
     """
 
     rows: int = 1
     contraction: int = 1
     cols: int = 1
     reduce_ops: int = 0
+    transfer_ops: int = 0
+    transfer_cycles: int = 0
 
 
 SHARD_NONE = ShardSig()
@@ -480,6 +508,14 @@ class ShardCtx:
     collapsed-block boundary, before the epilogue.  Derivation from the
     ``parallel.sharding`` site rules lives in ``sharding.gemm_shard_ctx``
     / ``batched_shard_ctx`` / ``expert_shard_ctx``.
+
+    ``transfer_ops``/``transfer_cycles`` carry a pipeline-stage boundary
+    price into the :class:`ShardSig` (see there).  A **pricing-only**
+    context (``mesh is None``, replicated specs — built by
+    ``sharding.pricing_shard_ctx``) keys the plan with the transfer terms
+    but executes the dispatch unsharded: the GPipe path already runs the
+    whole step under one 'pod' shard_map, so the per-stage GEMM must not
+    nest another.
     """
 
     mesh: Any
@@ -487,6 +523,8 @@ class ShardCtx:
     w_spec: Any
     out_spec: Any
     reduce_axes: Tuple[str, ...] = ()
+    transfer_ops: int = 0
+    transfer_cycles: int = 0
 
     def axis_shards(self, entry) -> int:
         return _spec_shards(self.mesh, entry)
@@ -498,7 +536,9 @@ class ShardCtx:
             rows=self.axis_shards(self.x_spec[0]),
             contraction=self.axis_shards(self.x_spec[1]),
             cols=self.axis_shards(self.w_spec[1]),
-            reduce_ops=math.ceil(math.log2(r)) if r > 1 else 0)
+            reduce_ops=math.ceil(math.log2(r)) if r > 1 else 0,
+            transfer_ops=self.transfer_ops,
+            transfer_cycles=self.transfer_cycles)
 
     def divides(self, T: int, K: int, N_out: int) -> bool:
         s = self.signature()
@@ -548,9 +588,13 @@ def _plan_gemm_cached(M: int, N: int, T: int, backend: str,
     # round/clip) is one more boundary stage, priced with its own Eq.(5')
     # coefficient (d_actq_ps) rather than d_epilogue_ps
     actq_ops = 1 if (info and info.act_quantize) else 0
-    e_ops = epilogue.ops + shard.reduce_ops + dequant_ops
+    # a pipeline-stage boundary prices like the TP psum: its egress tree
+    # is boundary ALU ops on the period, its ingress serializes cycles
+    e_ops = (epilogue.ops + shard.reduce_ops + shard.transfer_ops
+             + dequant_ops)
     k = (ops.plan_collapse(Ms, Ns, Ts, epilogue_ops=e_ops,
-                           precision=precision, actq_ops=actq_ops)
+                           precision=precision, actq_ops=actq_ops,
+                           transfer_cycles=shard.transfer_cycles)
          if collapse else 1)
     return GemmPlan(
         M=M, N=N, T=T, backend=backend, k=k, epilogue=epilogue, shard=shard,
@@ -560,11 +604,13 @@ def _plan_gemm_cached(M: int, N: int, T: int, backend: str,
         t_pred_ps=timing.t_abs_ps(Ms, Ns, Ts, ops.SA_R, ops.SA_C, k,
                                   params=params, epilogue_ops=e_ops,
                                   contractions=epilogue.contractions,
-                                  actq_ops=actq_ops),
+                                  actq_ops=actq_ops,
+                                  extra_cycles=shard.transfer_cycles),
         t_conventional_ps=timing.t_abs_conventional_ps(
             Ms, Ns, Ts, ops.SA_R, ops.SA_C, params=params,
             contractions=epilogue.contractions,
-            epilogue_ops=e_ops, actq_ops=actq_ops))
+            epilogue_ops=e_ops, actq_ops=actq_ops,
+            extra_cycles=shard.transfer_cycles))
 
 
 # backend name -> {"hits": n, "misses": n} of plan_gemm lookups: which
@@ -642,8 +688,18 @@ def clear_plan_cache():
 # ---------------------------------------------------------------------------
 # backend registry
 
+def _prescale(x2, norm_scale):
+    """Unfused-backend form of the prologue rmsnorm-scale: the same
+    ``prologue_phase`` expression the kernel inlines per tile, applied to
+    the whole x — fused and unfused paths agree bit for bit."""
+    if norm_scale is None:
+        return x2
+    return prologue_phase(x2, norm_scale)
+
+
 def _xla_backend(x2, w, plan: GemmPlan, call: GemmCall):
     ep = plan.epilogue
+    x2 = _prescale(x2, call.norm_scale)
     if call.out_dtype is None:
         # bit-for-bit the pre-substrate path: operand-dtype contraction(s),
         # epilogue applied in the same op order the unfused layers used
@@ -664,13 +720,14 @@ def _xla_backend(x2, w, plan: GemmPlan, call: GemmCall):
 def _arrayflex_backend(x2, w, plan: GemmPlan, call: GemmCall):
     return ops.arrayflex_matmul(x2, w, w2=call.w2, bias=call.bias,
                                 bias2=call.bias2, residual=call.residual,
+                                norm_scale=call.norm_scale,
                                 activation=plan.epilogue.activation,
                                 k_collapse=plan.k, out_dtype=call.out_dtype,
                                 interpret=call.interpret)
 
 
 def _ref_backend(x2, w, plan: GemmPlan, call: GemmCall):
-    x32 = x2.astype(jnp.float32)
+    x32 = _prescale(x2, call.norm_scale).astype(jnp.float32)
     y = jnp.dot(x32, w.astype(jnp.float32))
     y2 = (jnp.dot(x32, call.w2.astype(jnp.float32))
           if plan.epilogue.dual else None)
@@ -692,6 +749,7 @@ def _arrayflex_int8_backend(x2, w, plan: GemmPlan, call: GemmCall):
                                 bias2=call.bias2, w_scale=call.w_scale,
                                 w2_scale=call.w2_scale,
                                 residual=call.residual,
+                                norm_scale=call.norm_scale,
                                 activation=plan.epilogue.activation,
                                 k_collapse=plan.k, out_dtype=call.out_dtype,
                                 interpret=call.interpret)
@@ -708,6 +766,7 @@ def _arrayflex_w8a8_backend(x2, w, plan: GemmPlan, call: GemmCall):
                                 w2_scale=call.w2_scale,
                                 act_quant=call.w_scale is not None,
                                 residual=call.residual,
+                                norm_scale=call.norm_scale,
                                 activation=plan.epilogue.activation,
                                 k_collapse=plan.k, out_dtype=call.out_dtype,
                                 interpret=call.interpret)
@@ -880,7 +939,8 @@ def _record(site: str, plan: GemmPlan, launches: int = 1) -> None:
     DISPATCH_COUNTS[site] = DISPATCH_COUNTS.get(site, 0) + launches
 
 
-def _epilogue_spec(epilogue: str, w2, bias, bias2, residual=None) -> Epilogue:
+def _epilogue_spec(epilogue: str, w2, bias, bias2, residual=None,
+                   norm_scale=None) -> Epilogue:
     if epilogue not in EPILOGUE_KINDS:
         raise ValueError(f"unknown epilogue {epilogue!r}; "
                          f"supported: {EPILOGUE_KINDS}")
@@ -891,7 +951,8 @@ def _epilogue_spec(epilogue: str, w2, bias, bias2, residual=None) -> Epilogue:
         raise ValueError("bias2 requires the w2 contraction")
     return Epilogue(kind=epilogue, bias=bias is not None,
                     bias2=bias2 is not None,
-                    residual=residual is not None)
+                    residual=residual is not None,
+                    norm_scale=norm_scale is not None)
 
 
 # ---------------------------------------------------------------------------
@@ -921,12 +982,15 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
                       (call.w2_scale, col_spec), (call.bias, col_spec),
                       (call.bias2, col_spec),
                       # the residual stream is output-shaped: shard like out
-                      (call.residual, ctx.out_spec)):
+                      (call.residual, ctx.out_spec),
+                      # the prologue norm scale is (K,): follows x's
+                      # contraction axis, so each shard scales its x slice
+                      (call.norm_scale, P(ctx.x_spec[1]))):
         flags.append(arr is not None)
         if arr is not None:
             operands.append(arr)
             in_specs.append(spec)
-    has_w2, has_s, has_s2, has_b, has_b2, has_r = flags
+    has_w2, has_s, has_s2, has_b, has_b2, has_r, has_g = flags
     # reduce path: the per-shard kernel runs the contraction(s) only, at
     # the SAME k the (reduce-priced) plan picked
     exec_plan = (dataclasses.replace(plan, epilogue=EPILOGUE_NONE)
@@ -941,12 +1005,16 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
         bs = next(it) if has_b else None
         b2s = next(it) if has_b2 else None
         rs = next(it) if has_r else None
+        gs = next(it) if has_g else None
         if not reduce_axes:
             return fn(xs, ws, plan,
                       GemmCall(out_dtype=call.out_dtype, w2=w2s, bias=bs,
                                bias2=b2s, w_scale=ss, w2_scale=s2s,
-                               residual=rs, interpret=call.interpret))
-        pc = GemmCall(out_dtype=jnp.float32, w_scale=ss,
+                               residual=rs, norm_scale=gs,
+                               interpret=call.interpret))
+        # per-shard prologue scale is exact under the reduce: the (K,)
+        # scale slice multiplies exactly the x columns this shard contracts
+        pc = GemmCall(out_dtype=jnp.float32, w_scale=ss, norm_scale=gs,
                       interpret=call.interpret)
         y = jax.lax.psum(fn(xs, ws, exec_plan, pc), reduce_axes)
         y2 = (jax.lax.psum(fn(xs, w2s, exec_plan,
@@ -968,7 +1036,8 @@ def _sharded_gemm(fn, x2, w, plan: GemmPlan, ctx: ShardCtx, call: GemmCall):
 
 def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
          epilogue: str = "none", w2=None, bias=None, bias2=None,
-         residual=None, interpret=None, shard: Optional[ShardCtx] = None):
+         residual=None, norm_scale=None, interpret=None,
+         shard: Optional[ShardCtx] = None):
     """The substrate entry: x (..., K) @ w (K, N_out) -> (..., N_out).
 
     ``out_dtype=None`` returns the operands' dtype with the backend's
@@ -1003,7 +1072,11 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
     fn = get_backend(backend)
     _maybe_chaos_fault(site)
     info = _BACKEND_INFO[backend]
-    ep = _epilogue_spec(epilogue, w2, bias, bias2, residual)
+    if norm_scale is not None and norm_scale.shape != (x.shape[-1],):
+        raise ValueError(
+            f"site {site!r}: norm_scale shape {norm_scale.shape} must be "
+            f"(K,) = ({x.shape[-1]},) — it scales x's contraction axis")
+    ep = _epilogue_spec(epilogue, w2, bias, bias2, residual, norm_scale)
     w_scale = w2_scale = None
     plan_backend = backend
     if isinstance(w, QuantizedTensor):
@@ -1042,11 +1115,15 @@ def gemm(x, w, *, site: str = "", backend: str = "xla", out_dtype=None,
         shard = None
     call = GemmCall(out_dtype=out_dtype, w2=w2, bias=bias, bias2=bias2,
                     w_scale=w_scale, w2_scale=w2_scale, residual=r2,
-                    interpret=interpret)
+                    norm_scale=norm_scale, interpret=interpret)
     if shard is not None:
         plan = plan_gemm(N_out, K, T, plan_backend, ep, shard.signature())
         _record(site, plan)
-        out = _sharded_gemm(fn, x2, w, plan, shard, call)
+        # pricing-only context (mesh=None): the plan is keyed/priced with
+        # the role's transfer terms but the dispatch itself is unsharded —
+        # pipeline-stage transfer cost is paid by the ppermute, not here
+        out = (fn(x2, w, plan, call) if shard.mesh is None
+               else _sharded_gemm(fn, x2, w, plan, shard, call))
     else:
         plan = plan_gemm(N_out, K, T, plan_backend, ep)
         _record(site, plan)

@@ -27,7 +27,8 @@ from repro.configs import get_config, reduced
 from repro.kernels import substrate
 from repro.models import lm
 from repro.runtime import chaos
-from repro.serving import (AdmissionError, EngineCrash, ServeConfig,
+from repro.serving import (AdmissionError, DisaggServeConfig,
+                           DisaggServingEngine, EngineCrash, ServeConfig,
                            ServingEngine)
 from repro.serving.engine import Request
 
@@ -70,6 +71,26 @@ def phase_report(engine: ServingEngine, reqs) -> str:
     if st["snapshots_taken"]:
         resil += f", {st['snapshots_taken']} snapshots"
     out += resil
+    if isinstance(engine, DisaggServingEngine):
+        sc = engine.sc
+        vt = [engine.ttft_virtual[r.rid] for r in reqs
+              if r.rid in engine.ttft_virtual]
+        vt_ms = 1e3 * sum(vt) / max(len(vt), 1)
+        makespan = max(st["prefill_time_s"], st["decode_time_s"])
+        out += (f"\ndisagg: {sc.prefill_pods} prefill + {sc.decode_pods} "
+                f"decode pod(s), pp={engine.pp}; "
+                f"mean virtual TTFT {vt_ms:.1f} ms "
+                f"(per-role clocks; wall TTFT above pays the colocated "
+                f"interleave)\n"
+                f"disagg: role makespan {makespan:.3f}s "
+                f"(colocated sum {st['prefill_time_s'] + st['decode_time_s']:.3f}s), "
+                f"K/V handoff {st['kv_transfer_bytes'] / 1024:.0f} KiB"
+                + (f" in {st['kv_transfer_pages']} pages"
+                   if engine.paged else "")
+                + (f", {st['transfer_retries']} transfer retries"
+                   if st["transfer_retries"] else "")
+                + (f", {st['pod_losses']} pod losses"
+                   if st["pod_losses"] else ""))
     return out
 
 
@@ -103,6 +124,19 @@ def main(argv=None):
     ap.add_argument("--gemm-backend", default="xla",
                     help="GEMM substrate backend (kernels.substrate): "
                          + " | ".join(substrate.backends()))
+    ap.add_argument("--prefill-pods", type=int, default=0,
+                    help="disaggregated serving: pods in the prefill role "
+                         "submesh (device window [0, prefill_pods)); "
+                         "setting either pod flag switches to "
+                         "DisaggServingEngine (see docs/serving.md)")
+    ap.add_argument("--decode-pods", type=int, default=0,
+                    help="disaggregated serving: pods in the decode role "
+                         "submesh (devices after the prefill window)")
+    ap.add_argument("--pp", type=int, default=1,
+                    help="pipeline stages over the 'pod' axis within each "
+                         "role (GPipe collective_permute); requires "
+                         "--prefill-pods == --decode-pods == PP and dense "
+                         "K/V")
     ap.add_argument("--tp", type=int, default=1,
                     help="tensor-parallel degree (mesh 'model' axis); "
                          "GEMMs plan per-shard and run under shard_map")
@@ -176,7 +210,8 @@ def main(argv=None):
     if (chaos_cfg is not None and not snapshot_every
             and (chaos_cfg.crash > 0.0 or chaos_cfg.crash_at >= 0)):
         snapshot_every = 1      # crash chaos without snapshots cannot recover
-    sc = ServeConfig(max_batch=args.max_batch,
+    disagg = args.prefill_pods > 0 or args.decode_pods > 0
+    sc_kwargs = dict(max_batch=args.max_batch,
                      max_seq=128,
                      prefill_mode=args.prefill_mode,
                      prefill_chunk=args.prefill_chunk,
@@ -189,7 +224,21 @@ def main(argv=None):
                      preempt_policy=args.preempt_policy,
                      snapshot_every_ticks=snapshot_every,
                      chaos=chaos_cfg)
-    engine = ServingEngine(cfg, params, sc)
+    if disagg:
+        sc = DisaggServeConfig(prefill_pods=max(1, args.prefill_pods),
+                               decode_pods=max(1, args.decode_pods),
+                               pp_stages=max(1, args.pp),
+                               **sc_kwargs)
+        engine = DisaggServingEngine(cfg, params, sc)
+        print(f"disagg: {sc.prefill_pods} prefill + {sc.decode_pods} decode "
+              f"pod(s), pp={sc.pp_stages}, prefill_chunk="
+              f"{engine.prefill_chunk}")
+    else:
+        if args.pp > 1:
+            ap.error("--pp requires disaggregated serving "
+                     "(--prefill-pods/--decode-pods)")
+        sc = ServeConfig(**sc_kwargs)
+        engine = ServingEngine(cfg, params, sc)
     if chaos_cfg is not None:
         print(f"chaos: {args.chaos} (snapshot every "
               f"{snapshot_every or 'never'} ticks)")
@@ -220,7 +269,7 @@ def main(argv=None):
                 raise
             print(f"engine crashed ({e}); restoring from snapshot "
                   f"[restart {restarts}/{args.max_restarts}]")
-            engine = ServingEngine.restore(cfg, params, sc, snap)
+            engine = type(engine).restore(cfg, params, sc, snap)
     dt = time.time() - t0
     # a restored engine rebuilt its Request objects from the snapshot:
     # merge by rid so reporting reflects the final state of every stream

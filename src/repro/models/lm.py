@@ -91,31 +91,37 @@ def attn_init(key, cfg: ModelConfig, dtype):
     }
 
 
-def _proj_qkv(p, x, kv_src, cfg, cd):
+def _proj_qkv(p, x, kv_src, cfg, cd, norm_scale=None):
     B, S = x.shape[0], x.shape[1]
     hd, H, KV = cfg.resolved_head_dim, cfg.n_heads, cfg.n_kv_heads
     be, ip = cfg.gemm_backend, cfg.pallas_interpret
     cross = kv_src is not None
+    # ``norm_scale`` (the ln1 scale, self-attention only): the sublayer
+    # hands rmsnorm_normalize'd x here and the scale fuses into each
+    # projection's kernel prologue
     q = layers.linear(p["wq"], x, cd,
                       site="xattn.wq" if cross else "attn.wq",
-                      backend=be, interpret=ip).reshape(B, S, H, hd)
+                      backend=be, interpret=ip,
+                      norm_scale=norm_scale).reshape(B, S, H, hd)
     src = x if kv_src is None else kv_src
     T = src.shape[1]
     # the planner fuses cross-attention K/V into one "xattn.kv" GEMM
     k = layers.linear(p["wk"], src, cd,
                       site="xattn.kv" if cross else "attn.wk",
-                      backend=be, interpret=ip).reshape(B, T, KV, hd)
+                      backend=be, interpret=ip,
+                      norm_scale=norm_scale).reshape(B, T, KV, hd)
     v = layers.linear(p["wv"], src, cd,
                       site="xattn.kv" if cross else "attn.wv",
-                      backend=be, interpret=ip).reshape(B, T, KV, hd)
+                      backend=be, interpret=ip,
+                      norm_scale=norm_scale).reshape(B, T, KV, hd)
     return q, k, v
 
 
 def attn_full(p, x, cfg: ModelConfig, positions, *, causal=True,
-              kv_src=None):
+              kv_src=None, norm_scale=None):
     """Train/prefill attention.  Returns (out, (k, v)) with rope'd keys."""
     cd = _cdtype(cfg)
-    q, k, v = _proj_qkv(p, x, kv_src, cfg, cd)
+    q, k, v = _proj_qkv(p, x, kv_src, cfg, cd, norm_scale)
     if kv_src is None:                     # self-attention -> RoPE
         q = layers.apply_rope(q, positions, cfg.rope_theta)
         k = layers.apply_rope(k, positions, cfg.rope_theta)
@@ -132,14 +138,14 @@ def attn_full(p, x, cfg: ModelConfig, positions, *, causal=True,
     return out, (k, v)
 
 
-def attn_decode(p, x, cfg: ModelConfig, cache, pos):
+def attn_decode(p, x, cfg: ModelConfig, cache, pos, norm_scale=None):
     """Single-token attention.  x: (B,1,d); cache: {'k','v'} ring buffers.
 
     pos may be a scalar (fused fleet decode; cheap dynamic-update-slice) or
     a (B,) vector (ragged continuous batching; masked per-row write).
     """
     cd = _cdtype(cfg)
-    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd, norm_scale)
     B = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     positions = jnp.broadcast_to(pos, (B,))[:, None]
@@ -167,7 +173,8 @@ def attn_decode(p, x, cfg: ModelConfig, cache, pos):
     return out, {"k": k_cache, "v": v_cache}
 
 
-def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths):
+def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths,
+                 norm_scale=None):
     """Chunked-prefill attention.  x: (B,C,d) — a chunk of C prompt tokens
     per row starting at absolute position ``pos`` (B,); ``lengths`` (B,) is
     the number of valid tokens in each row's chunk (0 = row not prefilled
@@ -182,7 +189,7 @@ def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths):
     token-by-token decode path bit for bit.
     """
     cd = _cdtype(cfg)
-    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd, norm_scale)
     B, C = x.shape[0], x.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
@@ -226,7 +233,8 @@ def attn_prefill(p, x, cfg: ModelConfig, cache, pos, lengths):
     return out, {"k": k_cache, "v": v_cache}
 
 
-def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, block_tables):
+def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, block_tables,
+                      norm_scale=None):
     """Single-token attention against the paged K/V pool.
 
     cache: {'kp','vp'} physical pools (n_pages, page, KV, hd);
@@ -241,7 +249,7 @@ def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, block_tables):
     on page 0, which live rows never attend).
     """
     cd = _cdtype(cfg)
-    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd, norm_scale)
     B = x.shape[0]
     pos = jnp.asarray(pos, jnp.int32)
     positions = jnp.broadcast_to(pos, (B,))[:, None]
@@ -277,7 +285,7 @@ def attn_decode_paged(p, x, cfg: ModelConfig, cache, pos, block_tables):
 
 
 def attn_prefill_paged(p, x, cfg: ModelConfig, cache, pos, lengths,
-                       block_tables):
+                       block_tables, norm_scale=None):
     """Chunked-prefill attention against the paged K/V pool.
 
     The logical view is gathered exactly as in :func:`attn_decode_paged`;
@@ -289,7 +297,7 @@ def attn_prefill_paged(p, x, cfg: ModelConfig, cache, pos, lengths,
     so every duplicate scatter carries identical values.
     """
     cd = _cdtype(cfg)
-    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd)
+    q, k_new, v_new = _proj_qkv(p, x, None, cfg, cd, norm_scale)
     B, C = x.shape[0], x.shape[1]
     pos = jnp.asarray(pos, jnp.int32)
     lengths = jnp.asarray(lengths, jnp.int32)
@@ -384,9 +392,11 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
     """Full-sequence sub-layer.  Returns (x, aux, cache_entry)."""
     kind = sublayer_kind(cfg, pos)
     cache = {}
-    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
     if kind["mixer"] == "attn":
-        out, (k, v) = attn_full(p["attn"], h, cfg, positions)
+        # ln1 scale fuses into the q/k/v projection prologues
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
+        out, (k, v) = attn_full(p["attn"], h, cfg, positions,
+                                norm_scale=p["ln1"]["scale"])
         cl = cache_len(cfg, k.shape[1])
         S = k.shape[1]
         k_c, v_c = k[:, S - cl:], v[:, S - cl:]
@@ -396,6 +406,7 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
             v_c = jnp.roll(v_c, shift, axis=1)
         cache = {"k": k_c.astype(jnp.bfloat16), "v": v_c.astype(jnp.bfloat16)}
     else:
+        h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
         out, state, conv = mamba_lib.mamba_forward(
             p["mamba"], h, cfg.ssm or SSMConfig(), _cdtype(cfg),
             backend=cfg.gemm_backend,
@@ -411,11 +422,13 @@ def sublayer_full(p, cfg: ModelConfig, pos: int, x, aux, positions, ctx):
         cache["xv"] = xv.astype(jnp.bfloat16)
         x = x + out
     if kind["mlp"] == "dense":
-        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        # sublayer residual join fused into the mlp.wo store
+        # ln2 scale fuses into the dual-GEMM swiglu prologue; the
+        # residual join fuses into the mlp.wo store
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
         x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
                           backend=cfg.gemm_backend,
-                          interpret=cfg.pallas_interpret, residual=x)
+                          interpret=cfg.pallas_interpret, residual=x,
+                          norm_scale=p["ln2"]["scale"])
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -435,11 +448,14 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
     """One-token sub-layer.  x: (B,1,d).  Returns (x, new_cache)."""
     kind = sublayer_kind(cfg, pos_idx)
     new_cache = dict(cache)
-    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
     if kind["mixer"] == "attn":
-        out, kv = attn_decode(p["attn"], h, cfg, cache, pos)
+        # ln1 scale fuses into the q/k/v projection prologues
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
+        out, kv = attn_decode(p["attn"], h, cfg, cache, pos,
+                              norm_scale=p["ln1"]["scale"])
         new_cache.update(kv)
     else:
+        h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
         out, state, conv = mamba_lib.mamba_decode_step(
             p["mamba"], h[:, 0], cache["state"], cache["conv"],
             cfg.ssm or SSMConfig(), _cdtype(cfg),
@@ -453,11 +469,13 @@ def sublayer_decode(p, cfg: ModelConfig, pos_idx: int, x, cache, pos, ctx):
         h = layers.rmsnorm(p["lnx"], x, cfg.rms_eps)
         x = x + cross_attn_decode(p["xattn"], h, cfg, cache)
     if kind["mlp"] == "dense":
-        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        # sublayer residual join fused into the mlp.wo store
+        # ln2 scale fuses into the dual-GEMM swiglu prologue; the
+        # residual join fuses into the mlp.wo store
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
         x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
                           backend=cfg.gemm_backend,
-                          interpret=cfg.pallas_interpret, residual=x)
+                          interpret=cfg.pallas_interpret, residual=x,
+                          norm_scale=p["ln2"]["scale"])
     elif kind["mlp"] == "moe":
         h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
         m = cfg.moe
@@ -484,16 +502,19 @@ def sublayer_prefill(p, cfg: ModelConfig, pos_idx: int, x, cache, pos,
     assert kind["mixer"] == "attn" and not kind["cross"] \
         and kind["mlp"] != "moe", "use supports_batched_prefill() to gate"
     new_cache = dict(cache)
-    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
-    out, kv = attn_prefill(p["attn"], h, cfg, cache, pos, lengths)
+    h = layers.rmsnorm_normalize(x, cfg.rms_eps)
+    out, kv = attn_prefill(p["attn"], h, cfg, cache, pos, lengths,
+                           norm_scale=p["ln1"]["scale"])
     new_cache.update(kv)
     x = x + out
     if kind["mlp"] == "dense":
-        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        # sublayer residual join fused into the mlp.wo store
+        # ln2 scale fuses into the dual-GEMM swiglu prologue; the
+        # residual join fuses into the mlp.wo store
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
         x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
                           backend=cfg.gemm_backend,
-                          interpret=cfg.pallas_interpret, residual=x)
+                          interpret=cfg.pallas_interpret, residual=x,
+                          norm_scale=p["ln2"]["scale"])
     return x, new_cache
 
 
@@ -561,12 +582,14 @@ def _encode_audio(cfg, params, frames):
 
     def body(carry, p):
         x = carry
-        h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
-        out, _ = attn_full(p["attn"], h, cfg, positions, causal=False)
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
+        out, _ = attn_full(p["attn"], h, cfg, positions, causal=False,
+                           norm_scale=p["ln1"]["scale"])
         x = x + out
-        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
         x = layers.swiglu(p["mlp"], h, cd, backend=cfg.gemm_backend,
-                          interpret=cfg.pallas_interpret, residual=x)
+                          interpret=cfg.pallas_interpret, residual=x,
+                          norm_scale=p["ln2"]["scale"])
         return x, None
 
     x, _ = jax.lax.scan(_remat(cfg, body), x, params["enc_blocks"][0])
@@ -733,6 +756,114 @@ def _prefill_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
     return constrain(logits, "logits")[:, 0], new_cache
 
 
+# ---------------------------------------------------------------------------
+# pipeline-sharded serving steps (GPipe stages over the 'pod' mesh axis)
+
+def supports_pipeline(cfg: ModelConfig) -> bool:
+    """True when the pp step functions reproduce the dense path bit for
+    bit: plain causal-attention + dense-MLP stack (the batched-prefill
+    gate) whose ``n_super`` super-blocks split evenly over the stages."""
+    pp = cfg.pp_stages
+    return (pp > 1 and len(cfg.mesh_shape) == 3
+            and cfg.mesh_shape[0] == pp and n_super(cfg) % pp == 0
+            and supports_batched_prefill(cfg))
+
+
+def _check_pp(cfg: ModelConfig):
+    if not supports_pipeline(cfg):
+        raise ValueError(
+            "pipeline step needs pp_stages > 1, a 3-axis mesh_shape whose "
+            "'pod' axis equals pp_stages, n_super %% pp == 0 and a "
+            "batched-prefill-capable (dense causal) architecture; got "
+            f"pp_stages={cfg.pp_stages} mesh_shape={cfg.mesh_shape} "
+            f"n_super={n_super(cfg)} family={cfg.family}")
+
+
+def _pp_step(cfg: ModelConfig, params, cache, tokens, pos, lengths):
+    """Shared driver for the pipeline-sharded decode/prefill step.
+
+    The whole step runs as ONE ``shard_map`` over cfg's (pod, data, model)
+    mesh: ``params['blocks']`` and the dense KV cache shard their leading
+    ``n_super`` dim over 'pod' (stage s owns the contiguous super-blocks
+    ``[s*NS/pp, (s+1)*NS/pp)``), the embedded chunk enters stage 0, and
+    ``parallel.pipeline.staged_step`` clocks it through the stages via
+    ``collective_permute``.  Each stage scans its local super-blocks with
+    the SAME sublayer functions as the colocated path, so the math is
+    bit-identical; only the ``attn.wq`` boundary GEMM plans under the
+    active role's transfer pricing (sharding.use_pp_pricing), which is how
+    prefill pods and decode pods legitimately hold different ``best_k``.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    from repro.parallel import pipeline as pipe
+
+    Pd = period(cfg)
+    cd = _cdtype(cfg)
+    mesh = sharding.mesh_from_config(cfg)
+    decode = lengths is None
+    other = {k: v for k, v in params.items() if k != "blocks"}
+
+    def body(blocks, cache_l, other, tokens, pos, lengths):
+        x0 = layers.embed(other["embed"], tokens, cd)
+
+        def stage_fn(x, cache_c):
+            def scan_body(x, xs):
+                p_block, cache_block = xs
+                ncs = []
+                for i in range(Pd):
+                    if decode:
+                        x, nc = sublayer_decode(p_block[i], cfg, i, x,
+                                                cache_block[i], pos, None)
+                    else:
+                        x, nc = sublayer_prefill(p_block[i], cfg, i, x,
+                                                 cache_block[i], pos,
+                                                 lengths)
+                    ncs.append(nc)
+                return x, tuple(ncs)
+            return jax.lax.scan(scan_body, x, (blocks, cache_c))
+
+        y, new_cache = pipe.staged_step(stage_fn, x0, cache_l,
+                                        axis_name="pod")
+        x = layers.rmsnorm(other["final_norm"], y, cfg.rms_eps)
+        if not decode:
+            C = tokens.shape[1]
+            last = jnp.clip(jnp.asarray(lengths, jnp.int32) - 1, 0, C - 1)
+            x = jnp.take_along_axis(x, last[:, None, None], axis=1)
+        logits = _logits(cfg, other, x, cd)
+        # only the last stage holds real logits; mask + psum broadcasts
+        stage = jax.lax.axis_index("pod")
+        n_stages = jax.lax.psum(1, "pod")
+        logits = jax.lax.psum(
+            logits * (stage == n_stages - 1).astype(logits.dtype), "pod")
+        return logits[:, 0], new_cache
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(P("pod"), P("pod"), P(), P(), P(), P()),
+                   out_specs=(P(), P("pod")), check_rep=False)
+    return fn(params["blocks"], cache, other, tokens, pos, lengths)
+
+
+def decode_step_pp(cfg: ModelConfig, params, cache, token, pos):
+    """Pipeline-sharded twin of :func:`decode_step` (dense cache only).
+
+    token: (B,) int32; pos: scalar or (B,) int32.  Returns
+    (logits (B,V), new_cache) bit-identical to :func:`decode_step`."""
+    substrate.check_backend(cfg.gemm_backend)
+    _check_pp(cfg)
+    with sharding.gemm_mesh_scope(cfg):
+        return _pp_step(cfg, params, cache, token[:, None], pos, None)
+
+
+def prefill_step_pp(cfg: ModelConfig, params, cache, tokens, pos, lengths):
+    """Pipeline-sharded twin of :func:`prefill_step` (dense cache only)."""
+    substrate.check_backend(cfg.gemm_backend)
+    _check_pp(cfg)
+    with sharding.gemm_mesh_scope(cfg):
+        return _pp_step(cfg, params, cache, jnp.asarray(tokens, jnp.int32),
+                        pos, lengths)
+
+
 def supports_paged_kv(cfg: ModelConfig) -> bool:
     """True when the paged serving path reproduces dense decoding bit for
     bit: same gate as :func:`supports_batched_prefill` (pure causal attn +
@@ -745,15 +876,18 @@ def _sublayer_decode_paged(p, cfg, pos_idx, x, cache, pos, bt):
     kind = sublayer_kind(cfg, pos_idx)
     assert kind["mixer"] == "attn" and not kind["cross"] \
         and kind["mlp"] != "moe", "use supports_paged_kv() to gate"
-    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
-    out, new_cache = attn_decode_paged(p["attn"], h, cfg, cache, pos, bt)
+    h = layers.rmsnorm_normalize(x, cfg.rms_eps)
+    out, new_cache = attn_decode_paged(p["attn"], h, cfg, cache, pos, bt,
+                                       norm_scale=p["ln1"]["scale"])
     x = x + out
     if kind["mlp"] == "dense":
-        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        # sublayer residual join fused into the mlp.wo store
+        # ln2 scale fuses into the dual-GEMM swiglu prologue; the
+        # residual join fuses into the mlp.wo store
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
         x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
                           backend=cfg.gemm_backend,
-                          interpret=cfg.pallas_interpret, residual=x)
+                          interpret=cfg.pallas_interpret, residual=x,
+                          norm_scale=p["ln2"]["scale"])
     return x, new_cache
 
 
@@ -761,16 +895,19 @@ def _sublayer_prefill_paged(p, cfg, pos_idx, x, cache, pos, lengths, bt):
     kind = sublayer_kind(cfg, pos_idx)
     assert kind["mixer"] == "attn" and not kind["cross"] \
         and kind["mlp"] != "moe", "use supports_paged_kv() to gate"
-    h = layers.rmsnorm(p["ln1"], x, cfg.rms_eps)
+    h = layers.rmsnorm_normalize(x, cfg.rms_eps)
     out, new_cache = attn_prefill_paged(p["attn"], h, cfg, cache, pos,
-                                        lengths, bt)
+                                        lengths, bt,
+                                        norm_scale=p["ln1"]["scale"])
     x = x + out
     if kind["mlp"] == "dense":
-        h = layers.rmsnorm(p["ln2"], x, cfg.rms_eps)
-        # sublayer residual join fused into the mlp.wo store
+        # ln2 scale fuses into the dual-GEMM swiglu prologue; the
+        # residual join fuses into the mlp.wo store
+        h = layers.rmsnorm_normalize(x, cfg.rms_eps)
         x = layers.swiglu(p["mlp"], h, _cdtype(cfg),
                           backend=cfg.gemm_backend,
-                          interpret=cfg.pallas_interpret, residual=x)
+                          interpret=cfg.pallas_interpret, residual=x,
+                          norm_scale=p["ln2"]["scale"])
     return x, new_cache
 
 

@@ -37,7 +37,7 @@ def linear_init(key, in_dim, out_dim, *, bias=False, dtype=jnp.float32,
 
 
 def linear(p, x, compute_dtype=None, *, site="", backend="xla",
-           interpret=None, shard=None, residual=None):
+           interpret=None, shard=None, residual=None, norm_scale=None):
     """Dense projection through the GEMM substrate (kernels.substrate).
 
     ``backend`` selects the execution backend; ``site`` labels the GEMM
@@ -46,7 +46,10 @@ def linear(p, x, compute_dtype=None, *, site="", backend="xla",
     A bias rides the substrate's fused epilogue (one kernel launch on the
     arrayflex backend, no HBM round-trip between GEMM and add), and
     ``residual`` (an output-shaped array) fuses the sublayer's
-    ``residual + f(x)`` join at the same boundary.
+    ``residual + f(x)`` join at the same boundary.  ``norm_scale`` (a
+    (K,) vector — the preceding rmsnorm's ``scale`` param, with
+    :func:`rmsnorm_normalize` handling the normalize) fuses the norm's
+    elementwise scale into the kernel's step prologue.
 
     Under an active GEMM mesh (``sharding.use_gemm_mesh`` — the lm entry
     points activate it from ``ModelConfig.mesh_shape``) the dispatch
@@ -63,6 +66,7 @@ def linear(p, x, compute_dtype=None, *, site="", backend="xla",
                                         w.shape[0], w.shape[-1])
     return substrate.gemm(x, w, site=site, backend=backend,
                           bias=p.get("b"), residual=residual,
+                          norm_scale=norm_scale,
                           interpret=interpret, shard=shard)
 
 
@@ -77,6 +81,20 @@ def rmsnorm(p, x, eps=1e-5):
     var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
     y = x * jax.lax.rsqrt(var + eps)
     return (y * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def rmsnorm_normalize(x, eps=1e-5):
+    """The rmsnorm *normalize* alone — no elementwise scale.  Pairs with
+    the substrate's fused ``norm_scale`` prologue: a sublayer computes
+    ``rmsnorm_normalize(x)`` and hands the norm's ``scale`` param to its
+    projection GEMM, which applies the identical fp32 multiply-and-cast
+    (``arrayflex_gemm.prologue_phase``) in-kernel — the scale pass stops
+    being a separate elementwise op on the decode hot path, and every
+    backend computes the same expression bit for bit."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(dt)
 
 
 def layernorm_init(dim, dtype=jnp.float32):
@@ -147,7 +165,7 @@ def swiglu_init(key, d_model, d_ff, dtype=jnp.float32):
 
 
 def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
-           interpret=None, residual=None):
+           interpret=None, residual=None, norm_scale=None):
     """Gated MLP via the substrate's dual-GEMM swiglu epilogue:
     ``silu(x@Wg) * (x@Wu)`` is ONE dispatch (one fused kernel launch on
     the arrayflex backend — both contractions stream the collapsed
@@ -167,6 +185,7 @@ def swiglu(p, x, compute_dtype=jnp.bfloat16, *, backend="xla",
     h = substrate.gemm(x, wg, w2=wu, epilogue="swiglu",
                        bias=p["wi_gate"].get("b"),
                        bias2=p["wi_up"].get("b"),
+                       norm_scale=norm_scale,
                        site="mlp.wi_gate+mlp.wi_up", backend=backend,
                        interpret=interpret, shard=shard)
     return linear(p["wo"], h, compute_dtype, site="mlp.wo",

@@ -12,8 +12,10 @@ dim over 'model', so per-chip parameter bytes scale 1/(data*model).
 """
 from __future__ import annotations
 
+import contextlib
 import contextvars
 import functools
+import math
 
 import jax
 import numpy as np
@@ -321,8 +323,29 @@ def _host_mesh(data: int, model: int):
     return make_host_mesh(data, model, strict=True)
 
 
+@functools.lru_cache(maxsize=None)
+def _pod_mesh(pod: int, data: int, model: int, offset: int):
+    """A ('pod', 'data', 'model') mesh over the device window
+    ``[offset, offset + pod*data*model)`` — a disaggregated role's slice
+    of the host (prefill pods at offset 0, decode pods after them)."""
+    devs = jax.devices()
+    need = offset + pod * data * model
+    if len(devs) < need:
+        raise ValueError(
+            f"pod mesh (pod={pod}, data={data}, model={model}) at "
+            f"pod_offset={offset} needs {need} devices, host has "
+            f"{len(devs)}; set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={need} to fan out CPU devices")
+    window = np.asarray(devs[offset:need]).reshape(pod, data, model)
+    return Mesh(window, ("pod", "data", "model"))
+
+
 def mesh_from_config(cfg):
-    """The (data, model) host mesh ``cfg.mesh_shape`` declares, or None.
+    """The host mesh ``cfg.mesh_shape`` declares, or None.
+
+    A 2-tuple is the (data, model) host mesh; a 3-tuple is a
+    (pod, data, model) role mesh windowed at ``cfg.pod_offset`` — the
+    'pod' axis carries GPipe pipeline stages (parallel.pipeline).
 
     Strict: raises (with the ``XLA_FLAGS`` fan-out hint) when the host has
     fewer devices than the mesh needs — sharded plans for a silently
@@ -336,16 +359,101 @@ def mesh_from_config(cfg):
         raise ValueError(f"unknown gemm_sharding {mode!r}; use auto|none")
     if not shape or mode == "none":
         return None
+    if len(shape) == 3:
+        return _pod_mesh(int(shape[0]), int(shape[1]), int(shape[2]),
+                         int(getattr(cfg, "pod_offset", 0)))
     if len(shape) != 2:
-        raise ValueError(f"mesh_shape must be (data, model), got {shape}")
+        raise ValueError(f"mesh_shape must be (data, model) or "
+                         f"(pod, data, model), got {shape}")
     return _host_mesh(int(shape[0]), int(shape[1]))
 
 
+# ---------------------------------------------------------------------------
+# pipeline-stage transfer pricing (disaggregated prefill/decode roles)
+#
+# When layers pipeline over the 'pod' axis, every stage boundary moves the
+# (rows, d_model) activation over ICI.  That cost enters the plan exactly
+# the way the TP psum already does — through the shard signature — but
+# with a per-role sign: a compute-bound prefill stage hides the send
+# behind its deep schedule (an Eq.(5') boundary op per ppermute hop,
+# which grows the conventional baseline too and pushes best_k DEEPER),
+# while a latency-bound decode stage serializes the ingress in front of
+# the systolic schedule (Eq.(6'') extra cycles paid at the k-collapsed
+# period, pushing best_k SHALLOWER).  The terms attach to ONE site per
+# block — PP_BOUNDARY_SITE, the first GEMM a stage runs per layer — so
+# the transfer is priced once, not once per GEMM.
+
+PP_BOUNDARY_SITE = "attn.wq"
+
+_PP_PRICING: contextvars.ContextVar = contextvars.ContextVar(
+    "pp_pricing", default=None)
+
+
+def pp_transfer_terms(role: str, pp_stages: int, rows: int, K: int):
+    """(transfer_ops, transfer_cycles) for a role's stage boundary.
+
+    prefill: ``ceil(log2(pp))`` boundary ops — the send pipelines like a
+    reduction hop and prices into the per-step period.  decode:
+    ``ceil(rows * K / SA_C)`` serialized cycles — the (rows, K)
+    activation enters the array at C lanes per cycle before the schedule
+    starts.
+    """
+    if pp_stages <= 1 or not role:
+        return (0, 0)
+    if role == "prefill":
+        return (max(1, math.ceil(math.log2(pp_stages))), 0)
+    if role == "decode":
+        from repro.kernels.ops import SA_C
+        return (0, -(-(rows * K) // SA_C))
+    raise ValueError(f"unknown pp_role {role!r}; use prefill|decode")
+
+
+class use_pp_pricing:
+    """Activate per-role pipeline transfer pricing: inside this scope,
+    :func:`gemm_shard_ctx` hands the boundary site a pricing-only
+    ShardCtx carrying the role's transfer terms.  Inert unless both a
+    role and ``pp_stages > 1`` are given."""
+
+    def __init__(self, role: str, pp_stages: int):
+        self.value = ((role, int(pp_stages))
+                      if role and pp_stages and pp_stages > 1 else None)
+        self._token = None
+
+    def __enter__(self):
+        self._token = _PP_PRICING.set(self.value)
+        return self
+
+    def __exit__(self, *exc):
+        _PP_PRICING.reset(self._token)
+        return False
+
+
+def active_pp_pricing():
+    return _PP_PRICING.get()
+
+
+def pricing_shard_ctx(transfer_ops: int = 0, transfer_cycles: int = 0):
+    """A pricing-only ShardCtx (``mesh=None``): the plan is keyed and
+    priced with the transfer terms — ``best_k`` re-picks under them and
+    the plan cache separates the roles — but the dispatch itself executes
+    unsharded (the ppermute in parallel.pipeline pays the actual
+    transfer, not the GEMM)."""
+    from repro.kernels.substrate import ShardCtx
+    return ShardCtx(None, P(None, None), P(None, None), P(None, None),
+                    transfer_ops=transfer_ops,
+                    transfer_cycles=transfer_cycles)
+
+
+@contextlib.contextmanager
 def gemm_mesh_scope(cfg):
-    """:class:`use_gemm_mesh` for a ModelConfig — the lm entry points wrap
-    themselves in this, so every consumer (tests, the serving engine,
-    benches) gets sharded dispatch from config alone."""
-    return use_gemm_mesh(mesh_from_config(cfg))
+    """Mesh + pipeline-pricing scope for a ModelConfig — the lm entry
+    points wrap themselves in this, so every consumer (tests, the serving
+    engine, benches) gets sharded dispatch and per-role plan objectives
+    from config alone."""
+    with use_gemm_mesh(mesh_from_config(cfg)), \
+         use_pp_pricing(getattr(cfg, "pp_role", ""),
+                        getattr(cfg, "pp_stages", 0)):
+        yield
 
 
 # dispatch-site (planner.model_gemms label) -> TP decomposition, mirroring
@@ -366,7 +474,18 @@ def gemm_shard_ctx(site: str, rows: int, K: int, N_out: int, mesh=None):
     :func:`_maybe` rule); all-replicated returns None (unsharded
     dispatch).  A fused label like ``"mlp.wi_gate+mlp.wi_up"`` takes its
     kind from the first component.
+
+    Under an active :class:`use_pp_pricing` scope the boundary site
+    (:data:`PP_BOUNDARY_SITE`) instead gets a pricing-only context with
+    the role's stage-transfer terms — a role submesh runs data=model=1
+    (the pipeline shard_map owns the 'pod' axis), so pp pricing and TP
+    sharding never need to merge.
     """
+    pp = _PP_PRICING.get()
+    if pp is not None and site == PP_BOUNDARY_SITE:
+        t_ops, t_cyc = pp_transfer_terms(pp[0], pp[1], rows, K)
+        return pricing_shard_ctx(transfer_ops=t_ops,
+                                 transfer_cycles=t_cyc)
     mesh = mesh if mesh is not None else _GEMM_MESH.get()
     if mesh is None or not site:
         return None

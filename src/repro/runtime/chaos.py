@@ -20,6 +20,11 @@ ambient :func:`fire`):
                         free (``serving/paged.py``)
 ``engine.tick``         kill the engine mid-stream (``EngineCrash``) at a
                         tick boundary (``serving/engine.py``)
+``transfer.kv``         drop a pod->pod K/V handoff in the disaggregated
+                        engine (``TransferFault``; ``serving/disagg.py``)
+``disagg.pod``          kill a decode pod mid-stream — resident sequences
+                        preempt and re-admit through prefill recompute
+                        (``serving/disagg.py``)
 =====================  ====================================================
 
 Probabilities are drawn per *draw index* ``n`` via
@@ -47,6 +52,8 @@ POINT_FIELDS = {
     "engine.sample": ("nan_logits", "nan_logits_at"),
     "pool.alloc": ("page_exhaust", "page_exhaust_at"),
     "engine.tick": ("crash", "crash_at"),
+    "transfer.kv": ("kv_transfer", "kv_transfer_at"),
+    "disagg.pod": ("pod_lost", "pod_lost_at"),
 }
 
 # parse_spec key -> config field (short names for the --chaos flag)
@@ -56,6 +63,8 @@ _SPEC_KEYS = {
     "nan": "nan_logits", "nan_at": "nan_logits_at",
     "pages": "page_exhaust", "pages_at": "page_exhaust_at",
     "crash": "crash", "crash_at": "crash_at",
+    "kv": "kv_transfer", "kv_at": "kv_transfer_at",
+    "pod": "pod_lost", "pod_at": "pod_lost_at",
 }
 
 
@@ -69,10 +78,14 @@ class ChaosConfig:
     nan_logits: float = 0.0
     page_exhaust: float = 0.0
     crash: float = 0.0
+    kv_transfer: float = 0.0
+    pod_lost: float = 0.0
     gemm_fault_at: int = -1
     nan_logits_at: int = -1
     page_exhaust_at: int = -1
     crash_at: int = -1
+    kv_transfer_at: int = -1
+    pod_lost_at: int = -1
 
     def without_crash(self) -> "ChaosConfig":
         """The same faults minus the mid-stream kill — what a restored

@@ -177,10 +177,18 @@ class Slot:
         self.next_token = 0
         self.t_admit = 0.0
 
+    @property
+    def tokens(self) -> list:
+        """The token sequence this residency must make resident: a
+        preempted request re-admits with prompt + already-generated tokens
+        (recompute-on-re-admission), mirroring the paged path's
+        ``_effective_prompt``."""
+        return self.req.resume_prompt or self.req.prompt
+
     def assign(self, req: Request, now: float):
         self.req = req
         self.t_admit = now
-        self.prefill_len = len(req.prompt) - 1
+        self.prefill_len = len(self.tokens) - 1
         self.prefill_done = 0
         if self.prefill_len == 0:
             self._to_decode()
@@ -191,7 +199,7 @@ class Slot:
     def _to_decode(self):
         self.state = Slot.DECODE
         self.pos = self.prefill_len
-        self.next_token = self.req.prompt[-1]
+        self.next_token = self.tokens[-1]
 
     def finish_chunk(self, n_tokens: int):
         self.prefill_done += n_tokens
@@ -569,8 +577,8 @@ class ServingEngine:
         lens = np.zeros(B, np.int32)
         for s in pre:
             c = min(C, s.prefill_len - s.prefill_done)
-            toks[s.index, :c] = s.req.prompt[s.prefill_done:
-                                             s.prefill_done + c]
+            toks[s.index, :c] = s.tokens[s.prefill_done:
+                                         s.prefill_done + c]
             lens[s.index] = c
         t0 = self.clock()
         d0 = sum(substrate.DISPATCH_COUNTS.values())
@@ -641,7 +649,7 @@ class ServingEngine:
         Other slots' rows write garbage at their own next position, which
         their next real write overwrites before it is ever attended to."""
         req = slot.req
-        for i, t in enumerate(req.prompt[:-1]):
+        for i, t in enumerate(slot.tokens[:-1]):
             toks = np.zeros(self.sc.max_batch, np.int32)
             toks[slot.index] = t
             pos_v = self._pos_vector()

@@ -53,6 +53,13 @@ class KernelFault(ServingError):
     bound to it with :attr:`Outcome.FAILED`."""
 
 
+class TransferFault(KernelFault):
+    """A pod->pod K/V handoff failed in the disaggregated engine
+    (injected via the ``transfer.kv`` chaos point or real).  The engine
+    retries the transfer up to its retry budget; a persistent fault fails
+    the sequence with :attr:`Outcome.FAILED`."""
+
+
 class PagePoolExhausted(ServingError):
     """No page could be obtained even after radix eviction and (under
     ``preempt_policy='youngest'``) preempting every other sequence."""

@@ -127,22 +127,24 @@ def test_epilogue_priced_into_plan():
 
 
 def test_analytic_and_executed_swiglu_plans_agree():
-    """planner.model_gemms marks the wi pair with epilogue_ops=2, so the
-    analytic table and the executed fused substrate plan pick the same k
-    and the two per-entry times sum to the dual-contraction prediction."""
-    g = planner.GEMM("mlp.wi_gate", 512, 256, 64, epilogue_ops=2)
+    """planner.model_gemms marks the wi pair with epilogue_ops=3 (silu +
+    gate + the fused ln2 norm-scale prologue), so the analytic table and
+    the executed fused substrate plan pick the same k and the two
+    per-entry times sum to the dual-contraction prediction."""
+    g = planner.GEMM("mlp.wi_gate", 512, 256, 64, epilogue_ops=3)
     lp = planner.plan_gemm(g, 128, 128)
     sp = substrate.plan_gemm(512, 256, 64, "arrayflex",
-                             substrate.Epilogue(kind="swiglu"))
-    assert sp.epilogue.ops == 2
+                             substrate.Epilogue(kind="swiglu",
+                                                norm_scale=True))
+    assert sp.epilogue.ops == 3
     assert lp.k == sp.k
     assert 2 * lp.t_abs_ps == pytest.approx(sp.t_pred_ps)
     assert lp.clock_ghz == pytest.approx(
-        timing.DEFAULT_TIMING.clock_ghz(lp.k, 2))
+        timing.DEFAULT_TIMING.clock_ghz(lp.k, 3))
     wi = [x for x in planner.model_gemms(reduced(ARCHS["qwen2-0.5b"]),
                                          ShapeConfig("t", 8, 2, "train"))
           if x.name.startswith("mlp.wi")]
-    assert wi and all(x.epilogue_ops == 2 for x in wi)
+    assert wi and all(x.epilogue_ops == 3 for x in wi)
 
 
 # ------------------------------------------------- expert-batched kernel

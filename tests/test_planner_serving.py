@@ -3,7 +3,7 @@ import numpy as np
 import jax
 
 from repro.configs import ARCHS, SHAPES, reduced
-from repro.core import cluster_pipeline as cp
+from repro.parallel import pipeline as cp
 from repro.core import planner
 from repro.models import lm
 from repro.serving import ServeConfig, ServingEngine
